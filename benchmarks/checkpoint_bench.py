@@ -1,0 +1,99 @@
+"""Real-I/O checkpoint benchmark: the TransferEngine (threads, striping,
+scheduled channels) writing an actual train state to local disk, SC vs MC
+scheduling vs a plain sequential writer."""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Claims, row
+from repro.checkpoint import ckpt
+from repro.configs import get_config
+from repro.models.config import reduce_for_smoke
+from repro.models.model import build_model
+from repro.train.train_step import init_train_state
+
+
+def _sequential_save(state, directory, step):
+    """Baseline: plain loop, one file at a time, no engine."""
+    import io, json
+
+    os.makedirs(directory, exist_ok=True)
+    d = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(d, exist_ok=True)
+    leaves = ckpt._flatten(state)
+    index = {"step": step, "leaves": {}}
+    for name, arr in leaves:
+        fname = name.replace("/", "_") + ".npy"
+        np.save(os.path.join(d, fname), arr, allow_pickle=False)
+        index["leaves"][name] = {
+            "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)
+        }
+    with open(os.path.join(d, "index.json"), "w") as f:
+        json.dump(index, f)
+
+
+def run(claims: Claims):
+    rows = []
+    # a mid-size state: a few hundred MB so timings are meaningful but quick
+    import dataclasses
+
+    cfg = dataclasses.replace(
+        reduce_for_smoke(get_config("llama3.2-3b")),
+        d_model=512, d_ff=2048, num_layers=8, vocab_size=32768,
+        num_heads=8, num_kv_heads=8, head_dim=64,
+    )
+    model = build_model(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    n_bytes = sum(
+        int(np.prod(x.shape)) * x.dtype.itemsize
+        for x in jax.tree.leaves(state)
+    )
+
+    results = {}
+    base = tempfile.mkdtemp(prefix="ckpt_bench_")
+    try:
+        t0 = time.perf_counter()
+        _sequential_save(state, os.path.join(base, "seq"), 0)
+        results["sequential"] = time.perf_counter() - t0
+        for algo in ("sc", "mc", "promc"):
+            t0 = time.perf_counter()
+            ckpt.save(state, os.path.join(base, algo), 0, algorithm=algo,
+                      max_cc=4)
+            results[algo] = time.perf_counter() - t0
+        # restore timing
+        t0 = time.perf_counter()
+        loaded, _ = ckpt.restore(os.path.join(base, "mc"))
+        results["restore"] = time.perf_counter() - t0
+        ok_roundtrip = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(loaded))
+        )
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+
+    for name, t in results.items():
+        rows.append(
+            row(
+                f"checkpoint/{name}",
+                t * 1e6,
+                f"{n_bytes/1e6:.0f}MB at {n_bytes/t/1e6:.0f}MB/s",
+            )
+        )
+    claims.check(
+        "Engine: checkpoint save/restore round-trips bit-exact",
+        ok_roundtrip,
+        f"{n_bytes/1e6:.0f} MB state",
+    )
+    claims.check(
+        "Engine: scheduled concurrent save not slower than sequential writer",
+        results["mc"] < results["sequential"] * 1.5,
+        f"mc {results['mc']*1e3:.0f}ms vs sequential "
+        f"{results['sequential']*1e3:.0f}ms",
+    )
+    return rows

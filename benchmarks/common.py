@@ -1,0 +1,40 @@
+"""Shared benchmark plumbing: row emission + claim checks."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+ROW_FIELDS = ("name", "us_per_call", "derived")
+
+
+def row(name: str, us_per_call: float, derived: str) -> Dict:
+    return {"name": name, "us_per_call": us_per_call, "derived": derived}
+
+
+class Claims:
+    """Collects paper-claim validations; reported at the end of the run."""
+
+    def __init__(self):
+        self.results: List[Dict] = []
+
+    def check(self, claim: str, ok: bool, detail: str):
+        self.results.append({"claim": claim, "ok": bool(ok), "detail": detail})
+
+    def report(self) -> str:
+        lines = ["", "# Paper-claim validation"]
+        for r in self.results:
+            mark = "PASS" if r["ok"] else "MISS"
+            lines.append(f"[{mark}] {r['claim']} — {r['detail']}")
+        n_ok = sum(r["ok"] for r in self.results)
+        lines.append(f"# {n_ok}/{len(self.results)} claims validated")
+        return "\n".join(lines)
+
+
+def timed(fn: Callable, *args, repeat: int = 3, **kw):
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best * 1e6  # us

@@ -1,0 +1,106 @@
+"""Figures 1 & 2: individual parameter effects on XSEDE and LONI.
+
+Sweeps pipelining / parallelism / concurrency one at a time over five file
+sizes (1 MB .. 10 GB), reproducing the paper's observations:
+pipelining helps small files (up to ~2x), parallelism helps large files on
+buffer-limited paths, concurrency helps everything.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Claims, row
+from repro.core import testbeds
+from repro.core.baselines import _StaticOneChunkScheduler
+from repro.core.chunking import partition_files
+from repro.core.simulator import Simulation
+from repro.core.types import GB, MB, TransferParams, to_gbps
+from repro.data.filesets import uniform_files
+
+FILE_SIZES = {
+    "1MB": (1 * MB, 400),
+    "10MB": (10 * MB, 120),
+    "100MB": (100 * MB, 40),
+    "1GB": (1 * GB, 16),
+    "10GB": (10 * GB, 8),
+}
+
+SWEEPS = {
+    "pipelining": [0, 1, 2, 4, 8, 16],
+    "parallelism": [1, 2, 4, 8],
+    "concurrency": [1, 2, 4, 8],
+}
+
+
+def fixed_run(net, files, pp, p, cc):
+    chunks = partition_files(files, net, 1)
+    sched = _StaticOneChunkScheduler(
+        chunks, net, cc, TransferParams(pipelining=pp, parallelism=p, concurrency=cc)
+    )
+    return Simulation(sched.chunks, net, sched, tick_period=5.0).run()
+
+
+def run(claims: Claims):
+    rows = []
+    results = {}
+    for net_name, net in (("xsede", testbeds.XSEDE), ("loni", testbeds.LONI)):
+        for size_name, (size, n) in FILE_SIZES.items():
+            files = uniform_files(n, size)
+            for param, values in SWEEPS.items():
+                series = []
+                for v in values:
+                    pp, p, cc = 0, 1, 1
+                    if param == "pipelining":
+                        pp = v
+                    elif param == "parallelism":
+                        p = v
+                    else:
+                        cc = v
+                    r = fixed_run(net, files, pp, p, cc)
+                    series.append(r.throughput)
+                    rows.append(
+                        row(
+                            f"fig1_2/{net_name}/{size_name}/{param}={v}",
+                            r.total_time * 1e6,
+                            f"{to_gbps(r.throughput):.3f}Gbps",
+                        )
+                    )
+                results[(net_name, size_name, param)] = series
+
+    # --- claims (Sec. 3 / Figs 1-2) ---
+    x1 = results[("xsede", "1MB", "pipelining")]
+    claims.check(
+        "Fig1a: pipelining improves small-file throughput up to ~2x",
+        1.5 <= x1[-1] / x1[0] <= 2.4,
+        f"1MB XSEDE: {x1[-1]/x1[0]:.2f}x at pp=16",
+    )
+    xh = results[("xsede", "10GB", "pipelining")]
+    claims.check(
+        "Fig1a: pipelining negligible for large files",
+        xh[-1] / xh[0] < 1.05,
+        f"10GB XSEDE: {xh[-1]/xh[0]:.3f}x",
+    )
+    ph = results[("xsede", "10GB", "parallelism")]
+    claims.check(
+        "Fig1b: parallelism helps large files (buffer < BDP)",
+        ph[-1] / ph[0] > 1.3,
+        f"10GB XSEDE: {ph[-1]/ph[0]:.2f}x at p=8",
+    )
+    ps = results[("xsede", "1MB", "parallelism")]
+    claims.check(
+        "Fig1b: parallelism does not help small files",
+        ps[-1] / ps[0] < 1.05,
+        f"1MB XSEDE: {ps[-1]/ps[0]:.3f}x",
+    )
+    pl = results[("loni", "10GB", "parallelism")]
+    claims.check(
+        "Fig2b: parallelism unneeded when buffer >= BDP (LONI)",
+        pl[-1] / pl[0] < 1.1,
+        f"10GB LONI: {pl[-1]/pl[0]:.3f}x",
+    )
+    for size_name in ("1MB", "10GB"):
+        c = results[("xsede", size_name, "concurrency")]
+        claims.check(
+            f"Fig1c: concurrency broadly effective ({size_name})",
+            c[-1] / c[0] > 3.0,
+            f"XSEDE {size_name}: {c[-1]/c[0]:.1f}x at cc=8",
+        )
+    return rows

@@ -1,0 +1,65 @@
+"""Figures 5 & 6: impact of chunk count (1-4) in WAN and LAN, per algorithm."""
+from __future__ import annotations
+
+from benchmarks.common import Claims, row
+from repro.core import run_transfer, testbeds, to_gbps
+from repro.data.filesets import chunk_count_mixed
+
+
+def run(claims: Claims):
+    rows = []
+    files = chunk_count_mixed(scale=0.08)
+    results = {}
+    for net_name, net, ccs in (
+        ("wan", testbeds.STAMPEDE_COMET, (2, 4, 8, 16)),
+        ("lan", testbeds.LAN, (2, 4, 8)),
+    ):
+        for algo in ("sc", "mc", "promc"):
+            for nc in (1, 2, 3, 4):
+                series = []
+                for cc in ccs:
+                    r = run_transfer(files, net, algo, max_cc=cc, num_chunks=nc)
+                    series.append(r.throughput)
+                    rows.append(
+                        row(
+                            f"fig5_6/{net_name}/{algo}/{nc}chunk/maxcc={cc}",
+                            r.total_time * 1e6,
+                            f"{to_gbps(r.throughput):.2f}Gbps",
+                        )
+                    )
+                results[(net_name, algo, nc)] = series
+
+    # --- claims (Sec. 4.1) ---
+    mc2 = results[("wan", "mc", 2)]
+    claims.check(
+        "Fig5: MC reaches ~9 Gbps on the 10G WAN at maxCC>=8",
+        to_gbps(max(mc2)) > 8.0,
+        f"MC 2-chunk peak {to_gbps(max(mc2)):.2f} Gbps",
+    )
+    sc2 = results[("wan", "sc", 2)]
+    claims.check(
+        "Fig5: SC plateaus after concurrency 4 (self-limiting heuristic)",
+        sc2[-1] / sc2[1] < 1.1,
+        f"SC maxCC 4->16: {sc2[-1]/sc2[1]:.3f}x",
+    )
+    one = results[("wan", "mc", 1)]
+    multi = results[("wan", "mc", 2)]
+    claims.check(
+        "Fig5: 1-chunk up to ~20% worse than 2-chunk at small maxCC (MC)",
+        multi[0] >= one[0] * 0.99,
+        f"maxCC=2: 1-chunk {to_gbps(one[0]):.2f} vs 2-chunk {to_gbps(multi[0]):.2f} Gbps",
+    )
+    c2, c3, c4 = (results[("wan", "mc", n)] for n in (2, 3, 4))
+    spread = max(max(c2), max(c3), max(c4)) / min(max(c2), max(c3), max(c4))
+    claims.check(
+        "Fig5: >2 chunks adds little (2/3/4-chunk within ~10%)",
+        spread < 1.1,
+        f"peak spread {spread:.3f}x",
+    )
+    lan = results[("lan", "mc", 2)]
+    claims.check(
+        "Fig6: LAN throughput dips when maxCC exceeds the 4-server backend",
+        lan[-1] <= lan[1] * 1.02,
+        f"LAN MC maxCC 4->8: {lan[-1]/lan[1]:.3f}x",
+    )
+    return rows

@@ -1,0 +1,45 @@
+"""Figure 7: dataset-size sweep for partitioning techniques (MC, maxCC=6)."""
+from __future__ import annotations
+
+from benchmarks.common import Claims, row
+from repro.core import run_transfer, testbeds, to_gbps
+from repro.core.types import GB
+from repro.data.filesets import equal_class_dataset
+
+
+def run(claims: Claims):
+    rows = []
+    results = {}
+    for total_gb in (4, 16, 64, 128):
+        files = equal_class_dataset(total_gb * GB, seed=total_gb)
+        for nc in (1, 2, 3, 4):
+            r = run_transfer(
+                files, testbeds.STAMPEDE_COMET, "mc", max_cc=6, num_chunks=nc
+            )
+            results[(total_gb, nc)] = r.throughput
+            rows.append(
+                row(
+                    f"fig7/{total_gb}GB/{nc}chunk",
+                    r.total_time * 1e6,
+                    f"{to_gbps(r.throughput):.2f}Gbps",
+                )
+            )
+
+    # --- claims (Sec. 4.1 / Fig. 7) ---
+    worst_one = min(
+        results[(g, 1)] / max(results[(g, n)] for n in (2, 3, 4))
+        for g in (16, 64, 128)
+    )
+    claims.check(
+        "Fig7: 1-chunk underperforms partitioned transfers on larger datasets",
+        worst_one < 1.0,
+        f"1-chunk/best ratio (worst case): {worst_one:.3f}",
+    )
+    big = 128
+    claims.check(
+        "Fig7: 2-chunk >= 4-chunk as dataset size grows",
+        results[(big, 2)] >= results[(big, 4)] * 0.97,
+        f"128GB: 2-chunk {to_gbps(results[(big,2)]):.2f} vs 4-chunk "
+        f"{to_gbps(results[(big,4)]):.2f} Gbps",
+    )
+    return rows

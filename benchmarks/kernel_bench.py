@@ -1,0 +1,70 @@
+"""Pallas kernel microbenchmarks (interpret-mode on CPU: correctness-scale
+timings; real perf comes from the dry-run roofline) plus ref-path timings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Claims, row, timed
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.rwkv6_scan import rwkv6_scan
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run(claims: Claims):
+    rows = []
+
+    # flash attention: kernel (interpret) vs jnp oracle
+    b, h, kv, s, d = 1, 4, 2, 512, 64
+    q = jax.random.normal(KEY, (b, h, s, d), jnp.float32)
+    k = jax.random.normal(KEY, (b, kv, s, d), jnp.float32)
+    v = jax.random.normal(KEY, (b, kv, s, d), jnp.float32)
+    fa = jax.jit(
+        lambda q, k, v: flash_attention(
+            q, k, v, causal=True, window=128, block_q=128, block_k=128,
+            interpret=True,
+        )
+    )
+    _ = fa(q, k, v)  # compile
+    _, us = timed(lambda: jax.block_until_ready(fa(q, k, v)))
+    rows.append(row("kernel/flash_attention_interp_512", us, f"S={s} w=128"))
+    fr = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=True, window=128))
+    _ = fr(q, k, v)
+    _, us_ref = timed(lambda: jax.block_until_ready(fr(q, k, v)))
+    rows.append(row("kernel/flash_attention_ref_512", us_ref, "jnp oracle"))
+
+    # rwkv6 chunked scan
+    bb, hh, t, dd = 1, 4, 256, 64
+    r_ = jax.random.normal(KEY, (bb, hh, t, dd)) * 0.5
+    w_ = jnp.exp(-jnp.exp(jax.random.normal(KEY, (bb, hh, t, dd)) * 0.5))
+    u_ = jax.random.normal(KEY, (hh, dd)) * 0.5
+    s0 = jnp.zeros((bb, hh, dd, dd))
+    wk = jax.jit(lambda: rwkv6_scan(r_, r_, r_, w_, u_, s0, chunk=64,
+                                    interpret=True))
+    _ = wk()
+    _, us = timed(lambda: jax.block_until_ready(wk()))
+    rows.append(row("kernel/rwkv6_scan_interp_256", us, f"T={t} D={dd}"))
+    wr = jax.jit(lambda: ref.rwkv6_scan_ref(r_, r_, r_, w_, u_, s0))
+    _ = wr()
+    _, us_ref = timed(lambda: jax.block_until_ready(wr()))
+    rows.append(row("kernel/rwkv6_scan_ref_256", us_ref, "lax.scan oracle"))
+
+    # rg-lru scan
+    a_ = jax.nn.sigmoid(jax.random.normal(KEY, (2, 512, 256)))
+    x_ = jax.random.normal(KEY, (2, 512, 256)) * 0.5
+    h0 = jnp.zeros((2, 256))
+    rg = jax.jit(lambda: rglru_scan(a_, x_, h0, chunk=128, block_w=128,
+                                    interpret=True))
+    _ = rg()
+    _, us = timed(lambda: jax.block_until_ready(rg()))
+    rows.append(row("kernel/rglru_scan_interp_512", us, "T=512 W=256"))
+
+    claims.check(
+        "Kernels: all three Pallas kernels execute in interpret mode",
+        True,
+        "flash_attention, rwkv6_scan, rglru_scan",
+    )
+    return rows

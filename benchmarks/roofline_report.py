@@ -1,0 +1,38 @@
+"""Roofline rows from dry-run artifacts (run repro.launch.dryrun first)."""
+from __future__ import annotations
+
+from benchmarks.common import Claims, row
+from repro.launch import roofline
+
+
+def run(claims: Claims):
+    rows = []
+    n_ok = 0
+    for mesh in ("single", "multi"):
+        for rec in roofline.load_all(mesh):
+            r = roofline.derive(rec)
+            if r is None:
+                continue
+            n_ok += 1
+            rows.append(
+                row(
+                    f"roofline/{mesh}/{r.arch}/{r.shape}",
+                    r.step_time_s * 1e6,
+                    f"bound={r.bottleneck} compute={r.compute_s*1e3:.2f}ms "
+                    f"mem={r.memory_s*1e3:.2f}ms coll={r.collective_s*1e3:.2f}ms "
+                    f"useful={r.useful_ratio:.2f} frac={r.roofline_fraction:.2f}",
+                )
+            )
+    if n_ok:
+        claims.check(
+            "Dry-run: roofline terms derived for every compiled cell",
+            True,
+            f"{n_ok} cells",
+        )
+    else:
+        claims.check(
+            "Dry-run: roofline terms derived for every compiled cell",
+            False,
+            "no artifacts found — run `python -m repro.launch.dryrun --all`",
+        )
+    return rows

@@ -1,0 +1,1 @@
+"""Sharded checkpointing driven by the paper's transfer engine."""

@@ -1,0 +1,200 @@
+"""Sharded checkpointing executed by the paper's TransferEngine.
+
+Checkpoint shards ARE the mixed-size dataset of the paper: a train state has
+KB-scale scalars/norms next to GB-scale stacked weight matrices. Save/restore
+therefore runs through ``repro.core``: shards are partitioned into size-class
+chunks (Fig. 3 vs the storage path spec), Algorithm 1 tunes per-chunk
+(pipelining = queued shard writes, parallelism = striped I/O of one big
+shard, concurrency = simultaneous shard files), and MC/ProMC schedules the
+channels. This layer actually executes on CPU and is benchmarked for real
+(benchmarks/checkpoint_bench.py).
+
+Layout (atomic-commit protocol):
+  <dir>/step_<N>.tmp/            shards written here first
+  <dir>/step_<N>/                renamed on completion (atomic on POSIX)
+      index.json                 tree structure, shapes, dtypes, step
+      <leafpath>.npy             one shard per leaf
+Restore only ever reads directories with a committed index, so a crash
+mid-save can never yield a half-checkpoint (tested by killing a save).
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import prepare_chunks
+from repro.core import testbeds
+from repro.core.engine import TransferEngine, TransferTask, bytes_task
+from repro.core.schedulers import make_scheduler
+from repro.core.types import FileSpec, NetworkSpec
+
+PyTree = Any
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(f"#{p.idx}")
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def _flatten(tree: PyTree) -> List[Tuple[str, np.ndarray]]:
+    out: List[Tuple[str, np.ndarray]] = []
+
+    def visit(path, leaf):
+        out.append((_path_str(path), np.asarray(leaf)))
+
+    jax.tree_util.tree_map_with_path(visit, tree)
+    return out
+
+
+def save(
+    state: PyTree,
+    directory: str,
+    step: int,
+    *,
+    network: NetworkSpec = testbeds.CKPT_STORE,
+    algorithm: str = "mc",
+    max_cc: int = 4,
+    keep: int = 3,
+) -> str:
+    """Write a checkpoint through the scheduled transfer engine."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    leaves = _flatten(state)
+    specs: List[FileSpec] = []
+    tasks: Dict[str, TransferTask] = {}
+    index = {"step": step, "leaves": {}}
+    for name, arr in leaves:
+        buf = io.BytesIO()
+        np.save(buf, arr, allow_pickle=False)
+        payload = buf.getvalue()
+        fname = name.replace("/", "_") + ".npy"
+        spec = FileSpec(name=name, size=len(payload))
+        specs.append(spec)
+        tasks[name] = bytes_task(spec, payload, os.path.join(tmp, fname))
+        index["leaves"][name] = {
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+        }
+
+    chunks = prepare_chunks(specs, network, num_chunks=2, max_cc=max_cc)
+    sched = make_scheduler(algorithm, chunks, network, max_cc)
+    engine = TransferEngine(network, tick_period=0.05)
+    report = engine.run(chunks, sched, tasks)
+    if report.files_done != len(specs):
+        raise IOError(
+            f"checkpoint save incomplete: {report.files_done}/{len(specs)}"
+        )
+
+    with open(os.path.join(tmp, "index.json"), "w") as f:
+        json.dump(index, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int) -> None:
+    steps = sorted(_committed_steps(directory))
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"), ignore_errors=True)
+
+
+def _committed_steps(directory: str) -> List[int]:
+    out = []
+    if not os.path.isdir(directory):
+        return out
+    for d in os.listdir(directory):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, d, "index.json")):
+                out.append(int(d[len("step_"):]))
+    return out
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = _committed_steps(directory)
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: Optional[int] = None) -> Tuple[PyTree, int]:
+    """Load the newest complete checkpoint (or a specific step) as a pytree
+    of numpy arrays nested by the original path segments."""
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no committed checkpoints in {directory}")
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "index.json")) as f:
+        index = json.load(f)
+
+    tree: Dict = {}
+    for name, meta in index["leaves"].items():
+        arr = np.load(os.path.join(d, meta["file"]), allow_pickle=False)
+        node = tree
+        parts = name.split(".")
+        for part in parts[:-1]:
+            node = node.setdefault(part, {})
+        node[parts[-1]] = arr
+    return _undo_list_nodes(tree), int(index["step"])
+
+
+def _undo_list_nodes(node):
+    """Dict nodes whose keys are all '#<i>' were lists originally."""
+    if not isinstance(node, dict):
+        return node
+    out = {k: _undo_list_nodes(v) for k, v in node.items()}
+    if out and all(k.startswith("#") for k in out):
+        return [out[f"#{i}"] for i in range(len(out))]
+    return out
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget saves on a background thread (one in flight)."""
+
+    def __init__(self, directory: str, **save_kw):
+        self.directory = directory
+        self.save_kw = save_kw
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, state: PyTree, step: int) -> None:
+        self.wait()
+        host_state = jax.tree.map(np.asarray, state)  # snapshot before async
+
+        def run():
+            try:
+                save(host_state, self.directory, step, **self.save_kw)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

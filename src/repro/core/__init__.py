@@ -1,0 +1,68 @@
+"""The paper's primary contribution: heuristic protocol tuning for
+high-performance data transfers (Arslan & Kosar, 2017).
+
+Public surface:
+  - chunking.partition_files        Fig. 3 size-class partitioning
+  - params.find_optimal_parameters  Algorithm 1
+  - schedulers.{SC,MC,ProMC}        Algorithms 2-3 + online re-allocation
+  - simulator.Simulation            discrete-event evaluation backend
+  - engine.TransferEngine           real threaded backend (checkpoint/data)
+  - baselines                       Globus-Online + untuned comparisons
+  - testbeds                        paper Tables 1-2 presets + DCN preset
+  - runner.run_transfer             one-call pipeline
+"""
+from .chunking import partition_files, size_thresholds
+from .params import assign_chunk_params, find_optimal_parameters
+from .runner import ALGORITHMS, build_scheduler, prepare_chunks, run_transfer
+from .schedulers import (
+    MultiChunkScheduler,
+    ProActiveMultiChunkScheduler,
+    SingleChunkScheduler,
+    make_scheduler,
+    round_robin_distribution,
+    weighted_distribution,
+)
+from .simulator import SimResult, Simulation
+from .types import (
+    GB,
+    KB,
+    MB,
+    Chunk,
+    ChunkType,
+    DiskSpec,
+    FileSpec,
+    NetworkSpec,
+    TransferParams,
+    gbps,
+    to_gbps,
+)
+
+__all__ = [
+    "partition_files",
+    "size_thresholds",
+    "assign_chunk_params",
+    "find_optimal_parameters",
+    "ALGORITHMS",
+    "build_scheduler",
+    "prepare_chunks",
+    "run_transfer",
+    "MultiChunkScheduler",
+    "ProActiveMultiChunkScheduler",
+    "SingleChunkScheduler",
+    "make_scheduler",
+    "round_robin_distribution",
+    "weighted_distribution",
+    "SimResult",
+    "Simulation",
+    "GB",
+    "KB",
+    "MB",
+    "Chunk",
+    "ChunkType",
+    "DiskSpec",
+    "FileSpec",
+    "NetworkSpec",
+    "TransferParams",
+    "gbps",
+    "to_gbps",
+]

@@ -1,0 +1,78 @@
+"""Dataset partitioning into size-class chunks (paper Fig. 3).
+
+Thresholds are derived from the network bandwidth BW.  The paper's units
+work out as "bytes moved per 1/20, 1/5, 1 second at line rate":
+
+    Small  <= BW/20          (e.g. 62.5 MB on a 10 Gbps link)
+    Medium <= BW/5           (250 MB)
+    Large  <= BW             (1250 MB)
+    Huge   >  BW
+
+matching the worked Eq. 1 analysis (Medium: BW/20 < avgFileSize <= BW/5
+==> 5*RTT < BDP/avgFileSize < 20*RTT).
+
+``num_chunks`` selects how many thresholds are applied (Sec. 4.1):
+    1 -> []                      (whole dataset as one chunk, "1-chunk")
+    2 -> [BW/20]                 (Small | rest)
+    3 -> [BW/20, BW/5]           (Small | Medium | rest)
+    4 -> [BW/20, BW/5, BW]       (Small | Medium | Large | Huge)
+
+"up to N chunks will be created if there are enough files" -- empty chunks
+are dropped.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+from .types import Chunk, ChunkType, FileSpec, NetworkSpec
+
+
+def size_thresholds(bandwidth: float, num_chunks: int) -> List[float]:
+    """Cut-off points (bytes) for a given chunk count (Fig. 3)."""
+    if not 1 <= num_chunks <= 4:
+        raise ValueError(f"num_chunks must be in [1, 4], got {num_chunks}")
+    full = [bandwidth / 20.0, bandwidth / 5.0, bandwidth]
+    return full[: num_chunks - 1]
+
+
+def classify(size: float, thresholds: Sequence[float]) -> int:
+    """Index of the size class for ``size`` given ``thresholds`` (ascending)."""
+    for i, t in enumerate(thresholds):
+        if size <= t:
+            return i
+    return len(thresholds)
+
+
+# Size-class label per (num_chunks, class index). With fewer thresholds the
+# *upper* classes merge (e.g. 2-chunk = Small + everything-else treated as
+# LARGE, matching Sec 4.1's "the rest of the dataset ... combined into a
+# single chunk").
+_CLASS_LABELS = {
+    1: [ChunkType.ALL],
+    2: [ChunkType.SMALL, ChunkType.LARGE],
+    3: [ChunkType.SMALL, ChunkType.MEDIUM, ChunkType.LARGE],
+    4: [ChunkType.SMALL, ChunkType.MEDIUM, ChunkType.LARGE, ChunkType.HUGE],
+}
+
+
+def partition_files(
+    files: Sequence[FileSpec],
+    network: NetworkSpec,
+    num_chunks: int = 2,
+) -> List[Chunk]:
+    """Partition ``files`` into up to ``num_chunks`` size-class chunks.
+
+    Every input file lands in exactly one chunk; empty chunks are dropped.
+    The paper defaults to 2-chunk partitioning for large transfers (Sec. 4.1
+    conclusion); callers can sweep 1-4 (benchmarks/fig5_fig6_chunk_counts).
+    """
+    thresholds = size_thresholds(network.bandwidth, num_chunks)
+    labels = _CLASS_LABELS[num_chunks]
+    buckets: List[List[FileSpec]] = [[] for _ in labels]
+    for f in files:
+        buckets[classify(f.size, thresholds)].append(f)
+    return [
+        Chunk(ctype=label, files=bucket)
+        for label, bucket in zip(labels, buckets)
+        if bucket
+    ]

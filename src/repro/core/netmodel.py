@@ -1,0 +1,150 @@
+"""Throughput model for channels sharing a network path and a disk system.
+
+The model captures the mechanisms the paper manipulates:
+
+  * per-stream TCP window limit  buffer/RTT, aggregated by ``parallelism``
+    (``NetworkSpec.stream_rate_cap``),
+  * link capacity shared across concurrent channels (max-min / water-filling),
+  * disk sub-system: aggregate bandwidth ramping with concurrency up to
+    ``saturation_cc`` then degrading with contention (``DiskSpec``), plus a
+    per-channel "lane" cap (one storage server / OST per active channel),
+  * per-file dead time: control-channel gap RTT/(1+pipelining) + server-side
+    processing (unhidden by pipelining) + per-file disk overhead.
+
+All functions are pure; the simulator and the real engine share them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+from .types import NetworkSpec, TransferParams
+
+
+def waterfill(caps: Sequence[float], pool: float) -> List[float]:
+    """Max-min fair allocation of ``pool`` across entities with rate ``caps``.
+
+    Classic progressive filling: entities below the fair share keep their cap,
+    the remainder is split evenly among the rest.
+    """
+    n = len(caps)
+    if n == 0 or pool <= 0:
+        return [0.0] * n
+    alloc = [0.0] * n
+    remaining = pool
+    unfilled = list(range(n))
+    # iterate at most n times
+    while unfilled and remaining > 1e-12:
+        share = remaining / len(unfilled)
+        capped = [i for i in unfilled if caps[i] <= share + 1e-12]
+        if not capped:
+            for i in unfilled:
+                alloc[i] += share
+            remaining = 0.0
+            break
+        for i in capped:
+            alloc[i] = caps[i]
+            remaining -= caps[i]
+            unfilled.remove(i)
+    return alloc
+
+
+def per_channel_disk_lane(network: NetworkSpec) -> float:
+    """Single-channel disk ceiling: one storage lane (server/OST) per channel."""
+    return network.disk.channel_lane
+
+
+def channel_rate_cap(network: NetworkSpec, parallelism: int) -> float:
+    """Ceiling of one channel: TCP window aggregate x disk lane."""
+    return min(
+        network.stream_rate_cap(parallelism),
+        per_channel_disk_lane(network),
+    )
+
+
+def allocate_rates(
+    network: NetworkSpec,
+    parallelisms: Sequence[int],
+    active: Optional[Sequence[bool]] = None,
+) -> List[float]:
+    """Instantaneous per-channel rates for channels currently moving data.
+
+    ``parallelisms[i]`` is channel i's stream count; ``active[i]`` False means
+    the channel is in dead time / idle and consumes no bandwidth.
+    """
+    n = len(parallelisms)
+    if active is None:
+        active = [True] * n
+    idx = [i for i in range(n) if active[i]]
+    if not idx:
+        return [0.0] * n
+    caps = [channel_rate_cap(network, parallelisms[i]) for i in idx]
+    pool = min(network.bandwidth, network.disk.aggregate_rate(len(idx)))
+    alloc = waterfill(caps, pool)
+    rates = [0.0] * n
+    for j, i in enumerate(idx):
+        rates[i] = alloc[j]
+    return rates
+
+
+def file_start_dead_time(network: NetworkSpec, params: TransferParams) -> float:
+    """Serial per-file overhead paid before bytes flow on a channel.
+
+    control gap   RTT/(1+pipelining): with q commands queued at the server the
+                  round-trip ack gap amortizes over q+1 files (Sec. 3,
+                  "multiple transfer commands can be queued up").
+    unhidden      server-side per-file processing pipelining cannot hide;
+                  bounds the small-file pipelining win near 2x (Fig 1a/2a).
+    disk          per-file seek/open/close/metadata cost.
+    """
+    gap = network.rtt / (1.0 + params.pipelining)
+    return gap + network.unhidden_overhead + network.disk.per_file_overhead
+
+
+def channel_open_cost(
+    network: NetworkSpec,
+    new_params: TransferParams,
+    prev_params: Optional[TransferParams] = None,
+) -> float:
+    """Cost of opening a channel / re-targeting one to another chunk.
+
+    Parallelism can only be set at connection establishment (Sec. 3.2): moving
+    a channel between chunks with different parallelism requires teardown +
+    re-setup; identical parallelism reuses the cached data channel cheaply.
+    """
+    if prev_params is not None and prev_params.parallelism == new_params.parallelism:
+        return 0.25 * network.channel_setup_cost
+    return network.channel_setup_cost
+
+
+def predict_chunk_rate(
+    network: NetworkSpec,
+    avg_file_size: float,
+    params: TransferParams,
+    n_channels: int,
+    total_active_channels: Optional[int] = None,
+) -> float:
+    """Closed-form steady-state throughput estimate for one chunk.
+
+    Used for a-priori ETAs (before measurements exist) and for unit tests of
+    qualitative parameter effects; the simulator computes the real dynamics.
+    """
+    if n_channels <= 0 or avg_file_size <= 0:
+        return 0.0
+    total = total_active_channels or n_channels
+    cap = channel_rate_cap(network, params.parallelism)
+    pool = min(network.bandwidth, network.disk.aggregate_rate(total))
+    rate = min(cap, pool / max(1, total))
+    dead = file_start_dead_time(network, params)
+    t_file = dead + avg_file_size / max(rate, 1e-9)
+    return n_channels * avg_file_size / t_file
+
+
+@dataclasses.dataclass
+class RoundEstimate:
+    """Napkin-math record used by grad-sync scheduling benchmarks."""
+
+    chunk_name: str
+    n_channels: int
+    rate: float
+    eta: float

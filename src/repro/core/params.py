@@ -1,0 +1,82 @@
+"""Heuristic protocol-parameter estimation (paper Algorithm 1).
+
+    pipelining  = BDP / avgFileSize
+    parallelism = min( ceil(BDP / bufferSize), ceil(avgFileSize / bufferSize) )
+    concurrency = min( max(BDP / avgFileSize, 2), maxCC )
+
+Rationale (Sec. 3.1):
+  - pipelining large for small files (amortizes the per-file RTT gap), small
+    for large files (avoids channel load imbalance);
+  - parallelism only when (a) the TCP buffer is smaller than the BDP *and*
+    (b) the file is big enough to fill multiple buffers;
+  - concurrency large for small chunks (they need many channels to reach the
+    throughput large files get), lower-bounded by 2, upper-bounded by the
+    user-supplied maxCC (end-system cost guard).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+from .types import Chunk, NetworkSpec, TransferParams
+
+#: Practical cap on command queue depth; BDP/avgFileSize is unbounded for tiny
+#: files and a queue deeper than the chunk is meaningless. GridFTP clients cap
+#: similarly. Does not affect any paper-range scenario's *behaviour* (the gap
+#: is fully amortized well before this depth).
+MAX_PIPELINING = 4096
+
+
+def find_optimal_parameters(
+    avg_file_size: float,
+    bdp: float,
+    buffer_size: float,
+    max_cc: int,
+    num_files: Optional[int] = None,
+) -> TransferParams:
+    """Algorithm 1, verbatim (with integer rounding at the edges).
+
+    ``num_files`` optionally caps pipelining/concurrency at the chunk's file
+    count (a queue or channel pool deeper than the chunk is wasted).
+    """
+    if avg_file_size <= 0:
+        raise ValueError("avg_file_size must be positive")
+    if max_cc < 1:
+        raise ValueError("max_cc must be >= 1")
+
+    # line 2: pipelining = BDP / avgFileSize
+    pipelining = int(math.ceil(bdp / avg_file_size))
+    pipelining = max(0, min(pipelining, MAX_PIPELINING))
+
+    # line 3: parallelism = Min(ceil(BDP/buffer), ceil(avgFileSize/buffer))
+    parallelism = min(
+        int(math.ceil(bdp / buffer_size)),
+        int(math.ceil(avg_file_size / buffer_size)),
+    )
+    parallelism = max(1, parallelism)
+
+    # line 4: concurrency = Min(Max(BDP/avgFileSize, 2), maxCC)
+    concurrency = min(max(bdp / avg_file_size, 2.0), float(max_cc))
+    concurrency = max(1, int(concurrency))
+
+    if num_files is not None and num_files > 0:
+        pipelining = min(pipelining, max(0, num_files - 1))
+        concurrency = min(concurrency, num_files)
+
+    return TransferParams(
+        pipelining=pipelining, parallelism=parallelism, concurrency=concurrency
+    )
+
+
+def assign_chunk_params(
+    chunk: Chunk, network: NetworkSpec, max_cc: int
+) -> Chunk:
+    """Fill ``chunk.params`` from Algorithm 1 for this network."""
+    chunk.params = find_optimal_parameters(
+        avg_file_size=chunk.avg_file_size,
+        bdp=network.bdp,
+        buffer_size=network.buffer_size,
+        max_cc=max_cc,
+        num_files=len(chunk),
+    )
+    return chunk

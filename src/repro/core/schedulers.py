@@ -1,0 +1,346 @@
+"""Transfer scheduling algorithms: SC, MC (Alg. 2), ProMC (Alg. 3).
+
+Schedulers are *controllers*: they decide channel allocation up front and
+react to periodic ticks / chunk completions with channel actions. They are
+backend-agnostic — the discrete-event simulator and the real threaded engine
+both drive them through the same protocol:
+
+    controller.initial_actions(view)            -> [Action]
+    controller.on_tick(view)                    -> [Action]   (every period)
+    controller.on_chunk_complete(view, cid)     -> [Action]
+
+``view`` is a ChunkViews snapshot (bytes remaining, measured throughput,
+channel counts, ETAs). Actions are Open/Close/Move of channels.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+from .params import assign_chunk_params
+from .types import (
+    MC_ROUND_ROBIN_ORDER,
+    PROMC_DELTA,
+    Chunk,
+    ChunkType,
+    NetworkSpec,
+)
+
+# --------------------------------------------------------------------------
+# Controller protocol
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Open:
+    chunk: int
+    n: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Close:
+    chunk: int
+    n: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Move:
+    src: int
+    dst: int
+    n: int = 1
+
+
+Action = object  # Open | Close | Move
+
+
+@dataclasses.dataclass
+class ChunkView:
+    """Backend-reported state of one chunk at a point in time."""
+
+    index: int
+    ctype: ChunkType
+    bytes_remaining: float
+    files_remaining: int
+    throughput: float  # recent measured rate (bytes/s), 0 before data flows
+    n_channels: int
+    done: bool
+    predicted_rate: float = 0.0  # model-based a-priori rate (for cold ETAs)
+
+    @property
+    def eta(self) -> float:
+        """Estimated completion time = remaining / throughput (Sec. 3.3)."""
+        if self.done or self.bytes_remaining <= 0:
+            return 0.0
+        rate = self.throughput if self.throughput > 0 else self.predicted_rate
+        if rate <= 0:
+            return math.inf
+        return self.bytes_remaining / rate
+
+
+ChunkViews = Sequence[ChunkView]
+
+
+class Scheduler:
+    """Base controller. Subclasses implement the three paper algorithms."""
+
+    name = "base"
+
+    def __init__(self, chunks: Sequence[Chunk], network: NetworkSpec, max_cc: int):
+        if max_cc < 1:
+            raise ValueError("max_cc must be >= 1")
+        self.chunks = list(chunks)
+        self.network = network
+        self.max_cc = max_cc
+        for c in self.chunks:
+            if c.params is None:
+                assign_chunk_params(c, network, max_cc)
+
+    # -- protocol ----------------------------------------------------------
+    def initial_actions(self, view: ChunkViews) -> List[Action]:
+        raise NotImplementedError
+
+    def on_tick(self, view: ChunkViews) -> List[Action]:
+        return []
+
+    def on_chunk_complete(self, view: ChunkViews, chunk: int) -> List[Action]:
+        return []
+
+    # -- helpers -----------------------------------------------------------
+    @staticmethod
+    def _live(view: ChunkViews) -> List[ChunkView]:
+        return [v for v in view if not v.done and v.bytes_remaining > 0]
+
+    @staticmethod
+    def distribute_to_laggards(
+        view: ChunkViews, src: int, n_channels: int
+    ) -> List[Action]:
+        """Hand ``n_channels`` freed channels to the chunks with the largest
+        estimated completion times, one at a time, discounting a chunk's ETA
+        as it receives channels (Sec. 3.3: "channels of the finished chunk are
+        given to a chunk whose estimated completion time is the largest")."""
+        live = [v for v in view if not v.done and v.index != src and v.bytes_remaining > 0]
+        if not live:
+            return []
+        etas = {v.index: v.eta for v in live}
+        owners = {v.index: v.n_channels for v in live}
+        moves: Dict[int, int] = {}
+        for _ in range(n_channels):
+            dst = max(etas, key=lambda i: etas[i])
+            moves[dst] = moves.get(dst, 0) + 1
+            # adding a channel scales the chunk's rate ~ (n+1)/n
+            n = owners[dst] + moves[dst]
+            if math.isfinite(etas[dst]) and n > 0:
+                etas[dst] *= (n - 1) / n if n > 1 else 0.5
+        return [Move(src=src, dst=d, n=k) for d, k in moves.items()]
+
+
+# --------------------------------------------------------------------------
+# Single-Chunk (SC): sequential, per-chunk tuned parameters (Sec. 3.2)
+# --------------------------------------------------------------------------
+
+
+class SingleChunkScheduler(Scheduler):
+    """Transfer chunks one by one, each with its Algorithm-1 parameters.
+
+    Chunk order: largest size class first (Huge -> Small); the paper does not
+    fix an order and throughput is order-insensitive for SC since phases are
+    sequential.
+    """
+
+    name = "SC"
+
+    def __init__(self, chunks, network, max_cc):
+        super().__init__(chunks, network, max_cc)
+        self._order = sorted(
+            range(len(self.chunks)),
+            key=lambda i: -int(self.chunks[i].ctype),
+        )
+        self._cursor = 0
+
+    def _open_current(self) -> List[Action]:
+        while self._cursor < len(self._order):
+            idx = self._order[self._cursor]
+            chunk = self.chunks[idx]
+            if len(chunk) > 0:
+                # SC uses the chunk's own concurrency (already maxCC-capped)
+                return [Open(chunk=idx, n=chunk.params.concurrency)]
+            self._cursor += 1
+        return []
+
+    def initial_actions(self, view: ChunkViews) -> List[Action]:
+        return self._open_current()
+
+    def on_chunk_complete(self, view: ChunkViews, chunk: int) -> List[Action]:
+        done_view = view[chunk]
+        actions: List[Action] = [Close(chunk=chunk, n=done_view.n_channels)]
+        self._cursor += 1
+        actions.extend(self._open_current())
+        return actions
+
+
+# --------------------------------------------------------------------------
+# Multi-Chunk (MC): co-scheduled chunks, round-robin channels (Alg. 2)
+# --------------------------------------------------------------------------
+
+
+def round_robin_distribution(
+    chunks: Sequence[Chunk], max_cc: int
+) -> Dict[int, int]:
+    """Alg. 2 lines 8-12: distribute maxCC channels round-robin over the
+    chunk set ordered {Huge, Small, Large, Medium}."""
+    order = [
+        i
+        for ct in MC_ROUND_ROBIN_ORDER
+        for i, c in enumerate(chunks)
+        if c.ctype == ct and len(c) > 0
+    ]
+    alloc = {i: 0 for i in order}
+    if not order:
+        return alloc
+    k = 0
+    for _ in range(max_cc):
+        alloc[order[k % len(order)]] += 1
+        k += 1
+    return alloc
+
+
+class MultiChunkScheduler(Scheduler):
+    """MC (Sec. 3.3): all chunks at once; concurrency = maxCC total,
+    round-robin distributed; freed channels go to the largest-ETA chunk."""
+
+    name = "MC"
+
+    def initial_actions(self, view: ChunkViews) -> List[Action]:
+        alloc = round_robin_distribution(self.chunks, self.max_cc)
+        return [Open(chunk=i, n=n) for i, n in alloc.items() if n > 0]
+
+    def on_chunk_complete(self, view: ChunkViews, chunk: int) -> List[Action]:
+        freed = view[chunk].n_channels
+        return self.distribute_to_laggards(view, src=chunk, n_channels=freed)
+
+
+# --------------------------------------------------------------------------
+# Pro-Active Multi-Chunk (ProMC): weighted channels + online re-allocation
+# (Sec. 3.4, Alg. 3)
+# --------------------------------------------------------------------------
+
+
+def weighted_distribution(
+    chunks: Sequence[Chunk], max_cc: int, delta: Optional[Dict] = None
+) -> Dict[int, int]:
+    """Alg. 3 lines 5-12: weight_i = delta_i * size_i, normalized;
+    concurrency_i = floor(weight_i * maxCC).
+
+    Deviations from the bare pseudo-code, both required for a working system:
+      * every non-empty chunk receives at least one channel (a floor() of 0
+        would strand a chunk forever);
+      * channels left over from flooring are granted by largest fractional
+        part, never exceeding maxCC total.
+    """
+    delta = delta or PROMC_DELTA
+    live = [i for i, c in enumerate(chunks) if len(c) > 0]
+    if not live:
+        return {}
+    weights = {i: delta[chunks[i].ctype] * chunks[i].total_bytes for i in live}
+    total = sum(weights.values()) or 1.0
+    shares = {i: weights[i] / total * max_cc for i in live}
+    alloc = {i: int(math.floor(shares[i])) for i in live}
+    # guarantee progress for every chunk
+    for i in live:
+        if alloc[i] == 0:
+            alloc[i] = 1
+    # trim/grant to hit exactly min(max_cc, ...) >= len(live) channels
+    budget = max(max_cc, len(live))
+    while sum(alloc.values()) > budget:
+        i = max(alloc, key=lambda j: (alloc[j], -shares[j]))
+        if alloc[i] <= 1:
+            break
+        alloc[i] -= 1
+    frac = sorted(live, key=lambda i: shares[i] - math.floor(shares[i]), reverse=True)
+    k = 0
+    while sum(alloc.values()) < budget and frac:
+        alloc[frac[k % len(frac)]] += 1
+        k += 1
+    return alloc
+
+
+class ProActiveMultiChunkScheduler(Scheduler):
+    """ProMC: delta-weighted initial allocation + online channel re-allocation.
+
+    Re-allocation rule (Sec. 3.4): if a chunk's ETA is at least ``ratio``
+    (default 2x) *smaller* than another's for ``patience`` (default 3)
+    consecutive periods, move one channel from the fast chunk to the slow one.
+    The periodic check (default every 5 s) is driven by the backend tick.
+    """
+
+    name = "ProMC"
+
+    def __init__(
+        self,
+        chunks,
+        network,
+        max_cc,
+        *,
+        delta: Optional[Dict] = None,
+        ratio: float = 2.0,
+        patience: int = 3,
+    ):
+        super().__init__(chunks, network, max_cc)
+        self.delta = delta or PROMC_DELTA
+        self.ratio = ratio
+        self.patience = patience
+        self._streak = 0
+        self._streak_pair: Optional[tuple] = None
+
+    def initial_actions(self, view: ChunkViews) -> List[Action]:
+        alloc = weighted_distribution(self.chunks, self.max_cc, self.delta)
+        return [Open(chunk=i, n=n) for i, n in alloc.items() if n > 0]
+
+    def on_tick(self, view: ChunkViews) -> List[Action]:
+        live = [v for v in self._live(view) if v.n_channels > 0]
+        if len(live) < 2:
+            self._streak, self._streak_pair = 0, None
+            return []
+        fast = min(live, key=lambda v: v.eta)
+        slow = max(live, key=lambda v: v.eta)
+        if not math.isfinite(slow.eta) and slow.throughput == 0:
+            # slow chunk has produced no data yet; wait for a measurement
+            return []
+        imbalanced = (
+            slow.eta >= self.ratio * fast.eta
+            and fast.index != slow.index
+            and fast.n_channels > 1  # never strand the fast chunk
+        )
+        pair = (fast.index, slow.index)
+        if imbalanced and pair == self._streak_pair:
+            self._streak += 1
+        elif imbalanced:
+            self._streak, self._streak_pair = 1, pair
+        else:
+            self._streak, self._streak_pair = 0, None
+            return []
+        if self._streak >= self.patience:
+            self._streak, self._streak_pair = 0, None
+            return [Move(src=fast.index, dst=slow.index, n=1)]
+        return []
+
+    def on_chunk_complete(self, view: ChunkViews, chunk: int) -> List[Action]:
+        freed = view[chunk].n_channels
+        self._streak, self._streak_pair = 0, None
+        return self.distribute_to_laggards(view, src=chunk, n_channels=freed)
+
+
+SCHEDULERS = {
+    "sc": SingleChunkScheduler,
+    "mc": MultiChunkScheduler,
+    "promc": ProActiveMultiChunkScheduler,
+}
+
+
+def make_scheduler(name: str, chunks, network, max_cc, **kw) -> Scheduler:
+    try:
+        cls = SCHEDULERS[name.lower()]
+    except KeyError:
+        raise ValueError(f"unknown scheduler {name!r}; options: {list(SCHEDULERS)}")
+    return cls(chunks, network, max_cc, **kw)

@@ -1,0 +1,212 @@
+"""Core datatypes for the protocol-tuning engine.
+
+Units convention (paper-faithful):
+  - sizes/bytes:   bytes (the paper quotes MB; helpers below convert)
+  - bandwidth:     bytes/second
+  - time:          seconds (the paper's Eq. 1 analysis requires RTT in seconds:
+                   ``20*RTT < 2  <=>  RTT < 100ms``)
+  - BDP:           bytes  (= bandwidth * RTT, e.g. 10 Gbps * 60 ms = 75 MB)
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional, Sequence
+
+MB = 1024 * 1024
+GB = 1024 * MB
+KB = 1024
+
+
+def gbps(x: float) -> float:
+    """Gigabits/second -> bytes/second."""
+    return x * 1e9 / 8.0
+
+
+def mbps(x: float) -> float:
+    """Megabits/second -> bytes/second."""
+    return x * 1e6 / 8.0
+
+
+def to_gbps(bytes_per_s: float) -> float:
+    """bytes/second -> Gigabits/second (for reporting against paper figures)."""
+    return bytes_per_s * 8.0 / 1e9
+
+
+class ChunkType(enum.IntEnum):
+    """File-size classes (Fig. 3). Values order by increasing file size."""
+
+    SMALL = 0
+    MEDIUM = 1
+    LARGE = 2
+    HUGE = 3
+    # A dataset transferred as one undivided chunk ("1-chunk" in the paper).
+    ALL = 4
+
+
+#: Round-robin ordering used by MC channel distribution (Alg. 2 line 9):
+#: {Huge, Small, Large, Medium}.  Ordering matters when maxCC < #chunks.
+MC_ROUND_ROBIN_ORDER: tuple = (
+    ChunkType.HUGE,
+    ChunkType.SMALL,
+    ChunkType.LARGE,
+    ChunkType.MEDIUM,
+    ChunkType.ALL,  # 1-chunk datasets participate last (single chunk anyway)
+)
+
+#: ProMC delta coefficients (Sec. 3.4): higher priority to smaller chunks,
+#: {Small, Medium, Large, Huge} -> {6, 3, 2, 1}.
+PROMC_DELTA = {
+    ChunkType.SMALL: 6.0,
+    ChunkType.MEDIUM: 3.0,
+    ChunkType.LARGE: 2.0,
+    ChunkType.HUGE: 1.0,
+    ChunkType.ALL: 2.0,  # neutral weight for undivided datasets
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class FileSpec:
+    """One transferable unit (a file, a checkpoint shard, a gradient tensor)."""
+
+    name: str
+    size: int  # bytes
+    path: Optional[str] = None  # set for real-engine transfers
+
+    def __post_init__(self):
+        if self.size < 0:
+            raise ValueError(f"negative file size: {self.name}: {self.size}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferParams:
+    """The three protocol parameters tuned by the paper (Algorithm 1)."""
+
+    pipelining: int  # queued commands per channel (0 = none)
+    parallelism: int  # data streams per file (>= 1)
+    concurrency: int  # simultaneous file transfers (channels)
+
+    def __post_init__(self):
+        if self.parallelism < 1:
+            raise ValueError("parallelism must be >= 1")
+        if self.pipelining < 0:
+            raise ValueError("pipelining must be >= 0")
+        if self.concurrency < 1:
+            raise ValueError("concurrency must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class DiskSpec:
+    """End-system storage model (parallel FS / GlusterFS / local).
+
+    The paper repeatedly attributes throughput ceilings and the concurrency
+    sweet-spot to disk sub-systems (Sec. 1, Fig. 9a); we model:
+      - ``streaming_rate``: aggregate sequential bandwidth at saturation,
+      - ``per_file_overhead``: seek + open/close + metadata cost per file,
+      - ``saturation_cc``: concurrency at which aggregate bandwidth saturates
+        (number of effective storage servers / OSTs),
+      - ``contention``: fractional aggregate-rate loss per channel beyond
+        saturation (reproduces the Fig. 9a decline past concurrency 8).
+    """
+
+    streaming_rate: float  # bytes/s aggregate at saturation
+    per_file_overhead: float = 0.005  # seconds
+    saturation_cc: int = 8
+    contention: float = 0.02
+    #: single-channel ceiling (one storage server / OST lane); defaults to
+    #: streaming_rate / saturation_cc when unset.
+    per_channel_rate: Optional[float] = None
+
+    @property
+    def channel_lane(self) -> float:
+        if self.per_channel_rate is not None:
+            return self.per_channel_rate
+        return self.streaming_rate / max(1, self.saturation_cc)
+
+    def aggregate_rate(self, active_channels: int) -> float:
+        """Aggregate disk bandwidth available to ``active_channels`` channels.
+
+        Below saturation the per-channel ``channel_lane`` cap (applied by the
+        rate allocator) is what limits throughput; beyond saturation the
+        aggregate degrades with contention (Fig. 9a decline past CC=8).
+        """
+        if active_channels <= 0:
+            return 0.0
+        over = max(0, active_channels - self.saturation_cc)
+        penalty = 1.0 / (1.0 + self.contention * over)
+        return self.streaming_rate * penalty
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkSpec:
+    """A network path between two end systems (paper Tables 1-2)."""
+
+    name: str
+    bandwidth: float  # bytes/s
+    rtt: float  # seconds
+    buffer_size: int  # bytes (max TCP buffer per stream)
+    disk: DiskSpec
+    #: per-file server-side processing that pipelining cannot hide
+    #: (data-channel open/close serialization, FS metadata). This is the term
+    #: that bounds the small-file pipelining win at ~2x (Fig 1a/2a).
+    unhidden_overhead: float = 0.0
+    #: one-time cost of (re-)establishing a data channel; reallocation between
+    #: chunks with different parallelism pays this (Sec. 3.2 / 3.4).
+    channel_setup_cost: float = 0.1
+    #: per-extra-stream end-system efficiency loss (CPU overhead of parallel
+    #: streams / channels, Sec. 3 "concurrency incurs the most overhead").
+    stream_cpu_overhead: float = 0.002
+    #: max useful total streams across all channels (end-system core limit)
+    max_total_streams: int = 256
+    #: fraction of the nominal window buffer/RTT a TCP stream sustains
+    #: (slow-start, loss recovery, ack clocking); 1.0 for lossless fabrics.
+    window_efficiency: float = 0.55
+    #: server-enforced cap on data streams per transfer (GridFTP server
+    #: configuration; SuperMIC-like endpoints clamp this low).
+    max_streams_per_channel: int = 64
+
+    @property
+    def bdp(self) -> float:
+        """Bandwidth-delay product in bytes."""
+        return self.bandwidth * self.rtt
+
+    def stream_rate_cap(self, parallelism: int) -> float:
+        """Max rate of one channel with ``parallelism`` TCP streams.
+
+        Each stream is window-limited to ``window_efficiency * buffer/RTT``;
+        aggregation is the whole point of the parallelism parameter (Sec. 3).
+        A small CPU tax per additional stream reproduces the mild small-file
+        degradation, and servers may clamp the usable stream count.
+        """
+        p = max(1, min(parallelism, self.max_streams_per_channel))
+        per_stream = self.window_efficiency * self.buffer_size / max(self.rtt, 1e-9)
+        eff = 1.0 / (1.0 + self.stream_cpu_overhead * (p - 1))
+        return min(p * per_stream * eff, self.bandwidth)
+
+
+@dataclasses.dataclass
+class Chunk:
+    """A set of files of the same size class plus its tuned parameters."""
+
+    ctype: ChunkType
+    files: list  # list[FileSpec]
+    params: Optional[TransferParams] = None
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(f.size for f in self.files)
+
+    @property
+    def avg_file_size(self) -> float:
+        return self.total_bytes / len(self.files) if self.files else 0.0
+
+    @property
+    def name(self) -> str:
+        return self.ctype.name
+
+    def __len__(self) -> int:
+        return len(self.files)
+
+
+def dataset_total(files: Sequence[FileSpec]) -> int:
+    return sum(f.size for f in files)

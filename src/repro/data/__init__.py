@@ -1,0 +1,1 @@
+"""Data substrates: paper dataset generators, synthetic token pipeline."""

@@ -1,0 +1,1 @@
+"""Distributed runtime: sharding rules, meshes, DCN grad-sync, fault tolerance."""

@@ -1,0 +1,53 @@
+"""Gradient compression for DCN-crossing collectives (beyond-paper).
+
+Two codecs, applied per chunk class by the sync plan:
+  * bf16 — cast before psum, cast back after (2x DCN byte reduction, no
+    state; safe for bandwidth-bound buckets).
+  * int8 + error feedback — per-tensor max-abs scaling with the residual
+    carried into the next step (EF keeps SGD/Adam convergence; see Karimireddy
+    et al. 2019). 4x byte reduction.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def int8_encode(
+    g: Array, ef: Optional[Array] = None
+) -> Tuple[Array, Array, Array]:
+    """-> (q int8, scale f32 scalar, new error-feedback residual)."""
+    gf = g.astype(jnp.float32)
+    if ef is not None:
+        gf = gf + ef.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    residual = gf - deq
+    return q, scale, residual
+
+
+def int8_decode(q_sum: Array, scale: Array) -> Array:
+    """Decode a psum of int8 payloads (accumulated in int32)."""
+    return q_sum.astype(jnp.float32) * scale
+
+
+def bf16_roundtrip(g: Array) -> Array:
+    return g.astype(jnp.bfloat16).astype(g.dtype)
+
+
+def compression_error(g: Array, codec: str) -> Array:
+    """Relative L2 error of one-shot compression (diagnostics)."""
+    gf = g.astype(jnp.float32)
+    if codec == "bf16":
+        d = bf16_roundtrip(gf)
+    elif codec == "int8":
+        q, s, _ = int8_encode(gf)
+        d = int8_decode(q.astype(jnp.int32), s)
+    else:
+        return jnp.float32(0.0)
+    return jnp.linalg.norm(gf - d) / jnp.maximum(jnp.linalg.norm(gf), 1e-30)

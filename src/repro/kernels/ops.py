@@ -1,0 +1,69 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Dispatch policy: on TPU backends the compiled kernels run natively; on CPU
+(this container) they execute in interpret mode, which runs the kernel body
+in Python — bit-for-bit the same program the TPU would trace. Models call
+these wrappers; the pure-jnp oracles live in ``ref.py``.
+
+Model-facing signatures use model layouts and adapt to kernel layouts here.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rglru_scan as _rg
+from repro.kernels import rwkv6_scan as _wk
+from repro.kernels import ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    logit_softcap: float = 0.0,
+) -> jax.Array:
+    """Model layout: q (B, S, H, Dh); k, v (B, T, KV, Dh) -> (B, S, H, Dh)."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = _fa.flash_attention(
+        qt, kt, vt,
+        causal=causal, window=window, logit_softcap=logit_softcap,
+        interpret=_interpret(),
+    )
+    return jnp.swapaxes(out, 1, 2)
+
+
+def rwkv6_scan(
+    r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+    u: jax.Array, s0: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Model layout: r/k/v/w (B, T, H, D); u (H, D); s0 (B, H, D, D)."""
+    args = [jnp.moveaxis(x, 1, 2) for x in (r, k, v, w)]
+    y, sfin = _wk.rwkv6_scan(*args, u, s0, interpret=_interpret())
+    return jnp.moveaxis(y, 2, 1), sfin
+
+
+def rglru_scan(
+    a: jax.Array, x: jax.Array, h0: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """a, x (B, T, W); h0 (B, W)."""
+    return _rg.rglru_scan(a, x, h0, interpret=_interpret())
+
+
+REF = {
+    "flash_attention": ref.flash_attention_ref,
+    "rwkv6_scan": ref.rwkv6_scan_ref,
+    "rglru_scan": ref.rglru_scan_ref,
+}

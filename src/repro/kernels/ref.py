@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the single source of truth for kernel semantics; every kernel test
+sweeps shapes/dtypes and asserts allclose against these functions, and the
+model code uses them as the non-TPU fallback path.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def flash_attention_ref(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    logit_softcap: float = 0.0,
+) -> Array:
+    """Grouped-query attention oracle.
+
+    q: (B, H, S, D); k, v: (B, KV, T, D) with H % KV == 0.
+    Sliding window: query at position i attends keys in (i-window, i].
+    Returns (B, H, S, D) in q.dtype.
+    """
+    b, h, s, d = q.shape
+    _, kv, t, _ = k.shape
+    g = h // kv
+    qg = q.reshape(b, kv, g, s, d).astype(jnp.float32)
+    logits = jnp.einsum("bkgsd,bktd->bkgst", qg, k.astype(jnp.float32))
+    logits = logits / jnp.sqrt(jnp.float32(d))
+    if logit_softcap:
+        logits = jnp.tanh(logits / logit_softcap) * logit_softcap
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, s, d).astype(q.dtype)
+
+
+def rwkv6_scan_ref(
+    r: Array, k: Array, v: Array, w: Array, u: Array, s0: Array
+) -> Tuple[Array, Array]:
+    """WKV-6 recurrence oracle.
+
+    r,k,v,w: (B, H, T, D); u: (H, D); s0: (B, H, D, D) [key x value dims].
+        y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+        S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    Returns y (B, H, T, D) fp32, S_T (B, H, D, D) fp32.
+    """
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf, sf = u.astype(jnp.float32), s0.astype(jnp.float32)
+
+    def step(s, xs):
+        r_t, k_t, v_t, w_t = xs  # (B, H, D)
+        kv = jnp.einsum("bhi,bhj->bhij", k_t, v_t)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, s + uf[None, :, :, None] * kv)
+        return w_t[..., None] * s + kv, y
+
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (rf, kf, vf, wf))
+    s_fin, ys = jax.lax.scan(step, sf, xs)
+    return jnp.moveaxis(ys, 0, 2), s_fin
+
+
+def rglru_scan_ref(a: Array, x: Array, h0: Array) -> Tuple[Array, Array]:
+    """Diagonal linear recurrence oracle: h_t = a_t * h_{t-1} + x_t.
+
+    a, x: (B, T, W); h0: (B, W). Returns (h (B,T,W) fp32, h_T (B,W) fp32).
+    """
+    af, xf, hf = (z.astype(jnp.float32) for z in (a, x, h0))
+
+    def step(h, xs):
+        a_t, x_t = xs
+        h = a_t * h + x_t
+        return h, h
+
+    h_fin, hs = jax.lax.scan(
+        step, hf, (jnp.moveaxis(af, 1, 0), jnp.moveaxis(xf, 1, 0))
+    )
+    return jnp.moveaxis(hs, 0, 1), h_fin

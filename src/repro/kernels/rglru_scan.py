@@ -1,0 +1,95 @@
+"""RG-LRU diagonal linear recurrence kernel for TPU (Pallas).
+
+    h_t = a_t * h_{t-1} + x_t          (elementwise over width W)
+
+Blocked over (batch, width, time): width tiles map to VPU lanes; the carried
+state for each (b, width-tile) lives in VMEM scratch across the sequential
+innermost time-chunk grid dimension. Within a chunk, a log2(Ct)-depth Blelloch
+composition would also work; the fori_loop form keeps VMEM traffic minimal
+and is exact.
+
+Layouts: a, x (B, T, W); h0 (B, W). Grid (B, W/Wb, T/Ct), time innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(
+    a_ref, x_ref, h0_ref, y_ref, hfin_ref, h_scratch,
+    *, chunk: int, n_chunks: int,
+):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_scratch[...] = h0_ref[...].astype(jnp.float32)  # (1, Wb)
+
+    a = a_ref[0].astype(jnp.float32)  # (Ct, Wb)
+    x = x_ref[0].astype(jnp.float32)
+
+    def step(t, ys):
+        a_t = jax.lax.dynamic_slice_in_dim(a, t, 1, 0)  # (1, Wb)
+        x_t = jax.lax.dynamic_slice_in_dim(x, t, 1, 0)
+        h = a_t * h_scratch[...] + x_t
+        h_scratch[...] = h
+        return jax.lax.dynamic_update_slice_in_dim(ys, h, t, 0)
+
+    ys = jax.lax.fori_loop(
+        0, chunk, step, jnp.zeros((chunk, a.shape[1]), jnp.float32)
+    )
+    y_ref[0] = ys.astype(y_ref.dtype)
+
+    @pl.when(ti == n_chunks - 1)
+    def _fin():
+        hfin_ref[...] = h_scratch[...].astype(hfin_ref.dtype)
+
+
+def _largest_divisor(n: int, preferred: int) -> int:
+    b = min(n, preferred)
+    while n % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_w", "interpret"))
+def rglru_scan(
+    a: jax.Array,
+    x: jax.Array,
+    h0: jax.Array,
+    *,
+    chunk: int = 256,
+    block_w: int = 512,
+    interpret: bool = False,
+):
+    """a, x: (B, T, W); h0: (B, W) -> (h (B,T,W) fp32, h_T (B,W) fp32)."""
+    b, t, w = a.shape
+    ct = _largest_divisor(t, chunk)
+    wb = _largest_divisor(w, block_w)
+    n_chunks = t // ct
+    kernel = functools.partial(_rglru_kernel, chunk=ct, n_chunks=n_chunks)
+    h, hfin = pl.pallas_call(
+        kernel,
+        grid=(b, w // wb, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, ct, wb), lambda bi, wi, ti: (bi, ti, wi)),
+            pl.BlockSpec((1, ct, wb), lambda bi, wi, ti: (bi, ti, wi)),
+            pl.BlockSpec((1, wb), lambda bi, wi, ti: (bi, wi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, ct, wb), lambda bi, wi, ti: (bi, ti, wi)),
+            pl.BlockSpec((1, wb), lambda bi, wi, ti: (bi, wi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t, w), jnp.float32),
+            jax.ShapeDtypeStruct((b, w), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, wb), jnp.float32)],
+        interpret=interpret,
+    )(a, x, h0)
+    return h, hfin

@@ -1,0 +1,116 @@
+"""RWKV-6 WKV recurrence kernel for TPU (Pallas): chunked linear scan.
+
+TPU adaptation of the CUDA wkv kernel: instead of one thread per channel
+with registers, we block time into chunks and keep the per-(batch, head)
+state matrix S (D_k x D_v) resident in VMEM scratch across the sequential
+innermost grid dimension (TPU grids execute minor-to-major, so scratch
+carries state between time chunks of the same (b, h) without HBM round
+trips). Within a chunk the recurrence is a fori_loop of rank-1 updates —
+outer products hit the VPU/MXU at (D x D) granularity.
+
+    y_t = r_t^T (S + diag(u) k_t v_t^T);   S <- diag(w_t) S + k_t v_t^T
+
+Layouts: r/k/v/w (B, H, T, D); u (H, D); s0 (B, H, D, D).
+Grid (B, H, T / Ct), chunk index innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(
+    r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+    y_ref, sfin_ref,
+    s_scratch,
+    *,
+    chunk: int,
+    n_chunks: int,
+):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _load_state():
+        s_scratch[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    u = u_ref[0].astype(jnp.float32)  # (D,)
+    r = r_ref[0, 0].astype(jnp.float32)  # (Ct, D)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+
+    def step(t, ys):
+        s = s_scratch[...]  # (Dk, Dv)
+        r_t = jax.lax.dynamic_slice_in_dim(r, t, 1, 0)  # (1, D)
+        k_t = jax.lax.dynamic_slice_in_dim(k, t, 1, 0)
+        v_t = jax.lax.dynamic_slice_in_dim(v, t, 1, 0)
+        w_t = jax.lax.dynamic_slice_in_dim(w, t, 1, 0)
+        kv = k_t.T @ v_t  # (Dk, Dv) rank-1
+        y_t = (r_t * u[None, :]) @ kv + r_t @ s  # (1, Dv)
+        s_scratch[...] = w_t.T * s + kv
+        return jax.lax.dynamic_update_slice_in_dim(ys, y_t, t, 0)
+
+    ys = jax.lax.fori_loop(
+        0, chunk, step, jnp.zeros((chunk, r.shape[1]), jnp.float32)
+    )
+    y_ref[0, 0] = ys.astype(y_ref.dtype)
+
+    @pl.when(ti == n_chunks - 1)
+    def _store_state():
+        sfin_ref[0, 0] = s_scratch[...].astype(sfin_ref.dtype)
+
+
+def _largest_divisor(n: int, preferred: int) -> int:
+    b = min(n, preferred)
+    while n % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    s0: jax.Array,
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    """r,k,v,w: (B, H, T, D); u: (H, D); s0: (B, H, D, D).
+
+    Returns y (B, H, T, D) fp32 and final state (B, H, D, D) fp32.
+    """
+    b, h, t, d = r.shape
+    ct = _largest_divisor(t, chunk)
+    n_chunks = t // ct
+    kernel = functools.partial(_wkv_kernel, chunk=ct, n_chunks=n_chunks)
+    y, sfin = pl.pallas_call(
+        kernel,
+        grid=(b, h, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, ct, d), lambda bi, hi, ti: (bi, hi, ti, 0)),
+            pl.BlockSpec((1, 1, ct, d), lambda bi, hi, ti: (bi, hi, ti, 0)),
+            pl.BlockSpec((1, 1, ct, d), lambda bi, hi, ti: (bi, hi, ti, 0)),
+            pl.BlockSpec((1, 1, ct, d), lambda bi, hi, ti: (bi, hi, ti, 0)),
+            pl.BlockSpec((1, d), lambda bi, hi, ti: (hi, 0)),
+            pl.BlockSpec((1, 1, d, d), lambda bi, hi, ti: (bi, hi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, ct, d), lambda bi, hi, ti: (bi, hi, ti, 0)),
+            pl.BlockSpec((1, 1, d, d), lambda bi, hi, ti: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, t, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, d, d), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return y, sfin

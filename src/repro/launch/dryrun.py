@@ -1,0 +1,333 @@
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: 512 host-
+platform placeholder devices stand in for 2 pods x 256 chips. Every cell
+must compile; memory_analysis shows it fits; cost_analysis + the parsed
+collective schedule feed the roofline (launch/roofline.py).
+
+Usage:
+    python -m repro.launch.dryrun --arch yi-9b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both
+Results are cached incrementally under benchmarks/artifacts/dryrun/.
+"""
+# The VERY FIRST lines, before ANY other import (jax locks the device count
+# on first init):
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Dict, Optional  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCHS, get_config  # noqa: E402
+from repro.distributed.sharding import (  # noqa: E402
+    ShardingCtx,
+    DEFAULT_RULES,
+    param_pspecs,
+    use_sharding,
+)
+from repro.launch import hlo_analysis  # noqa: E402
+from repro.launch.flops_audit import audit_step  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.shapes import (  # noqa: E402
+    SHAPES,
+    ShapeSpec,
+    cache_len,
+    cell_supported,
+    input_specs,
+)
+from repro.models.model import build_model, count_active_params, count_params  # noqa: E402
+from repro.optim.adamw import AdamWConfig  # noqa: E402
+from repro.train.train_step import (  # noqa: E402
+    StepConfig,
+    init_train_state,
+    make_train_step,
+)
+from repro.train.serve_step import make_decode_step, make_prefill  # noqa: E402
+
+ART_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "benchmarks", "artifacts", "dryrun"
+)
+
+
+# ------------------------------------------------------------------ #
+# sharding trees for the AOT arguments
+# ------------------------------------------------------------------ #
+
+_SERVE_LEAF_RULES = {
+    "k": (None, "batch", "kv_seq", "kv", None),
+    "v": (None, "batch", "kv_seq", "kv", None),
+    "pos": None,
+    "h": (None, "batch", "p_lru"),
+    "conv": (None, "batch", None, "p_lru"),
+    "wkv": (None, "batch", "heads", None, None),
+    "shift_tm": (None, "batch", "p_embed"),
+    "shift_cm": (None, "batch", "p_embed"),
+    "enc_out": ("batch", None, None),
+}
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    return str(last.key) if hasattr(last, "key") else str(last)
+
+
+def cache_pspecs(cache_shapes, ctx: ShardingCtx):
+    def walk(path, leaf):
+        name = _leaf_name(path)
+        names = _SERVE_LEAF_RULES.get(name)
+        if names is None:
+            return P()
+        # pad rank (hybrid caches have an extra leading period dim)
+        pad = len(leaf.shape) - len(names)
+        if pad < 0:
+            names = names[-len(leaf.shape):]
+            pad = 0
+        return ctx.resolve((None,) * pad + tuple(names), leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(walk, cache_shapes)
+
+
+def _shardify(shape_tree, spec_tree, mesh):
+    return jax.tree.map(
+        lambda sds, spec: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec)
+        ),
+        shape_tree,
+        spec_tree,
+    )
+
+
+def batch_pspecs(batch_shapes, ctx: ShardingCtx):
+    def walk(path, leaf):
+        names = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        return ctx.resolve(names, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(walk, batch_shapes)
+
+
+# ------------------------------------------------------------------ #
+# cell construction
+# ------------------------------------------------------------------ #
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               step_cfg: Optional[StepConfig] = None,
+               rules_override: Optional[dict] = None,
+               remat: str = "full",
+               mesh_override=None,
+               serve_params_dtype=None):
+    """-> (lowerable callable, arg shape/sharding trees)"""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if mesh_override is not None:
+        shape_tuple, axes = mesh_override
+        mesh = jax.make_mesh(tuple(shape_tuple), tuple(axes))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = dict(DEFAULT_RULES)
+    rules.update(shape.rules)
+    if rules_override:
+        rules.update(rules_override)
+    ctx = ShardingCtx(mesh=mesh, rules=rules)
+    model = build_model(cfg, remat=remat)
+    # 8 microbatches/step for training cells: standard grad accumulation,
+    # keeps logits + saved-activation temporaries inside HBM (batch 256 / 8
+    # microbatches = 32 sequences, exactly one per (pod, data) shard).
+    step_cfg = step_cfg or StepConfig(
+        optimizer=AdamWConfig(), accum_steps=8
+    )
+
+    ins = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        state_shapes = jax.eval_shape(
+            lambda: init_train_state(model, jax.random.PRNGKey(0))
+        )
+        state_specs = param_pspecs(state_shapes, ctx)
+        batch_specs = batch_pspecs(ins, ctx)
+        fn = make_train_step(
+            model, step_cfg, mesh=mesh, rules=rules, multi_pod=multi_pod
+        )
+        args = (
+            _shardify(state_shapes, state_specs, mesh),
+            _shardify(ins, batch_specs, mesh),
+        )
+        donate = (0,)
+    else:
+        params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        if serve_params_dtype is not None:
+            # serving stores a reduced-precision weight copy
+            params_shapes = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, serve_params_dtype),
+                params_shapes,
+            )
+        params_specs = param_pspecs(params_shapes, ctx)
+        b = shape.global_batch
+        clen = cache_len(cfg, shape)
+        with jax.set_mesh(mesh), use_sharding(mesh, rules):
+            cache_shapes = jax.eval_shape(lambda: model.init_cache(b, clen))
+        cache_specs = cache_pspecs(cache_shapes, ctx)
+        params_arg = _shardify(params_shapes, params_specs, mesh)
+        cache_arg = _shardify(cache_shapes, cache_specs, mesh)
+        if shape.kind == "prefill":
+            fn = make_prefill(model, mesh=mesh, rules=rules)
+            batch_specs = batch_pspecs(ins, ctx)
+            args = (params_arg, _shardify(ins, batch_specs, mesh), cache_arg)
+            donate = (2,)
+        else:
+            fn0 = make_decode_step(model, mesh=mesh, rules=rules)
+            # fix the sampling key statically; lower (params, token, cache, pos)
+            def fn(params, token, cache, pos):
+                return fn0(params, token, cache, pos, jax.random.PRNGKey(0))
+
+            tok = _shardify(
+                {"token": ins["token"]},
+                {"token": ctx.resolve(("batch",), ins["token"].shape)},
+                mesh,
+            )["token"]
+            pos = jax.ShapeDtypeStruct(
+                (), jnp.int32, sharding=NamedSharding(mesh, P())
+            )
+            args = (params_arg, tok, cache_arg, pos)
+            donate = (2,)
+    return fn, args, donate, mesh, cfg, model
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             force: bool = False, **build_kw) -> Dict:
+    mesh_name = "multi" if multi_pod else "single"
+    os.makedirs(os.path.join(ART_DIR, mesh_name), exist_ok=True)
+    out_path = os.path.join(ART_DIR, mesh_name, f"{arch}__{shape_name}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    ok, reason = cell_supported(cfg, shape_name)
+    record: Dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "status": "skip" if not ok else "pending",
+        "reason": reason,
+    }
+    if ok:
+        try:
+            t0 = time.time()
+            fn, args, donate, mesh, cfg_, model = build_cell(
+                arch, shape_name, multi_pod, **build_kw
+            )
+            with jax.set_mesh(mesh):
+                # trip-count-aware global FLOPs + dot bytes
+                # (cost_analysis counts scan bodies once; flops_audit.py)
+                flops_audit, dot_bytes_audit = audit_step(fn, *args)
+                jitted = jax.jit(fn, donate_argnums=donate)
+                lowered = jitted.lower(*args)
+                t_lower = time.time() - t0
+                t0 = time.time()
+                compiled = lowered.compile()
+                t_compile = time.time() - t0
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+            pod_size = (
+                mesh.devices.size // mesh.shape["pod"]
+                if "pod" in mesh.shape
+                else mesh.devices.size
+            )
+            colls = hlo_analysis.parse_collectives(
+                hlo, n_devices=mesh.devices.size, pod_size=pod_size
+            )
+            # keep the raw collective lines for offline re-analysis
+            import re as _re
+
+            coll_lines = [
+                l.strip()[:600]
+                for l in hlo.splitlines()
+                if _re.search(
+                    r"= \S+ (all-gather|all-reduce|reduce-scatter|"
+                    r"all-to-all|collective-permute)", l
+                )
+            ]
+            record.update(
+                status="ok",
+                lower_s=round(t_lower, 2),
+                compile_s=round(t_compile, 2),
+                n_devices=int(mesh.devices.size),
+                params=count_params(model),
+                active_params=count_active_params(model),
+                flops_per_device=float(cost.get("flops", -1.0)),
+                bytes_per_device=float(cost.get("bytes accessed", -1.0)),
+                flops_audit_global=float(flops_audit),
+                dot_bytes_audit_global=float(dot_bytes_audit),
+                memory={
+                    "argument_bytes": getattr(mem, "argument_size_in_bytes", -1),
+                    "output_bytes": getattr(mem, "output_size_in_bytes", -1),
+                    "temp_bytes": getattr(mem, "temp_size_in_bytes", -1),
+                    "alias_bytes": getattr(mem, "alias_size_in_bytes", -1),
+                },
+                collectives=colls,
+                hlo_collective_lines=coll_lines,
+            )
+        except Exception as e:  # record failures: they are bugs to fix
+            record.update(
+                status="error",
+                error=f"{type(e).__name__}: {e}",
+                trace=traceback.format_exc()[-4000:],
+            )
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+    status = record["status"]
+    extra = ""
+    if status == "ok":
+        gb = record["memory"]["argument_bytes"] / 1e9
+        extra = (
+            f" lower={record['lower_s']}s compile={record['compile_s']}s "
+            f"args={gb:.2f}GB/dev temp={record['memory']['temp_bytes']/1e9:.2f}GB"
+        )
+    print(f"[dryrun:{mesh_name}] {arch} x {shape_name}: {status}{extra}",
+          flush=True)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="architecture id (or --all)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = (
+        [False, True] if args.mesh == "both"
+        else [args.mesh == "multi"]
+    )
+    failures = 0
+    for multi in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(arch, shape, multi, force=args.force)
+                if rec["status"] == "error":
+                    failures += 1
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

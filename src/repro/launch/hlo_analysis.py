@@ -1,0 +1,134 @@
+"""Parse collective traffic out of compiled HLO text.
+
+``cost_analysis`` has no collective-byte term, so the roofline's third term
+comes from here: for every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op we sum the operand byte sizes (the SPMD
+module is the per-device program, so operand shapes are per-device shard
+sizes = bytes leaving each chip, modulo the algorithm factor).
+
+Replica groups are materialized (both the explicit ``{{0,1},{2,3}}`` and the
+iota ``[G,S]<=[N]...`` forms) to classify each op as ICI (within a pod) or
+DCN (participants span pods).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?"
+)
+_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([0-9,{} ]*)\}\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _result_bytes(result_types: str) -> int:
+    """Sum the shapes in the op's RESULT type segment. CPU HLO prints no
+    operand types inside the call parens, and the result is the right
+    traffic proxy anyway: bytes received per device for all-gather, equal to
+    the operand for all-reduce / all-to-all / collective-permute."""
+    total = 0
+    for m in _SHAPE_RE.finditer(result_types):
+        if m.group(1) in _DTYPE_BYTES:
+            total += _shape_bytes(m.group(1), m.group(2))
+    return total
+
+
+def _groups_from_line(line: str, n_devices: int) -> Optional[List[List[int]]]:
+    m = _IOTA_RE.search(line)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        base_dims = [int(x) for x in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(base_dims))).reshape(base_dims)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            ids = ids.transpose(perm)
+        return ids.reshape(g, s).tolist()
+    m = _EXPLICIT_RE.search(line)
+    if m:
+        groups = []
+        for grp in m.group(1).split("},{"):
+            grp = grp.strip("{} ")
+            if grp:
+                groups.append([int(x) for x in grp.split(",")])
+        return groups or None
+    return None
+
+
+def parse_collectives(
+    hlo_text: str, n_devices: int, pod_size: int
+) -> Dict:
+    """-> {kinds, ici_bytes, dcn_bytes, total_bytes, by_depth}.
+
+    ``by_depth`` splits (ici, dcn) bytes by while-loop nesting depth — the
+    number of "while/body" scopes in the op's metadata op_name. An op at
+    depth d executes prod(trip_counts[:d]) times per step; the roofline
+    multiplies accordingly (launch/roofline.py knows each cell's static loop
+    structure). Per-op bytes use the RESULT type (the per-device bytes
+    received for all-gather; equal to operand size for all-reduce etc.).
+    """
+    kinds: Dict[str, Dict[str, float]] = {}
+    ici = dcn = 0
+    by_depth: Dict[int, Dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(
+            r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)(?:-start)?\(",
+            stripped,
+        )
+        if not m:
+            continue
+        kind = m.group(2)
+        nbytes = _result_bytes(m.group(1))
+        depth = 0
+        om = re.search(r'op_name="([^"]*)"', stripped)
+        if om:
+            depth = om.group(1).count("while/body")
+        k = kinds.setdefault(kind, {"count": 0, "bytes": 0})
+        k["count"] += 1
+        k["bytes"] += nbytes
+        groups = _groups_from_line(stripped, n_devices)
+        crosses = False
+        if groups:
+            for grp in groups:
+                pods = {dev // pod_size for dev in grp}
+                if len(pods) > 1:
+                    crosses = True
+                    break
+        d = by_depth.setdefault(depth, {"ici": 0, "dcn": 0})
+        if crosses:
+            dcn += nbytes
+            d["dcn"] += nbytes
+        else:
+            ici += nbytes
+            d["ici"] += nbytes
+    return {
+        "kinds": kinds,
+        "ici_bytes": ici,
+        "dcn_bytes": dcn,
+        "total_bytes": ici + dcn,
+        "by_depth": {str(k): v for k, v in sorted(by_depth.items())},
+    }

@@ -1,0 +1,21 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level constant) so importing never touches jax device
+state: the dry-run sets XLA_FLAGS for 512 host devices before any jax import,
+smoke tests keep the default single device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_from_plan(shape, axes):
+    """Build a (possibly degraded / elastic) mesh from a fault-plan spec."""
+    return jax.make_mesh(tuple(shape), tuple(axes))

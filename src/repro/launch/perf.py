@@ -1,0 +1,256 @@
+"""§Perf hillclimbing: hypothesis -> change -> re-lower -> measure -> record.
+
+Runs the three chosen cells (worst roofline fraction / most collective-bound
+/ most representative of the paper's technique) through named optimization
+variants, derives roofline terms for each, and emits the iteration log that
+EXPERIMENTS.md §Perf embeds.
+
+    python -m repro.launch.perf --cell yi_train --variant all
+"""
+# device count must be set before any jax import
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.launch import hlo_analysis, roofline  # noqa: E402
+from repro.launch.dryrun import build_cell  # noqa: E402
+from repro.launch.flops_audit import audit_step  # noqa: E402
+from repro.models.model import build_model, count_active_params  # noqa: E402
+from repro.optim.adamw import AdamWConfig  # noqa: E402
+from repro.train.train_step import StepConfig  # noqa: E402
+
+PERF_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "benchmarks", "artifacts",
+    "perf",
+)
+
+
+def measure(arch, shape, multi_pod, *, step_cfg=None, rules_override=None,
+            remat="full", moe_tg=None, mesh_override=None,
+            serve_params_dtype=None):
+    """Lower+compile one variant; return the roofline-ready record."""
+    from repro.models import moe as moe_lib
+
+    prev_tg = moe_lib.DISPATCH_TARGET_TG
+    moe_lib.DISPATCH_TARGET_TG = moe_tg
+    try:
+        t0 = time.time()
+        fn, args, donate, mesh, cfg, model = build_cell(
+            arch, shape, multi_pod,
+            step_cfg=step_cfg, rules_override=rules_override, remat=remat,
+            mesh_override=mesh_override,
+            serve_params_dtype=serve_params_dtype,
+        )
+        with jax.set_mesh(mesh):
+            fl, db = audit_step(fn, *args)
+            compiled = jax.jit(fn, donate_argnums=donate).lower(*args).compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        pod_size = (
+            mesh.devices.size // mesh.shape["pod"]
+            if "pod" in mesh.shape else mesh.devices.size
+        )
+        colls = hlo_analysis.parse_collectives(
+            compiled.as_text(), n_devices=mesh.devices.size, pod_size=pod_size
+        )
+        rec = {
+            "arch": arch, "shape": shape,
+            "mesh": "multi" if multi_pod else "single",
+            "status": "ok",
+            "n_devices": int(mesh.devices.size),
+            "active_params": count_active_params(model),
+            "flops_per_device": float(cost.get("flops", -1.0)),
+            "bytes_per_device": float(cost.get("bytes accessed", -1.0)),
+            "flops_audit_global": float(fl),
+            "dot_bytes_audit_global": float(db),
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", -1),
+                "output_bytes": getattr(mem, "output_size_in_bytes", -1),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", -1),
+                "alias_bytes": getattr(mem, "alias_size_in_bytes", -1),
+            },
+            "collectives": colls,
+            "compile_s": round(time.time() - t0, 1),
+            "accum_steps": step_cfg.accum_steps if step_cfg else 8,
+        }
+        return rec
+    finally:
+        moe_lib.DISPATCH_TARGET_TG = prev_tg
+
+
+def terms(rec):
+    r = roofline.derive(rec)
+    return {
+        "compute_ms": round(r.compute_s * 1e3, 1),
+        "memory_ms": round(r.memory_s * 1e3, 1),
+        "collective_ms": round(r.collective_s * 1e3, 1),
+        "ici_ms": round(r.ici_s * 1e3, 1),
+        "dcn_ms": round(r.dcn_s * 1e3, 1),
+        "bottleneck": r.bottleneck,
+        "step_ms": round(r.step_time_s * 1e3, 1),
+        "roofline_fraction": round(r.roofline_fraction, 3),
+        "useful_ratio": round(r.useful_ratio, 3),
+        "temp_gb": round(rec["memory"]["temp_bytes"] / 1e9, 2),
+    }
+
+
+OPT = AdamWConfig()
+
+CELLS = {
+    # (c) most representative of the paper's technique: multi-pod train with
+    # the scheduled DCN sync; also the heaviest dense arch.
+    "yi_train": dict(
+        arch="yi-9b", shape="train_4k", multi_pod=True,
+        variants=[
+            ("baseline", "FSDP re-gathers every layer's weights every "
+             "microbatch (fwd+bwd)", {}),
+            ("it1_gather_once",
+             "HYPOTHESIS: one bf16 TP-only weight gather per step + "
+             "per-microbatch grad reduce-scatter cuts ICI ~5x "
+             "(weights 2x/ubatch -> grads 1x/ubatch)",
+             dict(step_cfg=StepConfig(optimizer=OPT, accum_steps=8,
+                                      gather_once=True))),
+            ("it2_gather_once_dots",
+             "HYPOTHESIS: remat policy 'dots' saves matmul outputs -> "
+             "bwd recompute drops, compute term ~ -25% (useful ratio "
+             "0.69 -> ~0.9); memory term rises",
+             dict(step_cfg=StepConfig(optimizer=OPT, accum_steps=8,
+                                      gather_once=True),
+                  remat="dots")),
+            ("it3_gather_once_accum4",
+             "HYPOTHESIS: accum 8->4 halves per-step reduce-scatter "
+             "traffic; activation temporaries ~2x (still < HBM)",
+             dict(step_cfg=StepConfig(optimizer=OPT, accum_steps=4,
+                                      gather_once=True))),
+            ("it4_tp4_accum2",
+             "HYPOTHESIS (from it1 depth analysis: dominant ICI = per-layer "
+             "TP activation all-reduces x accum x L): remap the 512 chips to "
+             "(pod 2, data 64, model 4) — TP all-reduce operands shrink 4x "
+             "(batch sharded 4x wider) and accum 8->2 cuts trips 4x: "
+             "ICI ~ -90%; bf16 TP-4 weight copy 4.4GB/dev still fits",
+             dict(step_cfg=StepConfig(optimizer=OPT, accum_steps=2,
+                                      gather_once=True),
+                  mesh_override=((2, 64, 4), ("pod", "data", "model")))),
+            ("it5_tp4_int8_dcn",
+             "HYPOTHESIS (it4 leaves DCN fp32 grad sync as 64% of the "
+             "collective term): int8-wire sync (all-gather + local "
+             "dequant-sum, error feedback available) cuts DCN bytes ~4x "
+             "-> collective term ~ -50%, bottleneck nears compute",
+             dict(step_cfg=StepConfig(optimizer=OPT, accum_steps=2,
+                                      gather_once=True,
+                                      compress_codec="int8"),
+                  mesh_override=((2, 64, 4), ("pod", "data", "model")))),
+        ],
+    ),
+    # (b) most collective-bound baseline cell
+    "phi35_train": dict(
+        arch="phi3.5-moe-42b", shape="train_4k", multi_pod=False,
+        variants=[
+            ("baseline", "per-microbatch FSDP gathers of 42B params "
+             "dominate; MoE dispatch adds flops", {}),
+            ("it1_gather_once",
+             "HYPOTHESIS: gather-once cuts the dominant ICI term ~5x "
+             "(bf16 TP-only copy = 5.2 GB/device, fits)",
+             dict(step_cfg=StepConfig(optimizer=OPT, accum_steps=8,
+                                      gather_once=True))),
+            ("it2_moe_tg2048",
+             "HYPOTHESIS: dispatch einsum cost ~ 2*T*E*C*D with "
+             "C ~ Tg*k/E: shrinking groups 32k->2k tokens cuts MoE "
+             "dispatch FLOPs ~16x (compute term -30%+)",
+             dict(step_cfg=StepConfig(optimizer=OPT, accum_steps=8,
+                                      gather_once=True),
+                  moe_tg=2048)),
+        ],
+    ),
+    # (a) worst roofline fraction: FSDP-sharded weights make decode gather
+    # the full model every token
+    "yi_decode": dict(
+        arch="yi-9b", shape="decode_32k", multi_pod=False,
+        variants=[
+            ("baseline", "weights FSDP(data x model)-sharded: serving "
+             "all-gathers every layer's weights per token", {}),
+            ("it1_tp_only",
+             "HYPOTHESIS: serve-mode TP-only sharding (p_embed->None) "
+             "keeps weights resident (fp32 2.2 GB/device) -> no per-token "
+             "gathers; memory term -> cache+weights read ~ 5x lower",
+             dict(rules_override={"p_embed": None})),
+            ("it2_tp_bf16",
+             "HYPOTHESIS (from it1: memory floor = fp32 weight reads "
+             "~18GB/dev/token): serve from a bf16 weight copy -> weight "
+             "read bytes halve; memory term ~ -45%",
+             dict(rules_override={"p_embed": None},
+                  serve_params_dtype=__import__("jax").numpy.bfloat16)),
+        ],
+    ),
+    # bonus: deepseek prefill was compute-bound with useful-ratio 0.08 —
+    # nearly all FLOPs were MoE dispatch overhead
+    "deepseek_prefill": dict(
+        arch="deepseek-moe-16b", shape="prefill_32k", multi_pod=False,
+        variants=[
+            ("baseline", "grouped dispatch with Tg=32k tokens: C=3840 "
+             "slots/expert/group -> dispatch dominates FLOPs 10:1", {}),
+            ("it1_moe_tg2048",
+             "HYPOTHESIS: Tg 32k->2k cuts dispatch/combine einsum FLOPs "
+             "~16x; compute term approaches the expert-FFN floor "
+             "(useful ratio 0.08 -> ~0.5)",
+             dict(moe_tg=2048)),
+            ("it2_moe_tg2048_tponly",
+             "HYPOTHESIS: + TP-only weights remove per-layer FSDP "
+             "gathers from prefill (collective term -> ~0)",
+             dict(moe_tg=2048, rules_override={"p_embed": None})),
+            ("it3_local_attention",
+             "HYPOTHESIS (it2 left 6.2s of in-loop collectives: partial-"
+             "softmax all-reduces from the kv_seq->model sharding, x28 "
+             "layers x 32 q-chunks): keep attention KV local (batch-"
+             "sharded only) and reshard the cache once on output -> "
+             "collective term collapses to the MoE combine + one reshard",
+             dict(moe_tg=2048,
+                  rules_override={"p_embed": None, "kv_seq": None})),
+        ],
+    ),
+}
+
+
+def run_cell_variants(name):
+    spec = CELLS[name]
+    os.makedirs(PERF_DIR, exist_ok=True)
+    out_path = os.path.join(PERF_DIR, f"{name}.json")
+    results = []
+    print(f"== {name}: {spec['arch']} x {spec['shape']} "
+          f"({'multi' if spec['multi_pod'] else 'single'}-pod) ==", flush=True)
+    for vname, hypothesis, kw in spec["variants"]:
+        try:
+            rec = measure(spec["arch"], spec["shape"], spec["multi_pod"], **kw)
+            t = terms(rec)
+            status = "ok"
+        except Exception as e:
+            t, status = {"error": str(e)[:300]}, "error"
+        results.append({"variant": vname, "hypothesis": hypothesis,
+                        "status": status, **t})
+        print(f"  {vname:24s} {json.dumps(t)}", flush=True)
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=1)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="all",
+                    choices=list(CELLS) + ["all"])
+    args = ap.parse_args()
+    names = list(CELLS) if args.cell == "all" else [args.cell]
+    for n in names:
+        run_cell_variants(n)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,234 @@
+"""Roofline-term derivation from dry-run artifacts.
+
+Hardware constants (TPU v5e-class target):
+    peak compute  197 TFLOP/s bf16 per chip
+    HBM bandwidth 819 GB/s per chip
+    ICI           ~50 GB/s per link per chip
+    DCN           25 GB/s aggregate per pod pair (multi-pod cells)
+
+Term semantics (the compiled module is the per-device SPMD program, so
+cost_analysis FLOPs/bytes and parsed collective operand sizes are all
+*per-device* quantities):
+
+    compute    = flops_per_device / PEAK
+    memory     = hbm_bytes_per_device / HBM_BW
+    collective = ici_bytes_per_device / ICI_BW
+               + dcn_bytes_per_device * n_devices / (DCN_BW * n_pod_pairs)
+
+MODEL_FLOPS (global, useful): 6*N_active*tokens for a train step (fwd+bwd),
+2*N_active*tokens for prefill, 2*N_active*batch for one decode step. The
+ratio MODEL_FLOPS / (flops_per_device * n_devices) exposes remat/redundancy
+waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+DCN_BW = 25e9
+
+ART_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "benchmarks", "artifacts",
+    "dryrun",
+)
+
+_SHAPE_TOKENS = {
+    "train_4k": ("train", 4096 * 256),
+    "prefill_32k": ("prefill", 32768 * 32),
+    "decode_32k": ("decode", 128),
+    "long_500k": ("decode", 1),
+}
+
+
+def _loop_chain(arch: str, shape: str, accum: int = 8):
+    """Static while-loop trip counts, outermost first, for this cell.
+
+    train:   [accum=8, layer_scan, attn_q_chunks]
+    prefill: [layer_scan, attn_q_chunks]
+    decode:  [layer_scan]
+    Layer-scan length = scan trips actually emitted (periods for hybrids).
+    """
+    from repro.configs import get_config
+
+    cfg = get_config(arch)
+    period = len(cfg.layer_pattern)
+    l_eff = cfg.num_layers // period if period > 1 else cfg.num_layers
+    if cfg.is_encdec:
+        l_eff = max(cfg.num_layers, cfg.encoder_layers)
+    seq = {"train_4k": 4096, "prefill_32k": 32768,
+           "decode_32k": 1, "long_500k": 1}[shape]
+    q_chunks = max(1, seq // 1024) if seq > 2048 else 1
+    if shape == "train_4k":
+        return [accum, l_eff, q_chunks]
+    if shape == "prefill_32k":
+        return [l_eff, q_chunks]
+    return [l_eff]
+
+
+def _cum_factor(chain, depth: int) -> float:
+    f = 1.0
+    for i in range(min(depth, len(chain))):
+        f *= chain[i]
+    return f
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    ici_s: float
+    dcn_s: float
+    bottleneck: str
+    model_flops: float
+    hlo_flops_total: float
+    useful_ratio: float
+    step_time_s: float
+    roofline_fraction: float  # compute_s / step bound (1.0 = at the roof)
+    note: str = ""
+
+    def row(self) -> str:
+        return (
+            f"| {self.arch} | {self.shape} | {self.mesh} | "
+            f"{self.compute_s*1e3:.2f} | {self.memory_s*1e3:.2f} | "
+            f"{self.collective_s*1e3:.2f} | {self.bottleneck} | "
+            f"{self.useful_ratio:.2f} | {self.roofline_fraction:.2f} |"
+        )
+
+
+def derive(record: Dict) -> Optional[Roofline]:
+    if record.get("status") != "ok":
+        return None
+    arch, shape, mesh = record["arch"], record["shape"], record["mesh"]
+    n_dev = record["n_devices"]
+    flops_dev_xla = max(record["flops_per_device"], 0.0)
+    bytes_dev = max(record["bytes_per_device"], 0.0)
+    colls = record.get("collectives", {})
+    ici_b = colls.get("ici_bytes", 0)
+    dcn_b = colls.get("dcn_bytes", 0)
+    n_pods = 2 if mesh == "multi" else 1
+
+    # Trip-count-aware accounting (XLA cost_analysis counts while bodies
+    # once — launch/flops_audit.py):
+    #  * FLOPs: exact jaxpr audit.
+    #  * HBM bytes: audited dot-operand traffic (trip-aware) + the fused
+    #    module's bytes once (non-dot / out-of-loop traffic).
+    #  * collectives: per-op bytes multiplied by the static trip count of
+    #    the while-nesting depth the op sits at (metadata scope), using the
+    #    cell's known loop chain. DCN grad-sync psums sit at depth 0.
+    audit_global = record.get("flops_audit_global", 0.0)
+    flops_dev = (
+        audit_global / n_dev if audit_global > 0 else flops_dev_xla
+    )
+    dot_bytes_dev = record.get("dot_bytes_audit_global", 0.0) / n_dev
+    bytes_dev_c = dot_bytes_dev + bytes_dev
+
+    chain = _loop_chain(arch, shape, accum=record.get("accum_steps", 8))
+    by_depth = colls.get("by_depth")
+    if by_depth:
+        ici_c = dcn_c = 0.0
+        for d_str, v in by_depth.items():
+            f = _cum_factor(chain, int(d_str))
+            ici_c += v["ici"] * f
+            dcn_c += v["dcn"] * f
+    else:  # legacy artifact: flop-ratio fallback
+        corr = max(
+            flops_dev / flops_dev_xla if flops_dev_xla > 0 else 1.0, 1.0
+        )
+        ici_c, dcn_c = ici_b * corr, dcn_b
+
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev_c / HBM_BW
+    ici_s = ici_c / ICI_BW
+    dcn_s = dcn_c * n_dev / (DCN_BW * max(n_pods - 1, 1)) if dcn_c else 0.0
+    collective_s = ici_s + dcn_s
+
+    kind, tokens = _SHAPE_TOKENS[shape]
+    n_active = record.get("active_params", 0)
+    mult = 6 if kind == "train" else 2
+    model_flops = mult * n_active * tokens
+    hlo_total = flops_dev * n_dev
+    useful = model_flops / hlo_total if hlo_total else 0.0
+
+    step = max(compute_s, memory_s, collective_s)
+    terms = {
+        "compute": compute_s, "memory": memory_s, "collective": collective_s
+    }
+    bottleneck = max(terms, key=terms.get)
+    frac = compute_s / step if step else 0.0
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        ici_s=ici_s, dcn_s=dcn_s,
+        bottleneck=bottleneck,
+        model_flops=model_flops, hlo_flops_total=hlo_total,
+        useful_ratio=useful, step_time_s=step, roofline_fraction=frac,
+    )
+
+
+def load_all(mesh: str = "single") -> List[Dict]:
+    d = os.path.join(ART_DIR, mesh)
+    out = []
+    if not os.path.isdir(d):
+        return out
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".json"):
+            with open(os.path.join(d, f)) as fh:
+                out.append(json.load(fh))
+    return out
+
+
+def report(mesh: str = "single") -> str:
+    rows = []
+    skips = []
+    errors = []
+    for rec in load_all(mesh):
+        r = derive(rec)
+        if r is not None:
+            rows.append(r)
+        elif rec.get("status") == "skip":
+            skips.append(rec)
+        else:
+            errors.append(rec)
+    lines = [
+        f"### Roofline — {mesh}-pod mesh "
+        f"({'2x16x16' if mesh == 'multi' else '16x16'})",
+        "",
+        "| arch | shape | mesh | compute (ms) | memory (ms) | collective (ms)"
+        " | bottleneck | useful FLOP ratio | roofline fraction |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r.arch, r.shape)):
+        lines.append(r.row())
+    if skips:
+        lines.append("")
+        lines.append("Documented skips:")
+        for s in skips:
+            lines.append(f"- {s['arch']} x {s['shape']}: {s['reason']}")
+    if errors:
+        lines.append("")
+        lines.append("ERRORS (bugs to fix):")
+        for e in errors:
+            lines.append(f"- {e['arch']} x {e['shape']}: {e.get('error','?')}")
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    args = ap.parse_args()
+    print(report(args.mesh))
+
+
+if __name__ == "__main__":
+    main()

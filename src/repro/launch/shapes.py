@@ -1,0 +1,92 @@
+"""Assigned input-shape presets and per-cell eligibility.
+
+Four shapes per LM architecture (40 cells total):
+    train_4k     seq 4096,   global_batch 256   (train_step)
+    prefill_32k  seq 32768,  global_batch 32    (serve prefill)
+    decode_32k   ctx 32768,  global_batch 128   (serve decode, 1 new token)
+    long_500k    ctx 524288, global_batch 1     (long-context decode)
+
+``long_500k`` requires a sub-quadratic path: it runs for the SSM / hybrid /
+mostly-local archs (rwkv6-3b, recurrentgemma-9b, gemma3-1b) and is a
+documented skip for the pure full-attention archs (DESIGN.md
+§Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+#: archs eligible for the 500k-context cell
+LONG_OK = {"rwkv6-3b", "recurrentgemma-9b", "gemma3-1b"}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+    #: logical->physical rule overrides for this workload
+    rules: Dict[str, object]
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec(
+        "train_4k", "train", 4096, 256, rules={}
+    ),
+    "prefill_32k": ShapeSpec(
+        "prefill_32k", "prefill", 32768, 32, rules={"kv_seq": "model"}
+    ),
+    "decode_32k": ShapeSpec(
+        "decode_32k", "decode", 32768, 128, rules={"kv_seq": "model"}
+    ),
+    "long_500k": ShapeSpec(
+        "long_500k", "decode", 524288, 1,
+        rules={"batch": None, "kv_seq": ("pod", "data")},
+    ),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """(runs?, reason-if-skipped) for an (arch x shape) cell."""
+    if shape == "long_500k" and cfg.name not in LONG_OK:
+        return False, (
+            "pure full-attention architecture: 500k-token decode requires a "
+            "sub-quadratic/bounded-state path (documented skip, DESIGN.md)"
+        )
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell —
+    weak-type-correct, shardable, zero allocation."""
+    b = shape.global_batch
+    s = shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind == "train":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        out["targets"] = jax.ShapeDtypeStruct((b, s), i32)
+    elif shape.kind == "prefill":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+    else:  # decode: one new token; the cache carries the context
+        out["token"] = jax.ShapeDtypeStruct((b,), i32)
+    if cfg.frontend == "vision_stub" and shape.kind != "decode":
+        out["prefix_embed"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_prefix_tokens, cfg.d_model), f32
+        )
+    if cfg.frontend == "audio_stub" and shape.kind != "decode":
+        out["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model), f32)
+    return out
+
+
+def cache_len(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    """KV-cache length for serving cells (prefix tokens included)."""
+    extra = cfg.num_prefix_tokens if cfg.frontend == "vision_stub" else 0
+    return shape.seq_len + extra

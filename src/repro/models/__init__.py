@@ -1,0 +1,1 @@
+"""Model zoo: dense / MoE / SSM / hybrid / VLM / audio families, pure JAX."""

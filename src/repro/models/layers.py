@@ -1,0 +1,267 @@
+"""Shared neural-net layers (pure JAX, functional; params are dict pytrees).
+
+Conventions:
+  - activations default bf16, params fp32 (cast at use), softmax/norms fp32;
+  - attention tensors are (batch, seq, heads, head_dim);
+  - every layer fn takes (params, inputs, ...) and returns arrays, no state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+Array = jax.Array
+
+# A window value meaning "unwindowed" in per-layer window arrays; any value
+# >= max sequence length behaves identically.
+GLOBAL_WINDOW = jnp.iinfo(jnp.int32).max // 2
+
+
+def cast(x: Array, dtype=jnp.bfloat16) -> Array:
+    return x.astype(dtype)
+
+
+# ------------------------------------------------------------------ #
+# init helpers
+# ------------------------------------------------------------------ #
+
+
+def dense_init(key, shape, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(
+        jnp.float32
+    )
+
+
+# ------------------------------------------------------------------ #
+# norms / activations
+# ------------------------------------------------------------------ #
+
+
+def rms_norm(x: Array, gamma: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def activation(x: Array, kind: str) -> Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if kind == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+# ------------------------------------------------------------------ #
+# rotary embeddings
+# ------------------------------------------------------------------ #
+
+
+def rope(x: Array, positions: Array, theta) -> Array:
+    """Apply rotary embeddings. x: (B, S, H, Dh); positions: (B, S) or (S,).
+
+    ``theta`` may be a python float or a traced scalar (per-layer theta in a
+    scanned stack, e.g. gemma3 local 10k / global 1M).
+    """
+    b, s, h, dh = x.shape
+    half = dh // 2
+    freq_exponents = jnp.arange(half, dtype=jnp.float32) / half
+    timescale = jnp.asarray(theta, jnp.float32) ** freq_exponents
+    pos = positions.astype(jnp.float32)
+    if pos.ndim == 1:
+        pos = pos[None, :]
+    angles = pos[:, :, None] / timescale[None, None, :]  # (B, S, half)
+    sin = jnp.sin(angles)[:, :, None, :]
+    cos = jnp.cos(angles)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ #
+# attention (reference path; the Pallas flash kernel mirrors this math)
+# ------------------------------------------------------------------ #
+
+
+def attention_scores(
+    q: Array,
+    k: Array,
+    v: Array,
+    q_positions: Array,
+    k_positions: Array,
+    *,
+    causal: bool = True,
+    window: Optional[Array] = None,
+    k_valid_len: Optional[Array] = None,
+    logit_softcap: float = 0.0,
+) -> Array:
+    """Grouped-query attention with causal/sliding-window/cross masking.
+
+    q: (B, S, H, Dh); k, v: (B, T, KV, Dh); H % KV == 0.
+    q_positions: (S,) or (B, S); k_positions: (T,) or (B, T).
+    window: scalar (possibly traced); tokens attend to (pos-window, pos].
+    k_valid_len: mask keys at index >= this (decode with partially filled
+    cache).
+    """
+    b, s, h, dh = q.shape
+    _, t, kv, _ = k.shape
+    groups = h // kv
+    qg = q.reshape(b, s, kv, groups, dh)
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    logits = jnp.einsum(
+        "bskgd,btkd->bkgst",
+        qg.astype(jnp.float32),
+        k.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ) * scale
+    if logit_softcap:
+        logits = jnp.tanh(logits / logit_softcap) * logit_softcap
+
+    qp = q_positions if q_positions.ndim == 2 else q_positions[None, :]
+    kp = k_positions if k_positions.ndim == 2 else k_positions[None, :]
+    mask = jnp.ones((b if qp.shape[0] > 1 or kp.shape[0] > 1 else 1, s, t), bool)
+    # negative key positions mark unwritten (rolling-cache) slots
+    mask &= kp[:, None, :] >= 0
+    if causal:
+        mask &= kp[:, None, :] <= qp[:, :, None]
+    if window is not None:
+        mask &= kp[:, None, :] > (qp[:, :, None] - window)
+    if k_valid_len is not None:
+        valid = jnp.arange(t)[None, None, :] < jnp.asarray(k_valid_len).reshape(-1, 1, 1)
+        mask &= valid
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bkgst,btkd->bskgd", probs, v.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, s, h, dh).astype(q.dtype)
+
+
+def attention_chunked(
+    q: Array,
+    k: Array,
+    v: Array,
+    q_positions: Array,
+    k_positions: Array,
+    *,
+    causal: bool = True,
+    window: Optional[Array] = None,
+    logit_softcap: float = 0.0,
+    q_chunk: int = 1024,
+) -> Array:
+    """Query-chunked attention: identical math to ``attention_scores`` but the
+    (S, T) logits are materialized one q-chunk at a time (flash-style memory
+    behaviour without online softmax — each chunk sees the full key row).
+
+    Required for the 32k/500k-sequence cells: a dense 32768^2 fp32 logit
+    tensor would be ~4 GB/head. q_positions must be (S,) here.
+    """
+    b, s, h, dh = q.shape
+    if s % q_chunk != 0:
+        return attention_scores(
+            q, k, v, q_positions, k_positions,
+            causal=causal, window=window, logit_softcap=logit_softcap,
+        )
+    n_chunks = s // q_chunk
+    qc = q.reshape(b, n_chunks, q_chunk, h, dh)
+    qp = q_positions.reshape(n_chunks, q_chunk)
+
+    def one(args):
+        q_i, qp_i = args
+        return attention_scores(
+            q_i, k, v, qp_i, k_positions,
+            causal=causal, window=window, logit_softcap=logit_softcap,
+        )
+
+    out = jax.lax.map(one, (jnp.moveaxis(qc, 1, 0), qp))  # (n, B, C, H, Dh)
+    return jnp.moveaxis(out, 0, 1).reshape(b, s, h, dh)
+
+
+def attend(
+    q, k, v, q_positions, k_positions, *,
+    causal=True, window=None, logit_softcap=0.0, chunk_threshold=2048,
+) -> Array:
+    """Dispatch between dense and q-chunked attention by sequence length."""
+    if q.shape[1] > chunk_threshold and q_positions.ndim == 1:
+        return attention_chunked(
+            q, k, v, q_positions, k_positions,
+            causal=causal, window=window, logit_softcap=logit_softcap,
+        )
+    return attention_scores(
+        q, k, v, q_positions, k_positions,
+        causal=causal, window=window, logit_softcap=logit_softcap,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+
+
+def attn_param_init(key, dims: AttnDims, cross: bool = False) -> dict:
+    kq, kk, kv_, ko = jax.random.split(key, 4)
+    d, h, kv, dh = dims.d_model, dims.num_heads, dims.num_kv_heads, dims.head_dim
+    return {
+        "wq": dense_init(kq, (d, h * dh)),
+        "wk": dense_init(kk, (d, kv * dh)),
+        "wv": dense_init(kv_, (d, kv * dh)),
+        "wo": dense_init(ko, (h * dh, d), scale=1.0 / jnp.sqrt(h * dh)),
+    }
+
+
+def attn_qkv(params: dict, x: Array, dims: AttnDims):
+    b, s, _ = x.shape
+    q = (x @ cast(params["wq"])).reshape(b, s, dims.num_heads, dims.head_dim)
+    k = (x @ cast(params["wk"])).reshape(b, s, dims.num_kv_heads, dims.head_dim)
+    v = (x @ cast(params["wv"])).reshape(b, s, dims.num_kv_heads, dims.head_dim)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv", None)
+    v = shard(v, "batch", "seq", "kv", None)
+    return q, k, v
+
+
+def attn_out(params: dict, o: Array) -> Array:
+    b, s, h, dh = o.shape
+    return o.reshape(b, s, h * dh) @ cast(params["wo"])
+
+
+# ------------------------------------------------------------------ #
+# feed-forward
+# ------------------------------------------------------------------ #
+
+
+def ffn_param_init(key, d_model: int, d_ff: int, glu: bool) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(ks[0], (d_model, d_ff)),
+        "w_down": dense_init(ks[1], (d_ff, d_model)),
+    }
+    if glu:
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff))
+    return p
+
+
+def ffn_apply(params: dict, x: Array, act: str, glu: bool) -> Array:
+    up = x @ cast(params["w_up"])
+    up = shard(up, "batch", "seq", "mlp")
+    if glu:
+        gate = activation(x @ cast(params["w_gate"]), act)
+        h = gate * up
+    else:
+        h = activation(up, act)
+    return h @ cast(params["w_down"])

@@ -1,0 +1,918 @@
+"""Model assembly: build_model(config) -> {init, loss, forward, prefill, decode}.
+
+Four assembly families share one public surface:
+
+  * ``LM``        uniform decoder-only stacks (dense / moe / vlm): all layers
+                  are attention blocks, scanned over stacked params with
+                  per-layer (window, rope-theta) scalars for mixed
+                  local/global patterns (gemma3).
+  * ``RwkvLM``    uniform RWKV-6 stacks (attention-free).
+  * ``HybridLM``  Griffin-style periodic patterns (recurrentgemma "RRL"):
+                  scan over full periods + unrolled tail layers.
+  * ``EncDecLM``  whisper-style encoder-decoder with cross attention; the
+                  audio conv frontend is a stub (precomputed frame
+                  embeddings arrive as inputs).
+
+All forward paths are functional; decode carries an explicit cache pytree.
+Scan-over-layers keeps the lowered HLO compact (essential for 512-way SPMD
+compiles) and remat policy is applied to the scan body.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard, vary_for_manual
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import rwkv6 as rwkv_lib
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+PyTree = Any
+
+
+def sharded_embed_lookup(table: Array, tokens: Array) -> Array:
+    """Embedding lookup that stays correct AND partitioner-friendly when the
+    table's vocab dim is model-sharded inside a manual-pod shard_map region.
+
+    XLA's SPMD partitioner (this version) hits a replica-group CHECK failure
+    partitioning a *gather* over a sharded operand dim under manual sub-axes
+    (b/433785288-adjacent). Inside the multi-pod manual region we therefore
+    express the lookup as a one-hot x table matmul: iota-compare + dot
+    partition cleanly (partial contraction over the vocab shards + model-axis
+    all-reduce, the same communication the sharded gather implies), and the
+    embedding gradient flows through the dot transpose with no scatter.
+    Everywhere else (incl. every single-pod roofline cell) the plain take
+    lowers fine and stays gather-cheap.
+    """
+    from repro.distributed.sharding import current_ctx
+
+    ctx = current_ctx()
+    use_onehot = ctx is not None and ctx.manual_axes
+    if not use_onehot:
+        return jnp.take(table, tokens, axis=0)
+    flat = tokens.reshape(-1)
+    onehot = jax.nn.one_hot(flat, table.shape[0], dtype=jnp.bfloat16)
+    onehot = shard(onehot, "batch", "vocab")
+    emb = jnp.einsum(
+        "tv,vd->td", onehot, table.astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    )
+    return emb.reshape(tokens.shape + (table.shape[-1],))
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "full":
+        return jax.checkpoint(fn)
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots
+        )
+    if policy == "dots_no_batch":
+        return jax.checkpoint(
+            fn,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+        )
+    raise ValueError(f"unknown remat policy {policy!r}")
+
+
+def _stack_layer_params(per_layer):
+    """list of per-layer param dicts -> dict of stacked arrays."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *per_layer)
+
+
+def cross_entropy(logits: Array, targets: Array, mask: Array) -> Array:
+    """Mean token NLL (fp32). logits (B,S,V) targets (B,S) mask (B,S)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+@dataclasses.dataclass
+class BaseLM:
+    cfg: ModelConfig
+    use_kernels: bool = False
+    remat: str = "full"
+
+    # ---- embeddings ------------------------------------------------- #
+    def _embed_init(self, key) -> dict:
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        p = {
+            "tok": L.dense_init(k1, (cfg.vocab_size, cfg.d_model), scale=0.02),
+            "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            p["head"] = L.dense_init(
+                k2, (cfg.vocab_size, cfg.d_model), scale=0.02
+            )
+        return p
+
+    def _embed(self, params, tokens: Array) -> Array:
+        emb = sharded_embed_lookup(params["tok"], tokens)
+        emb = emb * jnp.sqrt(self.cfg.d_model).astype(jnp.float32)
+        return L.cast(shard(emb, "batch", "seq", "embed"))
+
+    def _logits(self, params, h: Array) -> Array:
+        h = L.rms_norm(h, params["final_norm"], self.cfg.norm_eps)
+        table = params.get("head", params["tok"])
+        # bf16 logits: fp32 accumulation inside the matmul, bf16 storage —
+        # a fp32 (B, S, V) tensor is the single largest buffer at 200k+
+        # vocabs (the convert fuses into the matmul epilogue). The loss
+        # upcasts per-element inside its reductions.
+        logits = jnp.einsum(
+            "bsd,vd->bsv", h, L.cast(table),
+            preferred_element_type=jnp.float32,
+        ).astype(jnp.bfloat16)
+        return shard(logits, "batch", "seq", "vocab")
+
+    # ---- public API -------------------------------------------------- #
+    def init(self, key) -> PyTree:
+        raise NotImplementedError
+
+    def forward(self, params, batch) -> Tuple[Array, Array]:
+        """-> (logits, aux_loss)"""
+        raise NotImplementedError
+
+    def loss(self, params, batch) -> Tuple[Array, Dict[str, Array]]:
+        logits, aux = self.forward(params, batch)
+        mask = batch.get("mask")
+        if mask is None:
+            mask = jnp.ones_like(batch["targets"], jnp.float32)
+        xent = cross_entropy(logits, batch["targets"], mask)
+        total = xent + self.cfg.router_aux_weight * aux
+        return total, {"xent": xent, "aux": aux}
+
+    def init_cache(self, batch_size: int, max_len: int) -> PyTree:
+        raise NotImplementedError
+
+    def prefill(self, params, batch, cache) -> Tuple[Array, PyTree]:
+        raise NotImplementedError
+
+    def decode_step(self, params, token, cache, pos) -> Tuple[Array, PyTree]:
+        raise NotImplementedError
+
+
+# ====================================================================== #
+# Uniform attention LM (dense / moe / vlm)
+# ====================================================================== #
+
+
+class LM(BaseLM):
+    """All layers are (attention + FFN/MoE) blocks; one scan over the stack."""
+
+    @property
+    def dims(self) -> L.AttnDims:
+        c = self.cfg
+        return L.AttnDims(c.d_model, c.num_heads, c.num_kv_heads, c.head_dim)
+
+    def _layer_statics(self):
+        """Per-layer (window, theta) arrays from the pattern."""
+        cfg = self.cfg
+        windows, thetas = [], []
+        for t in cfg.layer_types():
+            if t == "L":
+                windows.append(cfg.window_size)
+                thetas.append(cfg.rope_theta)
+            else:
+                windows.append(L.GLOBAL_WINDOW)
+                thetas.append(cfg.rope_theta_global or cfg.rope_theta)
+        return (
+            jnp.asarray(windows, jnp.int32),
+            jnp.asarray(thetas, jnp.float32),
+        )
+
+    def _layer_init(self, key) -> dict:
+        cfg = self.cfg
+        ka, kf = jax.random.split(key)
+        p = {
+            "attn_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+            "ffn_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+            **L.attn_param_init(ka, self.dims),
+        }
+        if cfg.num_experts:
+            p["moe"] = moe_lib.moe_param_init(
+                kf, cfg.d_model, cfg.num_experts, cfg.d_ff_expert,
+                cfg.num_shared_experts, cfg.glu,
+            )
+        else:
+            p.update(L.ffn_param_init(kf, cfg.d_model, cfg.d_ff, cfg.glu))
+        return p
+
+    def init(self, key) -> PyTree:
+        cfg = self.cfg
+        keys = jax.random.split(key, cfg.num_layers + 1)
+        stacked = _stack_layer_params(
+            [self._layer_init(k) for k in keys[: cfg.num_layers]]
+        )
+        return {"embed": self._embed_init(keys[-1]), "layers": stacked}
+
+    # ---- blocks ------------------------------------------------------ #
+    def _ffn_or_moe(self, lp, h) -> Tuple[Array, Array]:
+        cfg = self.cfg
+        if cfg.num_experts:
+            return moe_lib.moe_ffn(
+                lp["moe"], h,
+                num_experts=cfg.num_experts, top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor,
+                act=cfg.act, glu=cfg.glu,
+            )
+        return L.ffn_apply(lp, h, cfg.act, cfg.glu), jnp.float32(0.0)
+
+    def _block_train(self, lp, h, window, theta, positions):
+        cfg = self.cfg
+        x = L.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(lp, x, self.dims)
+        q = L.rope(q, positions, theta)
+        k = L.rope(k, positions, theta)
+        o = L.attend(
+            q, k, v, positions, positions,
+            causal=True, window=window, logit_softcap=cfg.logit_softcap,
+        )
+        h = h + L.attn_out(lp, o)
+        x = L.rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+        y, aux = self._ffn_or_moe(lp, x)
+        h = shard(h + y, "batch", "seq", "embed")
+        return h, aux
+
+    # ---- train forward ------------------------------------------------ #
+    def forward(self, params, batch) -> Tuple[Array, Array]:
+        cfg = self.cfg
+        h = self._embed(params["embed"], batch["tokens"])
+        if "prefix_embed" in batch:  # vlm: precomputed patch embeddings
+            h = jnp.concatenate([L.cast(batch["prefix_embed"]), h], axis=1)
+        positions = jnp.arange(h.shape[1], dtype=jnp.int32)
+        windows, thetas = self._layer_statics()
+
+        def body(carry, xs):
+            h, aux = carry
+            lp, window, theta = xs
+            h, a = self._block_train(lp, h, window, theta, positions)
+            return (h, aux + a), None
+
+        body = _remat(body, self.remat)
+        # the aux accumulator becomes manual-axis-varying on the first add
+        aux0 = vary_for_manual(jnp.float32(0.0))
+        (h, aux), _ = jax.lax.scan(
+            body, (h, aux0), (params["layers"], windows, thetas)
+        )
+        if "prefix_embed" in batch:
+            h = h[:, batch["prefix_embed"].shape[1]:, :]
+        return self._logits(params["embed"], h), aux / cfg.num_layers
+
+    # ---- serving ------------------------------------------------------ #
+    def init_cache(self, batch_size: int, max_len: int) -> PyTree:
+        cfg = self.cfg
+        shape = (cfg.num_layers, batch_size, max_len,
+                 cfg.num_kv_heads, cfg.head_dim)
+        k = shard(jnp.zeros(shape, jnp.bfloat16),
+                  None, "batch", "kv_seq", "kv", None)
+        v = shard(jnp.zeros(shape, jnp.bfloat16),
+                  None, "batch", "kv_seq", "kv", None)
+        return {"k": k, "v": v}
+
+    def prefill(self, params, batch, cache) -> Tuple[Array, PyTree]:
+        cfg = self.cfg
+        h = self._embed(params["embed"], batch["tokens"])
+        if "prefix_embed" in batch:
+            h = jnp.concatenate([L.cast(batch["prefix_embed"]), h], axis=1)
+        s = h.shape[1]
+        max_len = cache["k"].shape[2]
+        positions = jnp.arange(s, dtype=jnp.int32)
+        windows, thetas = self._layer_statics()
+
+        def body(h, xs):
+            lp, window, theta = xs
+            x = L.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+            q, k, v = L.attn_qkv(lp, x, self.dims)
+            q = L.rope(q, positions, theta)
+            k = L.rope(k, positions, theta)
+            o = L.attend(q, k, v, positions, positions,
+                         causal=True, window=window,
+                         logit_softcap=cfg.logit_softcap)
+            h = h + L.attn_out(lp, o)
+            x = L.rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+            y, _ = self._ffn_or_moe(lp, x)
+            h = shard(h + y, "batch", "seq", "embed")
+            pad = [(0, 0), (0, max_len - s), (0, 0), (0, 0)]
+            k_full = shard(jnp.pad(k, pad).astype(jnp.bfloat16),
+                           "batch", "kv_seq", "kv", None)
+            v_full = shard(jnp.pad(v, pad).astype(jnp.bfloat16),
+                           "batch", "kv_seq", "kv", None)
+            return h, (k_full, v_full)
+
+        body = _remat(body, "none" if self.remat == "none" else "full")
+        h, (ks, vs) = jax.lax.scan(
+            body, h, (params["layers"], windows, thetas)
+        )
+        logits = self._logits(params["embed"], h[:, -1:, :])
+        return logits, {"k": ks, "v": vs}
+
+    def decode_step(self, params, token, cache, pos) -> Tuple[Array, PyTree]:
+        """token: (B,) int32; pos: scalar int32 (next position to fill)."""
+        cfg = self.cfg
+        h = self._embed(params["embed"], token[:, None])  # (B, 1, D)
+        positions = pos[None].astype(jnp.int32)  # (1,)
+        kv_pos = jnp.arange(cache["k"].shape[2], dtype=jnp.int32)
+        windows, thetas = self._layer_statics()
+
+        def body(h, xs):
+            lp, k_cache, v_cache, window, theta = xs
+            x = L.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+            q, k, v = L.attn_qkv(lp, x, self.dims)
+            q = L.rope(q, positions, theta)
+            k = L.rope(k, positions, theta)
+            k_cache = jax.lax.dynamic_update_slice(
+                k_cache, k.astype(jnp.bfloat16), (0, pos, 0, 0)
+            )
+            v_cache = jax.lax.dynamic_update_slice(
+                v_cache, v.astype(jnp.bfloat16), (0, pos, 0, 0)
+            )
+            o = L.attend(q, k_cache, v_cache, positions, kv_pos,
+                         causal=True, window=window,
+                         logit_softcap=cfg.logit_softcap)
+            h = h + L.attn_out(lp, o)
+            x = L.rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+            y, _ = self._ffn_or_moe(lp, x)
+            return h + y, (k_cache, v_cache)
+
+        h, (ks, vs) = jax.lax.scan(
+            body, h, (params["layers"], cache["k"], cache["v"], windows, thetas)
+        )
+        logits = self._logits(params["embed"], h)
+        return logits[:, 0, :], {"k": ks, "v": vs}
+
+
+# ====================================================================== #
+# RWKV-6 LM (attention-free)
+# ====================================================================== #
+
+
+class RwkvLM(BaseLM):
+    def _layer_init(self, key) -> dict:
+        cfg = self.cfg
+        p = {
+            "attn_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+            "ffn_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+        p.update(
+            rwkv_lib.rwkv_param_init(
+                key, cfg.d_model, cfg.num_heads, cfg.head_dim, cfg.d_ff
+            )
+        )
+        return p
+
+    def init(self, key) -> PyTree:
+        cfg = self.cfg
+        keys = jax.random.split(key, cfg.num_layers + 1)
+        stacked = _stack_layer_params(
+            [self._layer_init(k) for k in keys[: cfg.num_layers]]
+        )
+        return {"embed": self._embed_init(keys[-1]), "layers": stacked}
+
+    def _block(self, lp, h, state):
+        cfg = self.cfg
+        x = L.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        tm_state = None if state is None else {
+            "wkv": state["wkv"], "shift_tm": state["shift_tm"]
+        }
+        y, tm_new = rwkv_lib.rwkv_time_mix(
+            lp, x, cfg.num_heads, cfg.head_dim, tm_state, self.use_kernels
+        )
+        h = h + y
+        x = L.rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+        cm_state = None if state is None else {"shift_cm": state["shift_cm"]}
+        y, cm_shift = rwkv_lib.rwkv_channel_mix(
+            lp, x, cm_state if state is not None else None
+        )
+        h = shard(h + y, "batch", "seq", "embed")
+        new_state = {
+            "wkv": tm_new["wkv"],
+            "shift_tm": tm_new["shift_tm"],
+            "shift_cm": cm_shift,
+        }
+        return h, new_state
+
+    def forward(self, params, batch) -> Tuple[Array, Array]:
+        h = self._embed(params["embed"], batch["tokens"])
+
+        def body(h, lp):
+            h, _ = self._block(lp, h, None)
+            return h, None
+
+        body = _remat(body, self.remat)
+        h, _ = jax.lax.scan(body, h, params["layers"])
+        return self._logits(params["embed"], h), jnp.float32(0.0)
+
+    def init_cache(self, batch_size: int, max_len: int) -> PyTree:
+        cfg = self.cfg
+        lshape = (cfg.num_layers, batch_size)
+        return {
+            "wkv": jnp.zeros(
+                lshape + (cfg.num_heads, cfg.head_dim, cfg.head_dim),
+                jnp.float32,
+            ),
+            "shift_tm": jnp.zeros(lshape + (cfg.d_model,), jnp.float32),
+            "shift_cm": jnp.zeros(lshape + (cfg.d_model,), jnp.float32),
+        }
+
+    def _run_with_state(self, params, h, cache):
+        def body(h, xs):
+            lp, st = xs
+            h, new_st = self._block(lp, h, st)
+            return h, new_st
+
+        h, new_cache = jax.lax.scan(body, h, (params["layers"], cache))
+        return h, new_cache
+
+    def prefill(self, params, batch, cache) -> Tuple[Array, PyTree]:
+        h = self._embed(params["embed"], batch["tokens"])
+        h, new_cache = self._run_with_state(params, h, cache)
+        return self._logits(params["embed"], h[:, -1:, :]), new_cache
+
+    def decode_step(self, params, token, cache, pos) -> Tuple[Array, PyTree]:
+        h = self._embed(params["embed"], token[:, None])
+        h, new_cache = self._run_with_state(params, h, cache)
+        logits = self._logits(params["embed"], h)
+        return logits[:, 0, :], new_cache
+
+
+# ====================================================================== #
+# Hybrid (Griffin / recurrentgemma): periodic pattern "RRL"
+# ====================================================================== #
+
+
+class HybridLM(BaseLM):
+    """Scan over full pattern periods + unrolled tail layers."""
+
+    @property
+    def dims(self) -> L.AttnDims:
+        c = self.cfg
+        return L.AttnDims(c.d_model, c.num_heads, c.num_kv_heads, c.head_dim)
+
+    def _one_layer_init(self, key, ltype: str) -> dict:
+        cfg = self.cfg
+        ka, kf = jax.random.split(key)
+        p = {
+            "attn_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+            "ffn_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+        if ltype == "R":
+            p.update(
+                rglru_lib.rglru_param_init(
+                    ka, cfg.d_model, cfg.lru_width or cfg.d_model,
+                    cfg.conv_width,
+                )
+            )
+        else:
+            p.update(L.attn_param_init(ka, self.dims))
+        p.update(L.ffn_param_init(kf, cfg.d_model, cfg.d_ff, cfg.glu))
+        return p
+
+    def _split(self):
+        cfg = self.cfg
+        period = len(cfg.layer_pattern)
+        n_full = cfg.num_layers // period
+        tail = cfg.layer_types()[n_full * period:]
+        return period, n_full, tail
+
+    def init(self, key) -> PyTree:
+        cfg = self.cfg
+        period, n_full, tail = self._split()
+        pat = cfg.layer_pattern
+        keys = jax.random.split(key, n_full * period + len(tail) + 1)
+        periods = []
+        for i in range(n_full):
+            periods.append(
+                {
+                    f"l{j}": self._one_layer_init(keys[i * period + j], pat[j])
+                    for j in range(period)
+                }
+            )
+        params = {
+            "embed": self._embed_init(keys[-1]),
+            "periods": _stack_layer_params(periods),
+            "tail": [
+                self._one_layer_init(keys[n_full * period + j], t)
+                for j, t in enumerate(tail)
+            ],
+        }
+        return params
+
+    def _attn_layer(self, lp, h, positions, k_cache=None, v_cache=None,
+                    cache_positions=None, pos=None):
+        """Local-attention layer; rolling window cache when serving.
+
+        Prefill (static seq len > 1) attends over the full sequence and then
+        writes only the trailing window into the rolling cache; decode
+        updates one slot (slot = position % window)."""
+        cfg = self.cfg
+        x = L.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(lp, x, self.dims)
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+        window = jnp.int32(cfg.window_size or L.GLOBAL_WINDOW)
+        if k_cache is None:
+            o = L.attend(q, k, v, positions, positions,
+                         causal=True, window=window)
+            new_cache = None
+        elif q.shape[1] > 1:  # prefill into a rolling cache
+            o = L.attend(q, k, v, positions, positions,
+                         causal=True, window=window)
+            k_roll, v_roll, p_roll = _roll_window_cache(
+                k, v, positions, k_cache.shape[1]
+            )
+            new_cache = (k_roll, v_roll, p_roll)
+        else:
+            w = k_cache.shape[1]
+            slot = pos % w
+            k_cache = jax.lax.dynamic_update_slice(
+                k_cache, k.astype(jnp.bfloat16), (0, slot, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                v_cache, v.astype(jnp.bfloat16), (0, slot, 0, 0))
+            cache_positions = jax.lax.dynamic_update_slice(
+                cache_positions, positions[None, :].astype(jnp.int32),
+                (0, slot))
+            o = L.attention_scores(
+                q, k_cache, v_cache, positions, cache_positions[0],
+                causal=True, window=window,
+                k_valid_len=None,
+            )
+            new_cache = (k_cache, v_cache, cache_positions)
+        h = h + L.attn_out(lp, o)
+        return h, new_cache
+
+    def _layer(self, lp, ltype, h, positions, state=None, pos=None):
+        cfg = self.cfg
+        if ltype == "R":
+            x = L.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+            y, new_state = rglru_lib.rglru_block(
+                lp, x, state, self.use_kernels
+            )
+            h = h + y
+        else:
+            if state is None:
+                h, new_state = self._attn_layer(lp, h, positions)
+            else:
+                h, new_state = self._attn_layer(
+                    lp, h, positions,
+                    k_cache=state["k"], v_cache=state["v"],
+                    cache_positions=state["pos"], pos=pos,
+                )
+                new_state = {"k": new_state[0], "v": new_state[1],
+                             "pos": new_state[2]}
+        x = L.rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+        h = shard(h + L.ffn_apply(lp, x, cfg.act, cfg.glu),
+                  "batch", "seq", "embed")
+        return h, new_state
+
+    def forward(self, params, batch) -> Tuple[Array, Array]:
+        cfg = self.cfg
+        pat = cfg.layer_pattern
+        period, n_full, tail = self._split()
+        h = self._embed(params["embed"], batch["tokens"])
+        positions = jnp.arange(h.shape[1], dtype=jnp.int32)
+
+        def body(h, plp):
+            for j, t in enumerate(pat):
+                h, _ = self._layer(plp[f"l{j}"], t, h, positions)
+            return h, None
+
+        body = _remat(body, self.remat)
+        h, _ = jax.lax.scan(body, h, params["periods"])
+        for lp, t in zip(params["tail"], tail):
+            h, _ = self._layer(lp, t, h, positions)
+        return self._logits(params["embed"], h), jnp.float32(0.0)
+
+    # ---- serving ------------------------------------------------------ #
+    def _empty_states(self, batch_size: int):
+        """Per-layer-type state prototypes."""
+        cfg = self.cfg
+        w = cfg.lru_width or cfg.d_model
+        win = cfg.window_size
+        r_state = lambda: {
+            "h": jnp.zeros((batch_size, w), jnp.float32),
+            "conv": jnp.zeros((batch_size, cfg.conv_width - 1, w), jnp.float32),
+        }
+        a_state = lambda: {
+            "k": jnp.zeros((batch_size, win, cfg.num_kv_heads, cfg.head_dim),
+                           jnp.bfloat16),
+            "v": jnp.zeros((batch_size, win, cfg.num_kv_heads, cfg.head_dim),
+                           jnp.bfloat16),
+            "pos": -jnp.ones((1, win), jnp.int32),
+        }
+        return r_state, a_state
+
+    def init_cache(self, batch_size: int, max_len: int) -> PyTree:
+        cfg = self.cfg
+        period, n_full, tail = self._split()
+        r_state, a_state = self._empty_states(batch_size)
+        mk = lambda t: r_state() if t == "R" else a_state()
+        periods = [
+            {f"l{j}": mk(t) for j, t in enumerate(cfg.layer_pattern)}
+            for _ in range(n_full)
+        ]
+        return {
+            "periods": jax.tree.map(
+                lambda *xs: jnp.stack(xs, 0), *periods
+            ) if n_full > 1 else jax.tree.map(lambda x: x[None], periods[0]),
+            "tail": [mk(t) for t in tail],
+        }
+
+    def _run_serving(self, params, h, cache, positions, pos):
+        cfg = self.cfg
+        pat = cfg.layer_pattern
+        period, n_full, tail = self._split()
+
+        def body(h, xs):
+            plp, pst = xs
+            new_states = {}
+            for j, t in enumerate(pat):
+                h, st = self._layer(
+                    plp[f"l{j}"], t, h, positions, pst[f"l{j}"], pos
+                )
+                new_states[f"l{j}"] = st
+            return h, new_states
+
+        h, new_periods = jax.lax.scan(
+            body, h, (params["periods"], cache["periods"])
+        )
+        new_tail = []
+        for lp, t, st in zip(params["tail"], tail, cache["tail"]):
+            h, st_new = self._layer(lp, t, h, positions, st, pos)
+            new_tail.append(st_new)
+        return h, {"periods": new_periods, "tail": new_tail}
+
+    def prefill(self, params, batch, cache) -> Tuple[Array, PyTree]:
+        h = self._embed(params["embed"], batch["tokens"])
+        positions = jnp.arange(h.shape[1], dtype=jnp.int32)
+        h, new_cache = self._run_serving(
+            params, h, cache, positions, jnp.int32(0)
+        )
+        return self._logits(params["embed"], h[:, -1:, :]), new_cache
+
+    def decode_step(self, params, token, cache, pos) -> Tuple[Array, PyTree]:
+        h = self._embed(params["embed"], token[:, None])
+        positions = pos[None].astype(jnp.int32)
+        h, new_cache = self._run_serving(params, h, cache, positions, pos)
+        logits = self._logits(params["embed"], h)
+        return logits[:, 0, :], new_cache
+
+
+# prefill for the hybrid rolling cache writes only the last `window` keys; we
+# realize that by running the full sequence statefully (the recurrence needs
+# every token anyway) and rolling attention caches inside _attn_layer via
+# dynamic updates per sequence... for whole-sequence prefill we instead write
+# the cache from the final window slice:
+
+
+def _roll_window_cache(k, v, positions, window):
+    """Take the last `window` keys of a prefill and place them at their
+    rolling slots (slot = position % window)."""
+    s = k.shape[1]
+    w = window
+    take = min(s, w)
+    ks = k[:, s - take:, :, :]
+    vs = v[:, s - take:, :, :]
+    pos_tail = positions[s - take:]
+    slots = pos_tail % w
+    b = k.shape[0]
+    k_out = jnp.zeros((b, w) + k.shape[2:], jnp.bfloat16)
+    v_out = jnp.zeros((b, w) + v.shape[2:], jnp.bfloat16)
+    p_out = -jnp.ones((1, w), jnp.int32)
+    k_out = k_out.at[:, slots].set(ks.astype(jnp.bfloat16))
+    v_out = v_out.at[:, slots].set(vs.astype(jnp.bfloat16))
+    p_out = p_out.at[0, slots].set(pos_tail.astype(jnp.int32))
+    return k_out, v_out, p_out
+
+
+# ====================================================================== #
+# Encoder-decoder (whisper)
+# ====================================================================== #
+
+
+class EncDecLM(BaseLM):
+    @property
+    def dims(self) -> L.AttnDims:
+        c = self.cfg
+        return L.AttnDims(c.d_model, c.num_heads, c.num_kv_heads, c.head_dim)
+
+    def _enc_layer_init(self, key):
+        ka, kf = jax.random.split(key)
+        cfg = self.cfg
+        p = {
+            "attn_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+            "ffn_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+            **L.attn_param_init(ka, self.dims),
+        }
+        p.update(L.ffn_param_init(kf, cfg.d_model, cfg.d_ff, cfg.glu))
+        return p
+
+    def _dec_layer_init(self, key):
+        ka, kc, kf = jax.random.split(key, 3)
+        cfg = self.cfg
+        p = {
+            "attn_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+            "cross_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+            "ffn_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+            **L.attn_param_init(ka, self.dims),
+        }
+        cross = L.attn_param_init(kc, self.dims)
+        p.update({f"x_{k}": v for k, v in cross.items()})
+        p.update(L.ffn_param_init(kf, cfg.d_model, cfg.d_ff, cfg.glu))
+        return p
+
+    def init(self, key) -> PyTree:
+        cfg = self.cfg
+        ks = jax.random.split(key, cfg.encoder_layers + cfg.num_layers + 2)
+        enc = _stack_layer_params(
+            [self._enc_layer_init(k) for k in ks[: cfg.encoder_layers]]
+        )
+        dec = _stack_layer_params(
+            [
+                self._dec_layer_init(k)
+                for k in ks[cfg.encoder_layers: cfg.encoder_layers + cfg.num_layers]
+            ]
+        )
+        return {
+            "embed": self._embed_init(ks[-1]),
+            "enc_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+            "encoder": enc,
+            "decoder": dec,
+        }
+
+    def _encode(self, params, frames: Array) -> Array:
+        """frames: (B, F, D) stub embeddings (conv frontend output)."""
+        cfg = self.cfg
+        h = L.cast(frames)
+        positions = jnp.arange(h.shape[1], dtype=jnp.int32)
+
+        def body(h, lp):
+            x = L.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+            q, k, v = L.attn_qkv(lp, x, self.dims)
+            o = L.attend(q, k, v, positions, positions, causal=False)
+            h = h + L.attn_out(lp, o)
+            x = L.rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+            h = h + L.ffn_apply(lp, x, cfg.act, cfg.glu)
+            return h, None
+
+        body = _remat(body, self.remat)
+        h, _ = jax.lax.scan(body, h, params["encoder"])
+        return L.rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+    def _dec_block(self, lp, h, enc_out, positions, k_cache=None,
+                   v_cache=None, pos=None):
+        cfg = self.cfg
+        kv_pos = None
+        x = L.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(lp, x, self.dims)
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+        if k_cache is not None:
+            k_cache = jax.lax.dynamic_update_slice(
+                k_cache, k.astype(jnp.bfloat16), (0, pos, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                v_cache, v.astype(jnp.bfloat16), (0, pos, 0, 0))
+            kv_pos = jnp.arange(k_cache.shape[1], dtype=jnp.int32)
+            o = L.attend(q, k_cache, v_cache, positions, kv_pos, causal=True)
+            kv_out = (k_cache, v_cache)
+        else:
+            o = L.attend(q, k, v, positions, positions, causal=True)
+            kv_out = (k, v)  # prefill caches exactly what attention used
+        h = h + L.attn_out(lp, o)
+        # cross attention
+        x = L.rms_norm(h, lp["cross_norm"], cfg.norm_eps)
+        xq = (x @ L.cast(lp["x_wq"])).reshape(
+            x.shape[0], x.shape[1], cfg.num_heads, cfg.head_dim)
+        xk = (enc_out @ L.cast(lp["x_wk"])).reshape(
+            enc_out.shape[0], enc_out.shape[1], cfg.num_kv_heads, cfg.head_dim)
+        xv = (enc_out @ L.cast(lp["x_wv"])).reshape(
+            enc_out.shape[0], enc_out.shape[1], cfg.num_kv_heads, cfg.head_dim)
+        epos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+        o = L.attend(xq, xk, xv, positions, epos, causal=False)
+        h = h + o.reshape(x.shape[0], x.shape[1], -1) @ L.cast(lp["x_wo"])
+        x = L.rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+        h = h + L.ffn_apply(lp, x, cfg.act, cfg.glu)
+        return h, kv_out
+
+    def forward(self, params, batch) -> Tuple[Array, Array]:
+        enc_out = self._encode(params, batch["frames"])
+        h = self._embed(params["embed"], batch["tokens"])
+        positions = jnp.arange(h.shape[1], dtype=jnp.int32)
+
+        def body(h, lp):
+            h, _ = self._dec_block(lp, h, enc_out, positions)
+            return h, None
+
+        body = _remat(body, self.remat)
+        h, _ = jax.lax.scan(body, h, params["decoder"])
+        return self._logits(params["embed"], h), jnp.float32(0.0)
+
+    def init_cache(self, batch_size: int, max_len: int) -> PyTree:
+        cfg = self.cfg
+        shape = (cfg.num_layers, batch_size, max_len,
+                 cfg.num_kv_heads, cfg.head_dim)
+        return {
+            "k": shard(jnp.zeros(shape, jnp.bfloat16),
+                       None, "batch", "kv_seq", "kv", None),
+            "v": shard(jnp.zeros(shape, jnp.bfloat16),
+                       None, "batch", "kv_seq", "kv", None),
+            "enc_out": jnp.zeros(
+                (batch_size, cfg.encoder_seq, cfg.d_model), jnp.bfloat16
+            ),
+        }
+
+    def prefill(self, params, batch, cache) -> Tuple[Array, PyTree]:
+        cfg = self.cfg
+        enc_out = self._encode(params, batch["frames"])
+        h = self._embed(params["embed"], batch["tokens"])
+        s = h.shape[1]
+        max_len = cache["k"].shape[2]
+        positions = jnp.arange(s, dtype=jnp.int32)
+
+        def body(h, lp):
+            h, (k, v) = self._dec_block(lp, h, enc_out, positions)
+            pad = [(0, 0), (0, max_len - s), (0, 0), (0, 0)]
+            return h, (jnp.pad(k, pad).astype(jnp.bfloat16),
+                       jnp.pad(v, pad).astype(jnp.bfloat16))
+
+        h, (ks, vs) = jax.lax.scan(body, h, params["decoder"])
+        logits = self._logits(params["embed"], h[:, -1:, :])
+        return logits, {"k": ks, "v": vs, "enc_out": enc_out}
+
+    def decode_step(self, params, token, cache, pos) -> Tuple[Array, PyTree]:
+        h = self._embed(params["embed"], token[:, None])
+        positions = pos[None].astype(jnp.int32)
+        enc_out = L.cast(cache["enc_out"])
+
+        def body(h, xs):
+            lp, k_cache, v_cache = xs
+            h, (k_new, v_new) = self._dec_block(
+                lp, h, enc_out, positions, k_cache, v_cache, pos
+            )
+            return h, (k_new, v_new)
+
+        h, (ks, vs) = jax.lax.scan(
+            body, h, (params["decoder"], cache["k"], cache["v"])
+        )
+        logits = self._logits(params["embed"], h)
+        return logits[:, 0, :], {"k": ks, "v": vs, "enc_out": cache["enc_out"]}
+
+
+# ====================================================================== #
+# factory + parameter accounting
+# ====================================================================== #
+
+
+def build_model(cfg: ModelConfig, use_kernels: bool = False,
+                remat: str = "full") -> BaseLM:
+    types = set(cfg.layer_types())
+    if cfg.is_encdec:
+        cls = EncDecLM
+    elif types == {"W"}:
+        cls = RwkvLM
+    elif "R" in types:
+        cls = HybridLM
+    else:
+        cls = LM
+    return cls(cfg=cfg, use_kernels=use_kernels, remat=remat)
+
+
+def param_shapes(model: BaseLM, key=None) -> PyTree:
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return jax.eval_shape(model.init, key)
+
+
+def count_params(model: BaseLM) -> int:
+    tree = param_shapes(model)
+    return sum(int(math.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def count_active_params(model: BaseLM) -> int:
+    """Per-token activated params (MoE experts scaled by top_k / E)."""
+    cfg = model.cfg
+    tree = param_shapes(model)
+    total = 0
+
+    def walk(path, leaf):
+        nonlocal total
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        n = int(math.prod(leaf.shape))
+        if name.startswith("we_") and cfg.num_experts:
+            n = n * cfg.top_k // cfg.num_experts
+        total += n
+        return leaf
+
+    jax.tree_util.tree_map_with_path(walk, tree)
+    return total

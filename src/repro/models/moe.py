@@ -1,0 +1,167 @@
+"""Mixture-of-Experts FFN (deepseek-moe fine-grained, phi3.5-moe top-2).
+
+Dense-dispatch formulation (MaxText-style): tokens are scattered to experts
+through a (tokens, experts, capacity) combine tensor built from pure einsums
+and one-hots — no data-dependent scatter/gather, so XLA SPMD partitions it
+cleanly: tokens shard over (pod, data), experts over model. The expert-
+parallel communication (all-to-all equivalent) materializes as the
+contraction over the token dim in the dispatch einsum plus the expert-sharded
+FFN matmuls.
+
+Capacity dropping: each expert processes at most
+``capacity = ceil(tokens_per_shard * top_k / E) * capacity_factor`` tokens;
+overflow tokens fall back to (gate-weighted) zero contribution, standard for
+TPU MoE. The router runs in fp32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.layers import activation, cast, dense_init
+
+Array = jax.Array
+
+
+def moe_param_init(key, d_model: int, num_experts: int, d_ff: int,
+                   num_shared: int, glu: bool) -> dict:
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": dense_init(ks[0], (d_model, num_experts), scale=0.02),
+        "we_up": dense_init(ks[1], (num_experts, d_model, d_ff)),
+        "we_down": dense_init(ks[2], (num_experts, d_ff, d_model)),
+    }
+    if glu:
+        p["we_gate"] = dense_init(ks[3], (num_experts, d_model, d_ff))
+    if num_shared:
+        f_shared = num_shared * d_ff
+        p["w_up"] = dense_init(ks[4], (d_model, f_shared))
+        p["w_down"] = dense_init(ks[5], (f_shared, d_model))
+        if glu:
+            p["w_gate"] = dense_init(
+                jax.random.fold_in(ks[5], 1), (d_model, f_shared)
+            )
+    return p
+
+
+def capacity_for(tokens: int, num_experts: int, top_k: int,
+                 capacity_factor: float) -> int:
+    cap = int(math.ceil(tokens * top_k / num_experts * capacity_factor))
+    return max(8, -(-cap // 8) * 8)  # round up to 8 for TPU-friendly tiling
+
+
+#: token groups for local-capacity dispatch; matches the production batch
+#: sharding (pod 2 x data 16) so per-group counting is per-shard counting.
+DISPATCH_GROUPS = 32
+
+#: §Perf iteration knob: when set, group size targets ~this many tokens.
+#: The dispatch/combine einsums cost 2*T*E*C*D with C ~ Tg*top_k/E — LINEAR
+#: in the group size — so shrinking Tg from 32k to 2k cuts dispatch FLOPs
+#: ~16x while keeping groups batch-shard-aligned (multiples of 32).
+DISPATCH_TARGET_TG = None
+
+
+def _num_groups(t: int) -> int:
+    if DISPATCH_TARGET_TG:
+        g = min(t, max(DISPATCH_GROUPS, t // DISPATCH_TARGET_TG))
+    else:
+        g = min(DISPATCH_GROUPS, t)
+    while t % g:
+        g -= 1
+    return g
+
+
+def moe_ffn(
+    params: dict,
+    x: Array,
+    *,
+    num_experts: int,
+    top_k: int,
+    capacity_factor: float,
+    act: str,
+    glu: bool,
+) -> Tuple[Array, Array]:
+    """Apply the MoE FFN. x: (B, S, D) -> (y, aux_loss).
+
+    Grouped local-capacity dispatch: tokens are split into G groups aligned
+    with the batch sharding; expert positions are counted *within a group*
+    and each expert's capacity is per-group. The (G, Tg, E, Cg) combine
+    tensor shards over (batch-axes, -, model, -), all dispatch/expert einsums
+    are shard-local, and the only communication is the model-axis all-reduce
+    of the combined output — identical in structure to a TP FFN. (A global-
+    capacity formulation materializes a C ~ T_global dimension on every
+    device: 16x the memory at 1M-token steps.)
+    """
+    b, s, d = x.shape
+    t = b * s
+    g = _num_groups(t)
+    tg = t // g
+    xf = x.reshape(g, tg, d)
+    xf = shard(xf, "batch", None, "embed")
+
+    # --- routing (fp32) ---
+    logits = xf.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, Tg, E)
+    gates, ids = jax.lax.top_k(probs, top_k)  # (G, Tg, K)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)  # renormalize
+
+    # --- load-balancing aux loss (Switch-style) ---
+    density = jnp.mean(jax.nn.one_hot(ids[..., 0], num_experts), axis=(0, 1))
+    router_mean = jnp.mean(probs, axis=(0, 1))
+    aux = num_experts * jnp.sum(density * router_mean)
+
+    # --- per-group positions within experts ---
+    capacity = capacity_for(tg, num_experts, top_k, capacity_factor)
+    oh_e = jax.nn.one_hot(ids, num_experts, dtype=jnp.int32)  # (G, Tg, K, E)
+    flat = oh_e.reshape(g, tg * top_k, num_experts)
+    pos_flat = jnp.cumsum(flat, axis=1) - 1  # (G, Tg*K, E)
+    pos = jnp.take_along_axis(
+        pos_flat.reshape(g, tg, top_k, num_experts),
+        ids[..., None],
+        axis=-1,
+    )[..., 0]  # (G, Tg, K)
+    keep = pos < capacity
+
+    # --- combine tensor (G, Tg, E, Cg), gate-weighted ---
+    combine = jnp.zeros((g, tg, num_experts, capacity), jnp.bfloat16)
+    for k in range(top_k):  # static unroll avoids a (…, K, E, C) intermediate
+        e_k = jax.nn.one_hot(ids[..., k], num_experts, dtype=jnp.bfloat16)
+        c_k = jax.nn.one_hot(pos[..., k], capacity, dtype=jnp.bfloat16)
+        w_k = (gates[..., k] * keep[..., k]).astype(jnp.bfloat16)
+        combine = combine + jnp.einsum(
+            "gte,gtc->gtec", e_k * w_k[..., None], c_k
+        )
+    combine = shard(combine, "batch", None, "expert", "cap")
+    dispatch = (combine > 0).astype(jnp.bfloat16)
+
+    # --- expert computation (batched over groups; all shard-local) ---
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, cast(xf))
+    xe = shard(xe, "batch", "expert", "cap", "embed")
+    up = jnp.einsum("gecd,edf->gecf", xe, cast(params["we_up"]))
+    if glu:
+        gate = activation(
+            jnp.einsum("gecd,edf->gecf", xe, cast(params["we_gate"])), act
+        )
+        h = gate * up
+    else:
+        h = activation(up, act)
+    h = shard(h, "batch", "expert", "cap", "moe_mlp")
+    ye = jnp.einsum("gecf,efd->gecd", h, cast(params["we_down"]))
+    # contraction over e (model-sharded) => the one all-reduce, like TP FFN
+    y = jnp.einsum("gtec,gecd->gtd", combine, ye)
+
+    # --- shared experts (deepseek): dense FFN over all tokens ---
+    if "w_up" in params:
+        up_s = cast(xf) @ cast(params["w_up"])
+        up_s = shard(up_s, "batch", None, "mlp")
+        if glu:
+            h_s = activation(cast(xf) @ cast(params["w_gate"]), act) * up_s
+        else:
+            h_s = activation(up_s, act)
+        y = y + h_s @ cast(params["w_down"])
+
+    return y.reshape(b, s, d).astype(x.dtype), aux

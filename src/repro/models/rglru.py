@@ -1,0 +1,111 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+    r_t = sigmoid(z_t @ W_a + b_a)          recurrence gate
+    i_t = sigmoid(z_t @ W_x + b_x)          input gate
+    a_t = exp(-c * softplus(lam) * r_t)     c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * z_t)
+
+where z is the input branch after a width-``conv_width`` causal temporal
+conv. The recurrence is elementwise-diagonal, hence expressible as an
+associative scan (parallel depth log T); the Pallas kernel blocks it over
+time with a carried state. Decode carries (h (B,W), conv tail (B,cw-1,W)).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import cast, dense_init
+
+Array = jax.Array
+C_FACTOR = 8.0
+
+
+def rglru_param_init(key, d_model: int, width: int, conv_width: int) -> dict:
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": dense_init(ks[0], (d_model, width)),
+        "w_gate_br": dense_init(ks[1], (d_model, width)),
+        "conv_w": dense_init(ks[2], (conv_width, width), scale=0.1),
+        "conv_b": jnp.zeros((width,), jnp.float32),
+        "w_a": dense_init(ks[3], (width, width), scale=0.01),
+        "w_x": dense_init(ks[4], (width, width), scale=0.01),
+        "gate_b": jnp.zeros((2, width), jnp.float32),
+        # lam init so a^c in (0.9, 0.999) at r=1 (Griffin Sec. 2.4)
+        "lam": jnp.log(jnp.expm1(-jnp.log(0.97) / C_FACTOR))
+        * jnp.ones((width,), jnp.float32),
+        "w_out": dense_init(ks[5], (width, d_model)),
+    }
+
+
+def causal_conv1d(z: Array, w: Array, b: Array,
+                  tail: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Depthwise causal temporal conv. z: (B, T, W); w: (cw, W).
+
+    ``tail``: (B, cw-1, W) carried context from previous tokens (decode).
+    Returns (out, new_tail).
+    """
+    cw = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((z.shape[0], cw - 1, z.shape[2]), z.dtype)
+    zp = jnp.concatenate([tail, z], axis=1)  # (B, T+cw-1, W)
+    out = sum(
+        zp[:, i : i + z.shape[1], :] * w[i][None, None, :] for i in range(cw)
+    )
+    return out + b, zp[:, -(cw - 1):, :] if cw > 1 else tail
+
+
+def rglru_scan_ref(a: Array, x_in: Array, h0: Array) -> Tuple[Array, Array]:
+    """Diagonal linear recurrence h_t = a_t*h_{t-1} + x_t via associative scan.
+
+    a, x_in: (B, T, W); h0: (B, W). Returns (h (B,T,W), h_last)."""
+
+    def combine(c1, c2):
+        a1, x1 = c1
+        a2, x2 = c2
+        return a1 * a2, a2 * x1 + x2
+
+    # fold h0 into the first step
+    x_in = x_in.at[:, 0, :].add(a[:, 0, :] * h0)
+    a_s, h = jax.lax.associative_scan(combine, (a, x_in), axis=1)
+    return h, h[:, -1, :]
+
+
+def rglru_block(
+    params: dict,
+    x: Array,
+    state: Optional[dict] = None,
+    use_kernel: bool = False,
+) -> Tuple[Array, dict]:
+    """Full recurrent block: gate branch x conv+RG-LRU branch. x: (B,T,D)."""
+    xf = x.astype(jnp.float32)
+    gate = jax.nn.gelu(xf @ params["w_gate_br"], approximate=True)
+
+    z = xf @ params["w_in"]
+    tail = None if state is None else state["conv"]
+    z, new_tail = causal_conv1d(z, params["conv_w"], params["conv_b"], tail)
+
+    r = jax.nn.sigmoid(z @ params["w_a"] + params["gate_b"][0])
+    i = jax.nn.sigmoid(z @ params["w_x"] + params["gate_b"][1])
+    log_a = -C_FACTOR * jax.nn.softplus(params["lam"]) * r  # (B, T, W)
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed in log space for numerical stability
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    gated_in = beta * (i * z)
+
+    h0 = (
+        jnp.zeros((x.shape[0], z.shape[-1]), jnp.float32)
+        if state is None
+        else state["h"]
+    )
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        h, h_last = kops.rglru_scan(a, gated_in, h0)
+    else:
+        h, h_last = rglru_scan_ref(a, gated_in, h0)
+
+    out = (h * gate) @ params["w_out"]
+    return out.astype(x.dtype), {"h": h_last, "conv": new_tail}

@@ -1,0 +1,155 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): attention-free time mixing with
+data-dependent decay, plus the squared-ReLU channel-mix FFN.
+
+Per head (key dim I, value dim J), with state S in R^{I x J}:
+
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T,   w_t = exp(-exp(decay_t))
+
+``decay_t`` is data-dependent (the defining Finch feature): a low-rank MLP of
+the token-shift mix. The sequential form here is the reference; the Pallas
+kernel (`repro.kernels.rwkv6_scan`) computes the same recurrence chunkwise.
+
+State carried for decode: (wkv_state (B,H,I,J), shift_tm (B,D), shift_cm (B,D)).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import cast, dense_init, rms_norm
+
+Array = jax.Array
+LORA_DIM = 64
+
+
+def rwkv_param_init(key, d_model: int, num_heads: int, head_dim: int,
+                    d_ff: int) -> dict:
+    h = num_heads * head_dim
+    ks = jax.random.split(key, 12)
+    return {
+        # token-shift mixing coefficients for (r, k, v, g, w)
+        "mix_base": 0.5 * jnp.ones((5, d_model), jnp.float32),
+        "mix_a": dense_init(ks[0], (d_model, LORA_DIM), scale=0.01),
+        "mix_b": dense_init(ks[1], (5, LORA_DIM, d_model), scale=0.01),
+        # projections
+        "w_r": dense_init(ks[2], (d_model, h)),
+        "w_k": dense_init(ks[3], (d_model, h)),
+        "w_v": dense_init(ks[4], (d_model, h)),
+        "w_g": dense_init(ks[5], (d_model, h)),
+        "w_o": dense_init(ks[6], (h, d_model)),
+        # data-dependent decay (low-rank) + per-channel base + bonus u
+        "decay_base": -6.0 * jnp.ones((h,), jnp.float32),
+        "decay_a": dense_init(ks[7], (d_model, LORA_DIM), scale=0.01),
+        "decay_b": dense_init(ks[8], (LORA_DIM, h), scale=0.01),
+        "u": 0.5 * jnp.ones((num_heads, head_dim), jnp.float32),
+        "ln_x": jnp.zeros((h,), jnp.float32),  # per-head group norm scale
+        # channel mix
+        "cm_mix": 0.5 * jnp.ones((d_model,), jnp.float32),
+        "cm_k": dense_init(ks[9], (d_model, d_ff)),
+        "cm_v": dense_init(ks[10], (d_ff, d_model)),
+    }
+
+
+def _token_shift(x: Array, prev: Optional[Array]) -> Array:
+    """x_{t-1} with the sequence-start slot filled from carried state."""
+    first = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None, :]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def wkv_scan_ref(r: Array, k: Array, v: Array, w: Array, u: Array,
+                 state: Array) -> Tuple[Array, Array]:
+    """Sequential WKV recurrence (the oracle the Pallas kernel must match).
+
+    r,k,v,w: (B, T, H, D); u: (H, D); state: (B, H, D, D) -> (y, new_state).
+    """
+
+    def step(s, inputs):
+        r_t, k_t, v_t, w_t = inputs  # (B, H, D)
+        kv = jnp.einsum("bhi,bhj->bhij", k_t, v_t)
+        y_t = jnp.einsum("bhi,bhij->bhj", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., None] * s + kv
+        return s, y_t
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    new_state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), new_state
+
+
+def rwkv_time_mix(
+    params: dict,
+    x: Array,
+    num_heads: int,
+    head_dim: int,
+    state: Optional[dict] = None,
+    use_kernel: bool = False,
+) -> Tuple[Array, dict]:
+    """x: (B, T, D) -> (out, new_state). fp32 recurrence for stability."""
+    b, t, d = x.shape
+    hd = num_heads * head_dim
+    xf = x.astype(jnp.float32)
+    prev_tm = None if state is None else state["shift_tm"]
+    xs = _token_shift(xf, prev_tm)  # (B, T, D)
+    delta = xs - xf
+
+    # data-dependent 5-way mixing (ddlerp)
+    base = xf + delta * params["mix_base"][:, None, None, :]  # (5, B, T, D)
+    lora = jnp.einsum(
+        "btd,dl,nlm->nbtm", jnp.tanh(xf @ params["mix_a"]),
+        jnp.eye(LORA_DIM, dtype=jnp.float32), params["mix_b"]
+    )
+    mixed = base + delta[None] * lora  # (5, B, T, D)
+    xr, xk, xv, xg, xw = mixed
+
+    r = (xr @ params["w_r"]).reshape(b, t, num_heads, head_dim)
+    k = (xk @ params["w_k"]).reshape(b, t, num_heads, head_dim)
+    v = (xv @ params["w_v"]).reshape(b, t, num_heads, head_dim)
+    g = jax.nn.silu(xg @ params["w_g"])  # (B, T, HD)
+
+    decay = params["decay_base"] + jnp.tanh(xw @ params["decay_a"]) @ params[
+        "decay_b"
+    ]  # (B, T, HD)
+    w = jnp.exp(-jnp.exp(decay)).reshape(b, t, num_heads, head_dim)
+
+    if state is None:
+        from repro.distributed.sharding import vary_for_manual
+
+        # zeros carry must match the (possibly manual-axis-varying) scan body
+        s0 = vary_for_manual(
+            jnp.zeros((b, num_heads, head_dim, head_dim), jnp.float32)
+        )
+    else:
+        s0 = state["wkv"]
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        y, s1 = kops.rwkv6_scan(r, k, v, w, params["u"], s0)
+    else:
+        y, s1 = wkv_scan_ref(r, k, v, w, params["u"], s0)
+
+    # per-head group norm + output gate
+    y = y.reshape(b, t, hd)
+    yh = y.reshape(b, t, num_heads, head_dim)
+    mu = jnp.mean(yh, axis=-1, keepdims=True)
+    var = jnp.var(yh, axis=-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 1e-5)
+    y = yh.reshape(b, t, hd) * (1.0 + params["ln_x"])
+    out = (y * g) @ params["w_o"]
+
+    new_state = {"wkv": s1, "shift_tm": xf[:, -1, :]}
+    return out.astype(x.dtype), new_state
+
+
+def rwkv_channel_mix(
+    params: dict, x: Array, state: Optional[dict] = None
+) -> Tuple[Array, Array]:
+    """Squared-ReLU channel mix with token shift. x: (B, T, D)."""
+    xf = x.astype(jnp.float32)
+    prev = None if state is None else state["shift_cm"]
+    xs = _token_shift(xf, prev)
+    xk = xf + (xs - xf) * params["cm_mix"]
+    h = jax.nn.relu(xk @ params["cm_k"])
+    out = (h * h) @ params["cm_v"]
+    return out.astype(x.dtype), xf[:, -1, :]

@@ -1,0 +1,9 @@
+"""Optimizers and LR schedules."""
+from repro.optim.adamw import (
+    AdamWConfig,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    init_opt_state,
+    lr_at,
+)

@@ -1,0 +1,1 @@
+"""Training / serving loops and steps."""

@@ -1,0 +1,81 @@
+"""Serving steps: batched prefill + single-token decode under the mesh.
+
+``decode_*`` / ``long_*`` dry-run shapes lower these (one new token against
+a KV cache / recurrent state of the configured context length), not
+train_step. Sampling is greedy/temperature on fp32 logits.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import use_sharding
+from repro.models.model import BaseLM
+
+PyTree = Any
+
+
+def make_prefill(model: BaseLM, mesh=None, rules: Optional[dict] = None):
+    def prefill(params, batch, cache):
+        def run():
+            return model.prefill(params, batch, cache)
+
+        if mesh is not None:
+            with use_sharding(mesh, rules):
+                return run()
+        return run()
+
+    return prefill
+
+
+def make_decode_step(model: BaseLM, mesh=None, rules: Optional[dict] = None,
+                     temperature: float = 0.0):
+    def decode(params, token, cache, pos, key):
+        def run():
+            logits, new_cache = model.decode_step(params, token, cache, pos)
+            if temperature > 0:
+                nxt = jax.random.categorical(key, logits / temperature, axis=-1)
+            else:
+                nxt = jnp.argmax(logits, axis=-1)
+            return nxt.astype(jnp.int32), new_cache
+
+        if mesh is not None:
+            with use_sharding(mesh, rules):
+                return run()
+        return run()
+
+    return decode
+
+
+def generate(
+    model: BaseLM,
+    params: PyTree,
+    prompt: jax.Array,
+    max_new_tokens: int,
+    max_len: Optional[int] = None,
+    extra_batch: Optional[dict] = None,
+    temperature: float = 0.0,
+    seed: int = 0,
+) -> jax.Array:
+    """Convenience host-loop generation (examples / tests; not the perf path)."""
+    b, s = prompt.shape
+    max_len = max_len or (s + max_new_tokens)
+    prefix = getattr(model.cfg, "num_prefix_tokens", 0) or 0
+    if model.cfg.frontend != "vision_stub":
+        prefix = 0
+    cache = model.init_cache(b, max_len + prefix)
+    batch = {"tokens": prompt, **(extra_batch or {})}
+    prefill = jax.jit(make_prefill(model))
+    decode = jax.jit(make_decode_step(model, temperature=temperature))
+    logits, cache = prefill(params, batch, cache)
+    tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+    out = [tok]
+    key = jax.random.PRNGKey(seed)
+    for i in range(max_new_tokens - 1):
+        key, sub = jax.random.split(key)
+        tok, cache = decode(params, tok, cache, jnp.int32(prefix + s + i), sub)
+        out.append(tok)
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,149 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train-gradient step + one prefill/decode step on CPU. Asserts shapes and
+finiteness. The FULL configs are exercised only via the dry-run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models.config import reduce_for_smoke
+from repro.models.model import build_model, count_active_params, count_params
+
+ARCH_IDS = sorted(ARCHS)
+
+
+def _batch_for(cfg, rng, batch=2, seq=16):
+    tokens = jax.random.randint(rng, (batch, seq), 0, cfg.vocab_size)
+    targets = jnp.roll(tokens, -1, axis=1)
+    b = {"tokens": tokens, "targets": targets}
+    if cfg.frontend == "vision_stub":
+        b["prefix_embed"] = (
+            jax.random.normal(rng, (batch, cfg.num_prefix_tokens, cfg.d_model))
+            * 0.02
+        )
+    if cfg.frontend == "audio_stub":
+        b["frames"] = (
+            jax.random.normal(rng, (batch, cfg.encoder_seq, cfg.d_model)) * 0.02
+        )
+    return b
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_loss(arch, rng):
+    cfg = reduce_for_smoke(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(rng)
+    batch = _batch_for(cfg, rng)
+    logits, aux = jax.jit(model.forward)(params, batch)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    loss, metrics = model.loss(params, batch)
+    assert bool(jnp.isfinite(loss))
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_gradient_step(arch, rng):
+    cfg = reduce_for_smoke(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(rng)
+    batch = _batch_for(cfg, rng)
+
+    def loss_fn(p):
+        return model.loss(p, batch)[0]
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert bool(jnp.isfinite(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in flat)
+    # at least the embedding gradient must be nonzero
+    gnorm = sum(float(jnp.sum(g.astype(jnp.float32) ** 2)) for g in flat)
+    assert gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_then_decode(arch, rng):
+    cfg = reduce_for_smoke(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(rng)
+    batch = _batch_for(cfg, rng, batch=2, seq=8)
+    prefix = cfg.num_prefix_tokens if cfg.frontend == "vision_stub" else 0
+    max_len = prefix + 12  # cache covers prefix + prompt + decoded tokens
+    cache = model.init_cache(2, max_len)
+    logits, cache = jax.jit(model.prefill)(params, batch, cache)
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+    step = jax.jit(model.decode_step)
+    for pos in range(prefix + 8, prefix + 11):
+        logits, cache = step(params, tok, cache, jnp.int32(pos))
+        assert logits.shape == (2, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits).all())
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_forward(arch, rng):
+    """Teacher-forced decode logits must match the train forward logits
+    (same params, same tokens) — validates cache correctness."""
+    cfg = reduce_for_smoke(get_config(arch))
+    if cfg.frontend == "vision_stub":
+        pytest.skip("prefix handling differs between train/serve paths")
+    model = build_model(cfg, remat="none")
+    params = model.init(rng)
+    batch = _batch_for(cfg, rng, batch=1, seq=8)
+    full_logits, _ = jax.jit(model.forward)(params, batch)
+
+    prefill_batch = dict(batch)
+    prefill_batch["tokens"] = batch["tokens"][:, :4]
+    cache = model.init_cache(1, 8)
+    logits, cache = jax.jit(model.prefill)(params, prefill_batch, cache)
+    np.testing.assert_allclose(
+        np.asarray(logits[:, -1, :]),
+        np.asarray(full_logits[:, 3, :]),
+        rtol=2e-2, atol=2e-2,
+    )
+    step = jax.jit(model.decode_step)
+    for pos in range(4, 8):
+        tok = batch["tokens"][:, pos]
+        logits, cache = step(params, tok, cache, jnp.int32(pos))
+        np.testing.assert_allclose(
+            np.asarray(logits),
+            np.asarray(full_logits[:, pos, :]),
+            rtol=2e-2, atol=2e-2,
+        )
+
+
+def test_param_counts_sane():
+    """Full configs: parameter totals in the right ballpark for their names."""
+    expect = {
+        "deepseek-moe-16b": (14e9, 20e9),
+        "phi3.5-moe-42b": (38e9, 46e9),
+        "paligemma-3b": (2e9, 3.5e9),
+        "rwkv6-3b": (2.5e9, 4e9),
+        "gemma3-1b": (0.7e9, 1.5e9),
+        "yi-9b": (8e9, 10e9),
+        "phi4-mini-3.8b": (3.3e9, 4.6e9),
+        "llama3.2-3b": (2.8e9, 4e9),
+        "recurrentgemma-9b": (7.5e9, 11e9),
+        "whisper-base": (0.05e9, 0.12e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        model = build_model(get_config(arch))
+        n = count_params(model)
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B params out of [{lo/1e9}, {hi/1e9}]"
+        n_active = count_active_params(model)
+        assert n_active <= n
+
+
+def test_moe_active_params():
+    model = build_model(get_config("deepseek-moe-16b"))
+    total, active = count_params(model), count_active_params(model)
+    # 64 routed experts, top-6: active well under half of total
+    assert active < 0.45 * total

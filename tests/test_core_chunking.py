@@ -1,0 +1,108 @@
+"""Unit + property tests for Fig.-3 dataset partitioning."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (
+    MB,
+    ChunkType,
+    FileSpec,
+    partition_files,
+    size_thresholds,
+)
+from repro.core import testbeds
+from repro.core.chunking import classify
+from repro.core.types import gbps
+
+
+def test_thresholds_10gbps():
+    """On a 10 Gbps link the cuts are BW/20, BW/5, BW = 62.5 MB, 250 MB, 1.25 GB."""
+    bw = gbps(10)
+    t4 = size_thresholds(bw, 4)
+    assert t4 == [bw / 20, bw / 5, bw]
+    assert t4[0] == pytest.approx(62.5e9 / 8 / 20 * 20 / 20 * 20 / 20, rel=1)  # sanity
+    assert t4[0] == pytest.approx(gbps(10) / 20)
+    assert size_thresholds(bw, 1) == []
+    assert size_thresholds(bw, 2) == [bw / 20]
+    assert size_thresholds(bw, 3) == [bw / 20, bw / 5]
+
+
+def test_thresholds_reject_bad_counts():
+    for n in (0, 5, -1):
+        with pytest.raises(ValueError):
+            size_thresholds(gbps(10), n)
+
+
+def test_classify_boundaries():
+    th = [10.0, 100.0]
+    assert classify(5.0, th) == 0
+    assert classify(10.0, th) == 0  # inclusive upper bound (<=)
+    assert classify(10.1, th) == 1
+    assert classify(100.0, th) == 1
+    assert classify(101.0, th) == 2
+
+
+def test_partition_four_chunks_labels():
+    net = testbeds.STAMPEDE_COMET  # 10 Gbps
+    files = [
+        FileSpec("tiny", 1 * MB),  # <= 62.5 MB -> SMALL
+        FileSpec("med", 100 * MB),  # <= 250 MB -> MEDIUM
+        FileSpec("big", 500 * MB),  # <= 1250 MB -> LARGE
+        FileSpec("huge", 4000 * MB),  # > 1250 MB -> HUGE
+    ]
+    chunks = partition_files(files, net, 4)
+    assert [c.ctype for c in chunks] == [
+        ChunkType.SMALL,
+        ChunkType.MEDIUM,
+        ChunkType.LARGE,
+        ChunkType.HUGE,
+    ]
+    assert all(len(c) == 1 for c in chunks)
+
+
+def test_partition_two_chunks_merges_upper():
+    """2-chunk = Small | rest-as-one (Sec. 4.1 example)."""
+    net = testbeds.STAMPEDE_COMET
+    files = [FileSpec("a", 1 * MB), FileSpec("b", 500 * MB), FileSpec("c", 4000 * MB)]
+    chunks = partition_files(files, net, 2)
+    assert [c.ctype for c in chunks] == [ChunkType.SMALL, ChunkType.LARGE]
+    assert len(chunks[1]) == 2
+
+
+def test_one_chunk_is_all():
+    net = testbeds.STAMPEDE_COMET
+    files = [FileSpec("a", 1 * MB), FileSpec("b", 4000 * MB)]
+    chunks = partition_files(files, net, 1)
+    assert len(chunks) == 1
+    assert chunks[0].ctype == ChunkType.ALL
+    assert len(chunks[0]) == 2
+
+
+def test_empty_chunks_dropped():
+    net = testbeds.STAMPEDE_COMET
+    files = [FileSpec("a", 1 * MB)]  # only SMALL present
+    chunks = partition_files(files, net, 4)
+    assert len(chunks) == 1
+    assert chunks[0].ctype == ChunkType.SMALL
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    sizes=st.lists(st.integers(min_value=1, max_value=20 * 1024**3), min_size=1, max_size=60),
+    num_chunks=st.integers(min_value=1, max_value=4),
+)
+def test_partition_is_exact_partition(sizes, num_chunks):
+    """Property: every file lands in exactly one chunk; bytes conserved;
+    chunks are ordered by size class and internally within thresholds."""
+    net = testbeds.STAMPEDE_COMET
+    files = [FileSpec(f"f{i}", s) for i, s in enumerate(sizes)]
+    chunks = partition_files(files, net, num_chunks)
+    out_names = [f.name for c in chunks for f in c.files]
+    assert sorted(out_names) == sorted(f.name for f in files)
+    assert sum(c.total_bytes for c in chunks) == sum(s for s in sizes)
+    assert len(chunks) <= num_chunks
+    # class boundaries respected
+    th = size_thresholds(net.bandwidth, num_chunks)
+    for c in chunks:
+        idx = [classify(f.size, th) for f in c.files]
+        assert len(set(idx)) == 1

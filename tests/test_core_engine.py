@@ -1,0 +1,115 @@
+"""Real threaded TransferEngine: correctness of actual file movement."""
+import hashlib
+import os
+
+import pytest
+
+from repro.core import MB, FileSpec, prepare_chunks
+from repro.core import testbeds
+from repro.core.engine import TransferEngine, bytes_task, file_task
+from repro.core.schedulers import make_scheduler
+
+
+def _make_files(tmp_path, sizes):
+    src_dir = tmp_path / "src"
+    dst_dir = tmp_path / "dst"
+    src_dir.mkdir()
+    dst_dir.mkdir()
+    specs, tasks = [], {}
+    rng_state = 1234
+    for i, size in enumerate(sizes):
+        name = f"f{i:03d}"
+        src = src_dir / name
+        # deterministic pseudo-random contents
+        blocks = []
+        remaining = size
+        while remaining > 0:
+            rng_state = (rng_state * 6364136223846793005 + 1442695040888963407) % (
+                1 << 64
+            )
+            blk = rng_state.to_bytes(8, "little") * 1024  # 8 KB
+            blocks.append(blk[: min(len(blk), remaining)])
+            remaining -= len(blocks[-1])
+        data = b"".join(blocks)
+        src.write_bytes(data)
+        spec = FileSpec(name=name, size=size, path=str(src))
+        specs.append(spec)
+        tasks[name] = file_task(spec, str(src), str(dst_dir / name))
+    return specs, tasks, src_dir, dst_dir
+
+
+def _digest(path):
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        while True:
+            b = f.read(1 << 20)
+            if not b:
+                return h.hexdigest()
+            h.update(b)
+
+
+@pytest.mark.parametrize("algo", ["sc", "mc", "promc"])
+def test_engine_copies_everything_bit_exact(tmp_path, algo):
+    net = testbeds.LAN
+    sizes = [256 * 1024] * 6 + [8 * MB] * 2  # small + stripeable files
+    specs, tasks, src_dir, dst_dir = _make_files(tmp_path, sizes)
+    chunks = prepare_chunks(specs, net, 2, max_cc=4)
+    sched = make_scheduler(algo, chunks, net, 4)
+    eng = TransferEngine(net, tick_period=0.05)
+    report = eng.run(chunks, sched, tasks)
+    assert report.files_done == len(specs)
+    assert report.total_bytes == sum(sizes)
+    for s in specs:
+        assert _digest(dst_dir / s.name) == _digest(src_dir / s.name)
+
+
+def test_engine_striped_write_is_correct(tmp_path):
+    """parallelism > 1 stripes one big file across sub-threads."""
+    net = testbeds.XSEDE  # BDP 75MB > buf 32MB -> Alg. 1 picks parallelism 3
+    sizes = [96 * MB]  # > buffer so Alg. 1 assigns multiple streams
+    specs, tasks, src_dir, dst_dir = _make_files(tmp_path, sizes)
+    chunks = prepare_chunks(specs, net, 1, max_cc=2)
+    assert chunks[0].params.parallelism >= 2
+    sched = make_scheduler("mc", chunks, net, 2)
+    eng = TransferEngine(net, tick_period=0.05)
+    eng.run(chunks, sched, tasks)
+    assert _digest(dst_dir / "f000") == _digest(src_dir / "f000")
+
+
+def test_engine_bytes_task(tmp_path):
+    payload = os.urandom(3 * MB)
+    spec = FileSpec(name="shard0", size=len(payload))
+    dst = tmp_path / "shard0.bin"
+    task = bytes_task(spec, payload, str(dst))
+    net = testbeds.CKPT_STORE
+    chunks = prepare_chunks([spec], net, 1, max_cc=2)
+    sched = make_scheduler("mc", chunks, net, 2)
+    TransferEngine(net, tick_period=0.02).run(chunks, sched, {"shard0": task})
+    assert dst.read_bytes() == payload
+
+
+def test_engine_latency_injection_pipelining_speedup(tmp_path):
+    """With injected control latency, pipelining visibly reduces wall time —
+    the paper's mechanism, demonstrated on the real engine."""
+    import dataclasses
+
+    net = dataclasses.replace(testbeds.LAN, rtt=0.03, unhidden_overhead=0.0)
+    sizes = [64 * 1024] * 20
+    specs, tasks, _, _ = _make_files(tmp_path, sizes)
+
+    def run_with(pp):
+        from repro.core.types import Chunk, ChunkType, TransferParams
+
+        chunk = Chunk(
+            ctype=ChunkType.ALL,
+            files=list(specs),
+            params=TransferParams(pipelining=pp, parallelism=1, concurrency=1),
+        )
+        sched = make_scheduler("mc", [chunk], net, 1)
+        sched.chunks[0].params = chunk.params  # keep fixed params
+        eng = TransferEngine(net, tick_period=0.05, inject_latency=True)
+        return eng.run([chunk], sched, tasks).total_time
+
+    slow = run_with(0)
+    fast = run_with(9)
+    assert fast < slow  # 30ms/file gap vs 3ms/file gap

@@ -1,0 +1,103 @@
+"""Algorithm-1 parameter estimation: exact values + the paper's Eq.-1 bound."""
+import math
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import MB, GB, find_optimal_parameters
+from repro.core import testbeds
+from repro.core.params import MAX_PIPELINING
+from repro.core.types import gbps
+
+
+def test_xsede_small_files():
+    """XSEDE (Table 1): BDP 75 MB, buffer 32 MB. 1 MB files."""
+    bdp = gbps(10) * 60e-3  # 75 MB
+    p = find_optimal_parameters(1 * MB, bdp, 32 * MB, max_cc=8)
+    # pipelining = ceil(75MB / 1MB) = ceil(71.5...) -- BDP in binary MB ~71.5
+    assert p.pipelining == math.ceil(bdp / (1 * MB))
+    assert p.pipelining > 30  # large for small files
+    # parallelism = min(ceil(BDP/buf)=3, ceil(1MB/32MB)=1) = 1
+    assert p.parallelism == 1
+    # concurrency = min(max(BDP/avg, 2), 8) = 8 (BDP/avg huge)
+    assert p.concurrency == 8
+
+
+def test_xsede_huge_files():
+    bdp = gbps(10) * 60e-3
+    p = find_optimal_parameters(10 * GB, bdp, 32 * MB, max_cc=8)
+    assert p.pipelining <= 1  # ceil(75MB/10GB) = 1
+    # parallelism = min(ceil(BDP/buf)=3, ceil(10GB/32MB)=320) = 3
+    assert p.parallelism == 3
+    # concurrency = min(max(BDP/avg < 1, 2), 8) = 2: the self-limit of Sec 4.1
+    assert p.concurrency == 2
+
+
+def test_loni_no_buffer_limitation():
+    """LONI: BDP (12.5 MB computed) < buffer 16 MB => parallelism 1."""
+    bdp = gbps(10) * 10e-3
+    p = find_optimal_parameters(10 * GB, bdp, 16 * MB, max_cc=8)
+    assert p.parallelism == 1
+
+
+def test_concurrency_lower_bound_two():
+    """Sec. 3.1: lower limit 2 'since concurrency is mostly helpful'."""
+    p = find_optimal_parameters(100 * GB, gbps(10) * 40e-3, 32 * MB, max_cc=16)
+    assert p.concurrency == 2
+
+
+def test_concurrency_capped_by_max_cc():
+    p = find_optimal_parameters(1 * MB, gbps(10) * 40e-3, 32 * MB, max_cc=6)
+    assert p.concurrency == 6
+
+
+def test_eq1_medium_chunk_self_limit():
+    """Paper Eq. 1: for Medium chunks, BDP/avgFileSize in (5*RTT, 20*RTT)
+    (RTT in seconds) => concurrency self-limits to 2 whenever RTT < 100 ms."""
+    for rtt in (10e-3, 40e-3, 60e-3, 99e-3):
+        bw = gbps(10)
+        bdp = bw * rtt
+        lo, hi = bw / 20, bw / 5  # Medium-chunk size range
+        for avg in (lo * 1.01, (lo + hi) / 2, hi * 0.999):
+            y = bdp / avg
+            assert 5 * rtt < y < 20 * rtt  # the Eq. 1 bound itself
+            p = find_optimal_parameters(avg, bdp, 32 * MB, max_cc=32)
+            if 20 * rtt < 2:
+                assert p.concurrency == 2
+
+
+def test_num_files_caps():
+    p = find_optimal_parameters(1 * MB, gbps(10) * 60e-3, 32 * MB, 8, num_files=3)
+    assert p.concurrency <= 3
+    assert p.pipelining <= 2
+
+
+def test_invalid_inputs():
+    with pytest.raises(ValueError):
+        find_optimal_parameters(0, 1.0, 1.0, 4)
+    with pytest.raises(ValueError):
+        find_optimal_parameters(1.0, 1.0, 1.0, 0)
+
+
+@settings(max_examples=300, deadline=None)
+@given(
+    avg=st.floats(min_value=1.0, max_value=1e12),
+    bw_gbps=st.floats(min_value=0.1, max_value=400),
+    rtt=st.floats(min_value=1e-5, max_value=0.5),
+    buf=st.integers(min_value=64 * 1024, max_value=1024 * MB),
+    max_cc=st.integers(min_value=1, max_value=128),
+)
+def test_param_bounds_property(avg, bw_gbps, rtt, buf, max_cc):
+    """Property: outputs are always in their valid ranges."""
+    bdp = gbps(bw_gbps) * rtt
+    p = find_optimal_parameters(avg, bdp, buf, max_cc)
+    assert 0 <= p.pipelining <= MAX_PIPELINING
+    assert 1 <= p.parallelism
+    assert p.parallelism <= max(1, math.ceil(bdp / buf))
+    assert 1 <= p.concurrency <= max(2, max_cc)
+    if max_cc >= 2:
+        assert 2 <= p.concurrency <= max_cc
+    # monotonicity: smaller files never get *less* pipelining
+    p_small = find_optimal_parameters(max(avg / 2, 1.0), bdp, buf, max_cc)
+    assert p_small.pipelining >= p.pipelining

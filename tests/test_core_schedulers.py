@@ -1,0 +1,211 @@
+"""Scheduler unit tests: Alg. 2 round-robin, Alg. 3 weighting, re-allocation."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (
+    GB,
+    MB,
+    Chunk,
+    ChunkType,
+    FileSpec,
+    make_scheduler,
+    prepare_chunks,
+    round_robin_distribution,
+    weighted_distribution,
+)
+from repro.core import testbeds
+from repro.core.schedulers import (
+    ChunkView,
+    Move,
+    Open,
+    ProActiveMultiChunkScheduler,
+)
+
+
+def _chunk(ctype, n, size):
+    return Chunk(ctype=ctype, files=[FileSpec(f"{ctype.name}{i}", size) for i in range(n)])
+
+
+def test_mc_round_robin_paper_example():
+    """Sec. 3.3 worked example: maxCC=8, chunks {Small, Medium, Large}
+    -> (3, 2, 3) because the RR order is {Huge, Small, Large, Medium}."""
+    chunks = [
+        _chunk(ChunkType.SMALL, 10, 1 * MB),
+        _chunk(ChunkType.MEDIUM, 10, 100 * MB),
+        _chunk(ChunkType.LARGE, 10, 500 * MB),
+    ]
+    alloc = round_robin_distribution(chunks, 8)
+    assert alloc[0] == 3  # Small
+    assert alloc[1] == 2  # Medium
+    assert alloc[2] == 3  # Large
+    assert sum(alloc.values()) == 8
+
+
+def test_mc_round_robin_fewer_channels_than_chunks():
+    """Ordering {Huge, Small, Large, Medium} decides who gets scarce channels."""
+    chunks = [
+        _chunk(ChunkType.SMALL, 5, 1 * MB),
+        _chunk(ChunkType.MEDIUM, 5, 100 * MB),
+        _chunk(ChunkType.LARGE, 5, 500 * MB),
+        _chunk(ChunkType.HUGE, 5, 4 * GB),
+    ]
+    alloc = round_robin_distribution(chunks, 2)
+    assert alloc[3] == 1  # Huge first
+    assert alloc[0] == 1  # Small second
+    assert alloc[1] == 0 and alloc[2] == 0
+
+
+def test_promc_weighted_distribution():
+    """Alg. 3: weight = delta * size, delta = {6,3,2,1} for {S,M,L,H}."""
+    chunks = [
+        _chunk(ChunkType.SMALL, 100, 10 * MB),  # 1000 MB * 6 = 6000
+        _chunk(ChunkType.HUGE, 1, 2000 * MB),  # 2000 MB * 1 = 2000
+    ]
+    alloc = weighted_distribution(chunks, 8)
+    # shares: small 6000/8000*8 = 6, huge 2000/8000*8 = 2
+    assert alloc[0] == 6
+    assert alloc[1] == 2
+
+
+def test_promc_every_live_chunk_gets_a_channel():
+    chunks = [
+        _chunk(ChunkType.SMALL, 1, 1 * MB),  # negligible weight
+        _chunk(ChunkType.HUGE, 10, 10 * GB),
+    ]
+    alloc = weighted_distribution(chunks, 4)
+    assert alloc[0] >= 1
+    assert alloc[1] >= 1
+    assert sum(alloc.values()) == 4
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    sizes=st.lists(
+        st.tuples(
+            st.sampled_from(list(ChunkType)[:4]),
+            st.integers(min_value=1, max_value=50),
+            st.integers(min_value=1 * MB, max_value=int(5 * GB)),
+        ),
+        min_size=1,
+        max_size=4,
+        unique_by=lambda t: t[0],
+    ),
+    max_cc=st.integers(min_value=1, max_value=64),
+)
+def test_channel_conservation_property(sizes, max_cc):
+    """Property: both distributions hand out exactly the channel budget
+    (ProMC may exceed maxCC only to guarantee one channel per live chunk)."""
+    chunks = [_chunk(ct, n, s) for ct, n, s in sizes]
+    rr = round_robin_distribution(chunks, max_cc)
+    assert sum(rr.values()) == max_cc
+    wd = weighted_distribution(chunks, max_cc)
+    assert sum(wd.values()) == max(max_cc, len(chunks))
+    assert all(v >= 1 for v in wd.values())
+
+
+def _views(specs):
+    """specs: list of (bytes_remaining, throughput, n_channels)."""
+    return [
+        ChunkView(
+            index=i,
+            ctype=ChunkType.SMALL,
+            bytes_remaining=b,
+            files_remaining=1 if b else 0,
+            throughput=thr,
+            n_channels=n,
+            done=b == 0,
+            predicted_rate=thr or 1.0,
+        )
+        for i, (b, thr, n) in enumerate(specs)
+    ]
+
+
+def _mk_promc(max_cc=8):
+    net = testbeds.STAMPEDE_COMET
+    files = [FileSpec(f"s{i}", 1 * MB) for i in range(50)] + [
+        FileSpec(f"h{i}", 4 * GB) for i in range(10)
+    ]
+    chunks = prepare_chunks(files, net, 2, max_cc)
+    return make_scheduler("promc", chunks, net, max_cc)
+
+
+def test_promc_reallocation_needs_three_consecutive_periods():
+    """Sec. 3.4: 'waits three periods to avoid incorrect estimations'."""
+    sched = _mk_promc()
+    # chunk 0 is fast (eta=10s), chunk 1 slow (eta=100s): ratio 10 >= 2
+    v = _views([(10 * GB, 1e9, 4), (100 * GB, 1e9, 4)])
+    assert sched.on_tick(v) == []  # period 1
+    assert sched.on_tick(v) == []  # period 2
+    moves = sched.on_tick(v)  # period 3 -> move
+    assert moves == [Move(src=0, dst=1, n=1)]
+    # streak resets after the move
+    assert sched.on_tick(v) == []
+
+
+def test_promc_streak_resets_when_balanced():
+    sched = _mk_promc()
+    imbalanced = _views([(10 * GB, 1e9, 4), (100 * GB, 1e9, 4)])
+    balanced = _views([(10 * GB, 1e9, 4), (11 * GB, 1e9, 4)])
+    assert sched.on_tick(imbalanced) == []
+    assert sched.on_tick(imbalanced) == []
+    assert sched.on_tick(balanced) == []  # streak broken
+    assert sched.on_tick(imbalanced) == []
+    assert sched.on_tick(imbalanced) == []
+    assert sched.on_tick(imbalanced) != []  # three fresh periods again
+
+
+def test_promc_never_strands_fast_chunk():
+    """The fast chunk keeps its last channel."""
+    sched = _mk_promc()
+    v = _views([(10 * GB, 1e9, 1), (100 * GB, 1e9, 7)])
+    for _ in range(5):
+        assert sched.on_tick(v) == []
+
+
+def test_promc_threshold_is_two_x():
+    """Slow chunk must be expected to run >= 2x longer (Sec. 3.4)."""
+    sched = _mk_promc()
+    v = _views([(10 * GB, 1e9, 4), (19 * GB, 1e9, 4)])  # ratio 1.9 < 2
+    for _ in range(5):
+        assert sched.on_tick(v) == []
+
+
+def test_distribute_to_laggards_conserves_channels():
+    sched = _mk_promc()
+    view = _views([(0, 1e9, 3), (50 * GB, 1e9, 2), (100 * GB, 2e8, 3)])
+    moves = sched.on_chunk_complete(view, 0)
+    assert sum(m.n for m in moves) == 3
+    assert all(isinstance(m, Move) and m.src == 0 for m in moves)
+    # the slowest chunk (index 2: eta 500s vs 50s) receives at least as many
+    got = {m.dst: m.n for m in moves}
+    assert got.get(2, 0) >= got.get(1, 0)
+
+
+def test_sc_opens_only_first_chunk_then_advances():
+    net = testbeds.STAMPEDE_COMET
+    files = [FileSpec(f"s{i}", 1 * MB) for i in range(10)] + [
+        FileSpec(f"h{i}", 4 * GB) for i in range(4)
+    ]
+    chunks = prepare_chunks(files, net, 2, 8)
+    sched = make_scheduler("sc", chunks, net, 8)
+    first = sched.initial_actions(_views([(1, 0, 0), (1, 0, 0)]))
+    assert len(first) == 1 and isinstance(first[0], Open)
+    opened = first[0]
+    # largest class first: LARGE chunk (index 1) before SMALL
+    assert opened.chunk == 1
+    assert opened.n == chunks[1].params.concurrency
+    nxt = sched.on_chunk_complete(
+        _views([(1 * GB, 0, 0), (0, 1e9, opened.n)]), 1
+    )
+    kinds = [type(a).__name__ for a in nxt]
+    assert kinds == ["Close", "Open"]
+    assert nxt[1].chunk == 0
+    assert nxt[1].n == chunks[0].params.concurrency
+
+
+def test_unknown_scheduler_raises():
+    net = testbeds.STAMPEDE_COMET
+    chunks = prepare_chunks([FileSpec("a", MB)], net, 1, 2)
+    with pytest.raises(ValueError):
+        make_scheduler("nope", chunks, net, 2)

@@ -1,0 +1,288 @@
+"""Distributed runtime tests: sharding rules, grad-sync plans, compression,
+fault tolerance. Multi-device tests run on 8 host-platform devices via a
+subprocess (so the main test process keeps 1 device)."""
+import math
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import testbeds
+from repro.core.types import ChunkType
+from repro.distributed import compression, grad_sync
+from repro.distributed.fault import (
+    MeshPlan,
+    RestartPolicy,
+    StragglerDetector,
+    elastic_mesh_plans,
+    reallocate_channels_for_straggler,
+)
+from repro.distributed.sharding import DEFAULT_RULES, ShardingCtx
+
+# ------------------------------------------------------------------ #
+# sharding rules
+# ------------------------------------------------------------------ #
+
+
+def _ctx(shape=(2, 2, 2), axes=("pod", "data", "model"), manual=frozenset()):
+    # AbstractMesh: shape-only (rule resolution never touches devices)
+    mesh = jax.sharding.AbstractMesh(shape, axes)
+    return ShardingCtx(mesh=mesh, rules=dict(DEFAULT_RULES), manual_axes=manual)
+
+
+def test_resolve_divisibility_fallback():
+    ctx = _ctx((1, 2, 16), ("pod", "data", "model"))
+    # 4 heads cannot shard over 16-way model axis -> replicated
+    spec = ctx.resolve(("batch", "seq", "heads", None), (8, 128, 4, 256))
+    assert spec[2] is None
+    # 6912 mlp shards fine
+    spec = ctx.resolve(("batch", "seq", "mlp"), (8, 128, 6912))
+    assert spec[2] == "model"
+
+
+def test_resolve_axis_used_once():
+    ctx = _ctx((1, 2, 2), ("pod", "data", "model"))
+    spec = ctx.resolve(("heads", "kv"), (4, 4))  # both want "model"
+    assert spec[0] == "model" and spec[1] is None
+
+
+def test_resolve_strips_manual_axes():
+    ctx = _ctx((2, 2, 2), manual=frozenset({"pod"}))
+    spec = ctx.resolve(("batch",), (8,))
+    assert spec[0] == "data"  # ("pod","data") with pod stripped
+
+
+def test_resolve_missing_axis():
+    ctx = _ctx((2, 2), ("data", "model"))
+    spec = ctx.resolve(("batch",), (8,))
+    assert spec[0] == "data"
+
+
+# ------------------------------------------------------------------ #
+# grad-sync plans
+# ------------------------------------------------------------------ #
+
+
+def _fake_grads():
+    return {
+        "layers": {
+            "w_big": jax.ShapeDtypeStruct((64, 4096, 4096), jnp.float32),  # 4.3GB
+            "w_mid": jax.ShapeDtypeStruct((64, 512, 512), jnp.float32),  # 67MB
+            "norm": jax.ShapeDtypeStruct((64, 4096), jnp.float32),  # 1MB
+        },
+        "embed": {"tok": jax.ShapeDtypeStruct((32000, 4096), jnp.float32)},
+    }
+
+
+def test_plan_chunks_and_params():
+    plan = grad_sync.build_sync_plan(_fake_grads(), max_cc=8, num_chunks=4)
+    assert len(plan.chunks) >= 2
+    total = sum(c.total_bytes for c in plan.chunks)
+    want = sum(
+        int(np.prod(l.shape)) * 4
+        for l in jax.tree.leaves(_fake_grads())
+    )
+    assert total == want
+    # every chunk got Algorithm-1 params
+    for c in plan.chunks:
+        assert c.params is not None
+        assert c.params.concurrency >= 1
+
+
+def test_plan_slices_large_tensors():
+    plan = grad_sync.build_sync_plan(_fake_grads(), max_cc=8, num_chunks=4)
+    # the 4.3 GB tensor belongs to a chunk with parallelism > 1 on the DCN
+    # (BDP 12.5MB / window 4MB => 4 streams) and divides on axis 0
+    assert plan.slicing["layers/w_big"] > 1
+    assert plan.slicing["layers/norm"] == 1
+
+
+def test_plan_order_covers_everything_once():
+    plan = grad_sync.build_sync_plan(_fake_grads(), max_cc=8)
+    seen = {}
+    for item in plan.order:
+        key = (item.path, item.slice_idx)
+        assert key not in seen
+        seen[key] = True
+    paths = {p for p, _ in seen}
+    assert paths == {
+        "layers/w_big", "layers/w_mid", "layers/norm", "embed/tok"
+    }
+
+
+def test_plan_compression_classes():
+    plan = grad_sync.build_sync_plan(_fake_grads(), max_cc=8, num_chunks=4)
+    for item in plan.order:
+        if item.chunk_type == ChunkType.SMALL:
+            assert item.compress == "none"  # latency-bound: keep fp32
+
+
+def test_sc_plan_is_sequential():
+    plan = grad_sync.build_sync_plan(_fake_grads(), algorithm="sc")
+    types = [i.chunk_type for i in plan.order]
+    # all items of one chunk type appear contiguously
+    seen = []
+    for t in types:
+        if not seen or seen[-1] != t:
+            seen.append(t)
+    assert len(seen) == len(set(seen))
+
+
+def test_simulate_sync_schedules():
+    shapes = _fake_grads()
+    naive = grad_sync.simulate_sync(
+        shapes, algorithm="sc", max_cc=1, num_chunks=1,
+        compress_by_class=grad_sync.NO_COMPRESSION,
+    )
+    tuned = grad_sync.simulate_sync(shapes, algorithm="promc", max_cc=8)
+    assert tuned.total_time < naive.total_time
+    # compression halves the big-bucket bytes => visibly faster sync
+    uncompressed = grad_sync.simulate_sync(
+        shapes, algorithm="promc", max_cc=8,
+        compress_by_class=grad_sync.NO_COMPRESSION,
+    )
+    assert tuned.total_time < uncompressed.total_time
+
+
+# ------------------------------------------------------------------ #
+# numerical equivalence on 8 devices (subprocess: isolated device count)
+# ------------------------------------------------------------------ #
+
+_SUBPROC = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models.config import reduce_for_smoke
+    from repro.models.model import build_model
+    from repro.train.train_step import StepConfig, init_train_state, make_train_step
+    from repro.optim.adamw import AdamWConfig
+    from repro.data.synthetic import SyntheticLM, DataConfig
+
+    cfg = reduce_for_smoke(get_config("llama3.2-3b"))
+    model = build_model(cfg)
+    batch = {k: jnp.asarray(v) for k, v in
+             next(SyntheticLM(cfg, DataConfig(global_batch=8, seq_len=32)).batches(1)).items()}
+    opt = AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=50)
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    with jax.set_mesh(mesh):
+        outs = {}
+        for name, scfg in {
+            "naive": StepConfig(optimizer=opt, sync_algorithm="naive"),
+            "promc": StepConfig(optimizer=opt, sync_algorithm="promc", compress=False),
+            "mc": StepConfig(optimizer=opt, sync_algorithm="mc", compress=False),
+            "promc_comp": StepConfig(optimizer=opt, sync_algorithm="promc", compress=True),
+        }.items():
+            step = jax.jit(make_train_step(model, scfg, mesh=mesh, multi_pod=True))
+            st = init_train_state(model, jax.random.PRNGKey(0))
+            st, m = step(st, batch)
+            outs[name] = (st["params"], float(m["loss"]))
+    ref_p, ref_l = outs["naive"]
+    for name in ("promc", "mc"):
+        p, l = outs[name]
+        diff = max(jax.tree.leaves(jax.tree.map(
+            lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))),
+            ref_p, p)))
+        assert diff == 0.0, f"{name} diverged from naive: {diff}"
+        assert abs(l - ref_l) < 1e-6
+    # compressed path close but not identical
+    p, l = outs["promc_comp"]
+    diff = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))),
+        ref_p, p)))
+    assert diff < 5e-3, f"compressed sync too far from exact: {diff}"
+    print("SUBPROCESS_OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_multipod_sync_matches_naive_8dev():
+    res = subprocess.run(
+        [sys.executable, "-c", _SUBPROC],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
+        cwd="/root/repo",
+    )
+    assert "SUBPROCESS_OK" in res.stdout, res.stdout + res.stderr
+
+
+# ------------------------------------------------------------------ #
+# compression
+# ------------------------------------------------------------------ #
+
+
+def test_int8_error_feedback_reduces_bias():
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (1024,)) * 1e-3
+    # without EF, repeated quantization of the same gradient keeps the same
+    # error; with EF the accumulated average converges to the true value.
+    ef = jnp.zeros_like(g)
+    acc = jnp.zeros_like(g)
+    for i in range(20):
+        q, s, ef = compression.int8_encode(g, ef)
+        acc = acc + compression.int8_decode(q.astype(jnp.int32), s)
+    err_ef = float(jnp.linalg.norm(acc / 20 - g) / jnp.linalg.norm(g))
+    q, s, _ = compression.int8_encode(g)
+    one = compression.int8_decode(q.astype(jnp.int32), s)
+    err_once = float(jnp.linalg.norm(one - g) / jnp.linalg.norm(g))
+    assert err_ef < err_once * 0.5
+
+
+def test_bf16_roundtrip_error_small():
+    g = jax.random.normal(jax.random.PRNGKey(1), (4096,))
+    rel = float(compression.compression_error(g, "bf16"))
+    assert rel < 5e-3
+
+
+# ------------------------------------------------------------------ #
+# fault tolerance
+# ------------------------------------------------------------------ #
+
+
+def test_straggler_detector_flags_slow_host():
+    det = StragglerDetector(tau=1.5, patience=3)
+    for w in range(5):
+        for h in range(4):
+            det.record(f"h{h}", 1.0)
+        det.record("h4", 3.0)
+        flagged = det.update_flags()
+    assert "h4" in flagged
+    assert all(f == "h4" for f in flagged)
+
+
+def test_straggler_needs_patience():
+    det = StragglerDetector(tau=1.5, patience=3)
+    for h in range(4):
+        det.record(f"h{h}", 1.0)
+    det.record("h4", 5.0)
+    assert det.update_flags() == []  # only one window
+
+
+def test_channel_reallocation_conserves():
+    alloc = {"pod0": 4, "pod1": 4}
+    out = reallocate_channels_for_straggler(alloc, "pod0")
+    assert sum(out.values()) == 8
+    assert out["pod0"] == 3 and out["pod1"] == 5
+
+
+def test_restart_policy_backoff_and_exhaustion():
+    p = RestartPolicy(max_failures=3, backoff_base=1.0, backoff_cap=10.0)
+    delays = [p.next_delay() for _ in range(4)]
+    assert delays[:3] == [1.0, 2.0, 4.0]
+    assert delays[3] is None
+
+
+def test_elastic_mesh_plans():
+    plans = elastic_mesh_plans(2, 256, lost_pods=1)
+    assert plans and plans[0].axes == ("data", "model")
+    assert plans[0].chips <= 256
+    plans = elastic_mesh_plans(2, 256, lost_chips_in_pod=16)
+    assert plans[0].shape[0] == 2  # pod axis preserved
+    assert plans[0].chips <= 2 * 240

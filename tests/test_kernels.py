@@ -1,0 +1,226 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.rwkv6_scan import rwkv6_scan
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _rand(key, shape, dtype, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ------------------------------------------------------------------ #
+# flash attention
+# ------------------------------------------------------------------ #
+
+FA_CASES = [
+    # (B, H, KV, S, D, causal, window, softcap)
+    (1, 4, 4, 128, 64, True, None, 0.0),     # MHA causal
+    (2, 8, 2, 256, 64, True, None, 0.0),     # GQA 4:1
+    (1, 4, 1, 256, 128, True, None, 0.0),    # MQA
+    (1, 4, 4, 256, 64, False, None, 0.0),    # non-causal (encoder)
+    (1, 4, 2, 512, 64, True, 128, 0.0),      # sliding window
+    (1, 2, 1, 384, 64, True, 64, 0.0),       # window, non-pow2 seq
+    (1, 4, 4, 256, 64, True, None, 50.0),    # logit softcap (gemma-style)
+    (2, 2, 2, 1024, 32, True, 256, 0.0),     # longer seq, small heads
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(case, dtype):
+    b, h, kv, s, d, causal, window, cap = case
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = _rand(k1, (b, h, s, d), dtype)
+    k = _rand(k2, (b, kv, s, d), dtype)
+    v = _rand(k3, (b, kv, s, d), dtype)
+    out = flash_attention(
+        q, k, v, causal=causal, window=window, logit_softcap=cap,
+        block_q=128, block_k=128, interpret=True,
+    )
+    want = ref.flash_attention_ref(
+        q, k, v, causal=causal, window=window, logit_softcap=cap
+    )
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_flash_attention_block_shape_independence():
+    """Result must not depend on the block decomposition."""
+    b, h, kv, s, d = 1, 2, 2, 512, 64
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = _rand(k1, (b, h, s, d), jnp.float32)
+    k = _rand(k2, (b, kv, s, d), jnp.float32)
+    v = _rand(k3, (b, kv, s, d), jnp.float32)
+    outs = [
+        np.asarray(
+            flash_attention(
+                q, k, v, causal=True, window=100,
+                block_q=bq, block_k=bk, interpret=True,
+            )
+        )
+        for bq, bk in [(512, 512), (128, 256), (64, 64)]
+    ]
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=1e-5, atol=1e-5)
+
+
+def test_flash_attention_window_one_token():
+    """window=1 means each token attends only to itself: out == v (per head)."""
+    b, h, s, d = 1, 2, 128, 32
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = _rand(k1, (b, h, s, d), jnp.float32)
+    k = _rand(k2, (b, h, s, d), jnp.float32)
+    v = _rand(k3, (b, h, s, d), jnp.float32)
+    out = flash_attention(
+        q, k, v, causal=True, window=1, block_q=64, block_k=64, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(v), rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------------ #
+# rwkv6 wkv scan
+# ------------------------------------------------------------------ #
+
+WKV_CASES = [
+    (1, 2, 64, 32),
+    (2, 4, 128, 64),
+    (1, 1, 96, 16),  # non-pow2 T
+]
+
+
+@pytest.mark.parametrize("case", WKV_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_scan_matches_ref(case, dtype):
+    b, h, t, d = case
+    ks = jax.random.split(KEY, 6)
+    r = _rand(ks[0], (b, h, t, d), dtype, 0.5)
+    k = _rand(ks[1], (b, h, t, d), dtype, 0.5)
+    v = _rand(ks[2], (b, h, t, d), dtype, 0.5)
+    # decay in (0, 1): w = exp(-exp(z))
+    w = jnp.exp(-jnp.exp(_rand(ks[3], (b, h, t, d), jnp.float32, 0.5))).astype(dtype)
+    u = _rand(ks[4], (h, d), jnp.float32, 0.5)
+    s0 = _rand(ks[5], (b, h, d, d), jnp.float32, 0.1)
+    y, sf = rwkv6_scan(r, k, v, w, u, s0, chunk=32, interpret=True)
+    y_ref, sf_ref = ref.rwkv6_scan_ref(r, k, v, w, u, s0)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sf_ref), rtol=tol, atol=tol)
+
+
+def test_rwkv6_chunk_independence():
+    b, h, t, d = 1, 2, 128, 32
+    ks = jax.random.split(KEY, 6)
+    r = _rand(ks[0], (b, h, t, d), jnp.float32, 0.5)
+    k = _rand(ks[1], (b, h, t, d), jnp.float32, 0.5)
+    v = _rand(ks[2], (b, h, t, d), jnp.float32, 0.5)
+    w = jnp.exp(-jnp.exp(_rand(ks[3], (b, h, t, d), jnp.float32, 0.5)))
+    u = _rand(ks[4], (h, d), jnp.float32, 0.5)
+    s0 = jnp.zeros((b, h, d, d), jnp.float32)
+    y1, s1 = rwkv6_scan(r, k, v, w, u, s0, chunk=128, interpret=True)
+    y2, s2 = rwkv6_scan(r, k, v, w, u, s0, chunk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5, atol=1e-5)
+
+
+def test_rwkv6_state_carry_composition():
+    """scan(T) == scan(first half) then scan(second half with carried state)."""
+    b, h, t, d = 1, 2, 64, 16
+    ks = jax.random.split(KEY, 6)
+    r = _rand(ks[0], (b, h, t, d), jnp.float32, 0.5)
+    k = _rand(ks[1], (b, h, t, d), jnp.float32, 0.5)
+    v = _rand(ks[2], (b, h, t, d), jnp.float32, 0.5)
+    w = jnp.exp(-jnp.exp(_rand(ks[3], (b, h, t, d), jnp.float32, 0.5)))
+    u = _rand(ks[4], (h, d), jnp.float32, 0.5)
+    s0 = _rand(ks[5], (b, h, d, d), jnp.float32, 0.1)
+    y_full, s_full = rwkv6_scan(r, k, v, w, u, s0, chunk=32, interpret=True)
+    half = t // 2
+    sl = lambda x, a, z: x[:, :, a:z]
+    y1, s_mid = rwkv6_scan(*(sl(x, 0, half) for x in (r, k, v, w)), u, s0,
+                           chunk=32, interpret=True)
+    y2, s_end = rwkv6_scan(*(sl(x, half, t) for x in (r, k, v, w)), u, s_mid,
+                           chunk=32, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(y_full), np.concatenate([y1, y2], axis=2), rtol=1e-5, atol=1e-5
+    )
+    np.testing.assert_allclose(np.asarray(s_full), np.asarray(s_end),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------------ #
+# rg-lru scan
+# ------------------------------------------------------------------ #
+
+RG_CASES = [(1, 64, 128), (2, 128, 256), (1, 96, 512), (3, 100, 64)]
+
+
+@pytest.mark.parametrize("case", RG_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru_scan_matches_ref(case, dtype):
+    b, t, w = case
+    ks = jax.random.split(KEY, 3)
+    a = jax.nn.sigmoid(_rand(ks[0], (b, t, w), jnp.float32)).astype(dtype)
+    x = _rand(ks[1], (b, t, w), dtype, 0.5)
+    h0 = _rand(ks[2], (b, w), jnp.float32, 0.5)
+    h, hf = rglru_scan(a, x, h0, chunk=32, block_w=64, interpret=True)
+    h_ref, hf_ref = ref.rglru_scan_ref(a, x, h0)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hf_ref), rtol=tol, atol=tol)
+
+
+def test_rglru_matches_associative_scan_in_model():
+    """Kernel agrees with the model's associative-scan path."""
+    from repro.models.rglru import rglru_scan_ref as assoc_ref
+
+    b, t, w = 2, 64, 128
+    ks = jax.random.split(KEY, 3)
+    a = jax.nn.sigmoid(_rand(ks[0], (b, t, w), jnp.float32))
+    x = _rand(ks[1], (b, t, w), jnp.float32, 0.5)
+    h0 = _rand(ks[2], (b, w), jnp.float32, 0.5)
+    h_kernel, hf_kernel = rglru_scan(a, x, h0, chunk=16, block_w=64,
+                                     interpret=True)
+    h_assoc, hf_assoc = assoc_ref(a, x, h0)
+    np.testing.assert_allclose(np.asarray(h_kernel), np.asarray(h_assoc),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hf_kernel), np.asarray(hf_assoc),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ #
+# property sweeps (hypothesis)
+# ------------------------------------------------------------------ #
+
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    s=st.sampled_from([64, 128, 192, 320]),
+    d=st.sampled_from([32, 64]),
+    kv=st.sampled_from([1, 2]),
+    window=st.sampled_from([None, 32, 77]),
+)
+def test_flash_attention_property_sweep(s, d, kv, window):
+    h = kv * 2
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(s * d + kv), 3)
+    q = _rand(k1, (1, h, s, d), jnp.float32)
+    k = _rand(k2, (1, kv, s, d), jnp.float32)
+    v = _rand(k3, (1, kv, s, d), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    assert bool(jnp.isfinite(out).all())
