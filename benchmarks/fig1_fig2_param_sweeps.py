@@ -14,6 +14,7 @@ from repro.core.chunking import partition_files
 from repro.core.simulator import Simulation
 from repro.core.types import GB, MB, TransferParams, to_gbps
 from repro.data.filesets import uniform_files
+from repro.eval import run_simulations
 
 FILE_SIZES = {
     "1MB": (1 * MB, 400),
@@ -30,22 +31,24 @@ SWEEPS = {
 }
 
 
-def fixed_run(net, files, pp, p, cc):
+def fixed_sim(net, files, pp, p, cc):
     chunks = partition_files(files, net, 1)
     sched = _StaticOneChunkScheduler(
         chunks, net, cc, TransferParams(pipelining=pp, parallelism=p, concurrency=cc)
     )
-    return Simulation(sched.chunks, net, sched, tick_period=5.0).run()
+    return Simulation(sched.chunks, net, sched, tick_period=5.0)
 
 
 def run(claims: Claims):
     rows = []
-    results = {}
+    # one batch sweep over the whole (network x size x parameter) grid via
+    # the eval matrix runner's vectorized fast path
+    grid = []
+    sims = []
     for net_name, net in (("xsede", testbeds.XSEDE), ("loni", testbeds.LONI)):
         for size_name, (size, n) in FILE_SIZES.items():
             files = uniform_files(n, size)
             for param, values in SWEEPS.items():
-                series = []
                 for v in values:
                     pp, p, cc = 0, 1, 1
                     if param == "pipelining":
@@ -54,16 +57,24 @@ def run(claims: Claims):
                         p = v
                     else:
                         cc = v
-                    r = fixed_run(net, files, pp, p, cc)
-                    series.append(r.throughput)
-                    rows.append(
-                        row(
-                            f"fig1_2/{net_name}/{size_name}/{param}={v}",
-                            r.total_time * 1e6,
-                            f"{to_gbps(r.throughput):.3f}Gbps",
-                        )
-                    )
-                results[(net_name, size_name, param)] = series
+                    sims.append(fixed_sim(net, files, pp, p, cc))
+                    grid.append((net_name, size_name, param, v))
+    sweep = run_simulations(
+        sims, names=[f"{n}/{s}/{p}={v}" for n, s, p, v in grid]
+    )
+
+    results = {}
+    for (net_name, size_name, param, v), r in zip(grid, sweep):
+        results.setdefault((net_name, size_name, param), []).append(
+            r.throughput
+        )
+        rows.append(
+            row(
+                f"fig1_2/{net_name}/{size_name}/{param}={v}",
+                r.total_time * 1e6,
+                f"{to_gbps(r.throughput):.3f}Gbps",
+            )
+        )
 
     # --- claims (Sec. 3 / Figs 1-2) ---
     x1 = results[("xsede", "1MB", "pipelining")]

@@ -1,14 +1,21 @@
 """Figures 9-11: algorithm comparison on DES / genome / mixed datasets across
-the three XSEDE site pairs, vs Globus Online and the untuned baseline."""
+the three XSEDE site pairs, vs Globus Online and the untuned baseline.
+
+The whole 135-point sweep runs as ONE batch through the eval matrix runner
+(the vectorized fast path, exact-equivalent to the event simulator per
+eval.difftest), so adding points to the grid barely moves the wall clock."""
 from __future__ import annotations
 
 from benchmarks.common import Claims, row
-from repro.core import run_transfer, testbeds, to_gbps
+from repro.core import testbeds, to_gbps
+from repro.core.runner import build_scheduler
+from repro.core.simulator import Simulation
 from repro.data.filesets import (
     dark_energy_survey,
     genome_sequencing,
     mixed_dataset,
 )
+from repro.eval import run_simulations
 
 PAIRS = {
     "bw-stampede": testbeds.BLUEWATERS_STAMPEDE,
@@ -27,23 +34,35 @@ ALGOS = ("untuned", "globus", "sc", "mc", "promc")
 
 def run(claims: Claims):
     rows = []
-    results = {}
+    # assemble the full grid, then execute it as one batch sweep
+    grid = []
+    sims = []
     for ds_name, make in DATASETS.items():
         files = make()
         for pair, net in PAIRS.items():
             for algo in ALGOS:
-                best = 0.0
                 for cc in (4, 8, 16):
-                    r = run_transfer(files, net, algo, max_cc=cc)
-                    best = max(best, r.throughput)
-                    rows.append(
-                        row(
-                            f"fig9_11/{ds_name}/{pair}/{algo}/maxcc={cc}",
-                            r.total_time * 1e6,
-                            f"{to_gbps(r.throughput):.2f}Gbps",
-                        )
+                    sched = build_scheduler(algo, files, net, max_cc=cc)
+                    sims.append(
+                        Simulation(sched.chunks, sched.network, sched)
                     )
-                results[(ds_name, pair, algo)] = best
+                    grid.append((ds_name, pair, algo, cc))
+    sweep = run_simulations(
+        sims, names=[f"{d}/{p}/{a}/cc{c}" for d, p, a, c in grid]
+    )
+
+    results = {}
+    for (ds_name, pair, algo, cc), r in zip(grid, sweep):
+        results[(ds_name, pair, algo)] = max(
+            results.get((ds_name, pair, algo), 0.0), r.throughput
+        )
+        rows.append(
+            row(
+                f"fig9_11/{ds_name}/{pair}/{algo}/maxcc={cc}",
+                r.total_time * 1e6,
+                f"{to_gbps(r.throughput):.2f}Gbps",
+            )
+        )
 
     # --- claims (Sec. 4.2) ---
     des_bw = {a: results[("des", "bw-stampede", a)] for a in ALGOS}

@@ -25,6 +25,7 @@ from .types import (
     Chunk,
     ChunkType,
     NetworkSpec,
+    TransferParams,
 )
 
 # --------------------------------------------------------------------------
@@ -52,6 +53,9 @@ class Move:
 
 
 Action = object  # Open | Close | Move
+
+#: placeholder for chunks with no files (see Scheduler.__init__)
+_EMPTY_CHUNK_PARAMS = TransferParams(pipelining=0, parallelism=1, concurrency=1)
 
 
 @dataclasses.dataclass
@@ -94,7 +98,13 @@ class Scheduler:
         self.max_cc = max_cc
         for c in self.chunks:
             if c.params is None:
-                assign_chunk_params(c, network, max_cc)
+                if len(c) == 0:
+                    # empty size class (dataset lacks it): Algorithm 1 is
+                    # undefined on zero files; minimal params keep views and
+                    # rate predictions well-formed, no channel ever opens
+                    c.params = _EMPTY_CHUNK_PARAMS
+                else:
+                    assign_chunk_params(c, network, max_cc)
 
     # -- protocol ----------------------------------------------------------
     def initial_actions(self, view: ChunkViews) -> List[Action]:

@@ -26,6 +26,47 @@ from .types import Chunk, FileSpec, NetworkSpec, TransferParams
 _EPS = 1e-12
 
 
+# ------------------------------------------------------------------ #
+# pure stepping hooks (shared with eval.batchsim — keep side-effect free)
+# ------------------------------------------------------------------ #
+
+
+def tick_rate_update(prev_estimate: float, delta_bytes: float, period: float) -> float:
+    """Measured-rate refresh at a controller tick (EMA after the first one).
+
+    The first measurement seeds the estimate; afterwards old and new are
+    blended 50/50, matching the paper's 5-second smoothing.
+    """
+    inst = delta_bytes / period
+    return inst if prev_estimate == 0 else 0.5 * prev_estimate + 0.5 * inst
+
+
+def next_event_dt(
+    time_to_tick: float,
+    deads: Sequence[float],
+    remainings: Sequence[float],
+    rates: Sequence[float],
+) -> float:
+    """Time until the next state change among busy channels, capped by the
+    controller tick. ``deads[i] > 0`` means channel i is in dead time (its
+    next event is dead-time expiry); otherwise it finishes its file in
+    ``remaining/rate``. Channels with no pending event contribute nothing.
+    """
+    dt = time_to_tick
+    for dead, rem, r in zip(deads, remainings, rates):
+        if dead > _EPS:
+            dt = min(dt, dead)
+        elif r > _EPS:
+            dt = min(dt, rem / r)
+    return max(dt, 0.0)
+
+
+def resume_file(remaining: float) -> FileSpec:
+    """Synthetic file re-queued when a busy channel is closed mid-transfer
+    (the in-flight remainder restarts; conservative, matches GridFTP)."""
+    return FileSpec(name="__resume__", size=int(math.ceil(remaining)))
+
+
 @dataclasses.dataclass
 class _SimChannel:
     chunk: int
@@ -101,6 +142,7 @@ class Simulation:
         self.timeline: List[tuple] = []
         self.n_events = 0
         self.n_moves = 0
+        self._started = False
 
     # ------------------------------------------------------------------ #
     # controller plumbing
@@ -179,9 +221,9 @@ class Simulation:
             if ch.busy and ch.file_remaining > 0:
                 # return unfinished remainder as a synthetic file
                 st = self.states[ch.chunk]
-                remainder = int(math.ceil(ch.file_remaining))
-                st.queue.appendleft(FileSpec(name="__resume__", size=remainder))
-                st.queue_bytes += remainder
+                f = resume_file(ch.file_remaining)
+                st.queue.appendleft(f)
+                st.queue_bytes += f.size
             ch.closed = True
             ch.busy = False
             closed.append(ch.params)
@@ -220,89 +262,99 @@ class Simulation:
                 completed.append(i)
         return completed
 
-    def run(self) -> SimResult:
-        total_bytes = float(sum(st.queue_bytes for st in self.states))
+    @property
+    def done(self) -> bool:
+        return all(st.done for st in self.states)
+
+    def start(self) -> None:
+        """Record totals, apply the controller's initial allocation, feed."""
+        self._total_bytes = float(sum(st.queue_bytes for st in self.states))
+        self._next_tick = self.tick_period
+        self._started = True
         self._apply(self.scheduler.initial_actions(self._view()))
         self._feed_channels()
-        next_tick = self.tick_period
 
-        while not all(st.done for st in self.states):
-            if self.t > self.max_time:
-                raise RuntimeError(
-                    f"simulation exceeded max_time={self.max_time}s "
-                    f"(t={self.t:.1f}); remaining="
-                    f"{[self._bytes_remaining(i) for i in range(len(self.states))]}"
-                )
-            self.n_events += 1
-            open_chs = [ch for ch in self.channels if not ch.closed]
-            rates = netmodel.allocate_rates(
-                self.network,
-                [ch.params.parallelism for ch in open_chs],
-                [ch.transferring for ch in open_chs],
+    def step(self) -> None:
+        """Advance to the next event (state transition, completion, or tick).
+
+        This is the unit the batch fast-path mirrors: rates are recomputed
+        from scratch (pure ``netmodel.allocate_rates``), the event horizon
+        comes from ``next_event_dt``, and every post-advance transition
+        (feed / completion callbacks / tick bookkeeping) happens in a fixed
+        order. Keep the order in sync with eval.batchsim.BatchSimulation.
+        """
+        if not self._started:
+            raise RuntimeError("Simulation.step() before start()")
+        if self.t > self.max_time:
+            raise RuntimeError(
+                f"simulation exceeded max_time={self.max_time}s "
+                f"(t={self.t:.1f}); remaining="
+                f"{[self._bytes_remaining(i) for i in range(len(self.states))]}"
             )
-            if self.record_timeline:
-                self.timeline.append((self.t, sum(rates)))
+        self.n_events += 1
+        open_chs = [ch for ch in self.channels if not ch.closed]
+        rates = netmodel.allocate_rates(
+            self.network,
+            [ch.params.parallelism for ch in open_chs],
+            [ch.transferring for ch in open_chs],
+        )
+        if self.record_timeline:
+            self.timeline.append((self.t, sum(rates)))
 
-            # time to next event
-            dt = next_tick - self.t
-            stalled = True
-            for ch, r in zip(open_chs, rates):
-                if ch.closed or not ch.busy:
-                    continue
-                if ch.dead > _EPS:
-                    dt = min(dt, ch.dead)
-                    stalled = False
-                elif r > _EPS:
-                    dt = min(dt, ch.file_remaining / r)
-                    stalled = False
-            if stalled and not any(ch.busy for ch in open_chs):
-                # no channel holds work: either all done (loop exits) or the
-                # scheduler stranded a live chunk — treat as a scheduling bug.
-                live = [i for i, st in enumerate(self.states) if not st.done]
-                held = {ch.chunk for ch in open_chs}
-                if any(i not in held for i in live):
-                    raise RuntimeError(
-                        f"scheduler {self.scheduler.name} stranded chunks "
-                        f"{[self.states[i].chunk.name for i in live]}"
-                    )
-            dt = max(dt, 0.0)
+        busy = [ch for ch in open_chs if ch.busy]
+        dt = next_event_dt(
+            self._next_tick - self.t,
+            [ch.dead for ch in busy],
+            [ch.file_remaining for ch in busy],
+            [r for ch, r in zip(open_chs, rates) if ch.busy],
+        )
+        if not busy:
+            # no channel holds work: either all done (loop exits) or the
+            # scheduler stranded a live chunk — treat as a scheduling bug.
+            live = [i for i, st in enumerate(self.states) if not st.done]
+            held = {ch.chunk for ch in open_chs}
+            if any(i not in held for i in live):
+                raise RuntimeError(
+                    f"scheduler {self.scheduler.name} stranded chunks "
+                    f"{[self.states[i].chunk.name for i in live]}"
+                )
 
-            # advance
-            self.t += dt
-            for ch, r in zip(open_chs, rates):
-                if ch.closed or not ch.busy:
-                    continue
-                if ch.dead > _EPS:
-                    ch.dead = max(0.0, ch.dead - dt)
-                    continue
-                if r > _EPS and dt > 0:
-                    moved = min(ch.file_remaining, r * dt)
-                    ch.file_remaining -= moved
-                    self.states[ch.chunk].delivered += moved
-                if ch.file_remaining <= _EPS:
-                    ch.busy = False
-                    ch.file_remaining = 0.0
+        # advance
+        self.t += dt
+        for ch, r in zip(open_chs, rates):
+            if ch.closed or not ch.busy:
+                continue
+            if ch.dead > _EPS:
+                ch.dead = max(0.0, ch.dead - dt)
+                continue
+            if r > _EPS and dt > 0:
+                moved = min(ch.file_remaining, r * dt)
+                ch.file_remaining -= moved
+                self.states[ch.chunk].delivered += moved
+            if ch.file_remaining <= _EPS:
+                ch.busy = False
+                ch.file_remaining = 0.0
 
+        self._feed_channels()
+        for cid in self._check_completions():
+            self._apply(self.scheduler.on_chunk_complete(self._view(), cid))
             self._feed_channels()
-            for cid in self._check_completions():
-                self._apply(self.scheduler.on_chunk_complete(self._view(), cid))
-                self._feed_channels()
 
-            if self.t >= next_tick - _EPS:
-                # refresh measured per-chunk rates over the last period
-                for st in self.states:
-                    delta = st.delivered - st.delivered_at_last_tick
-                    st.delivered_at_last_tick = st.delivered
-                    inst = delta / self.tick_period
-                    st.rate_estimate = (
-                        inst
-                        if st.rate_estimate == 0
-                        else 0.5 * st.rate_estimate + 0.5 * inst
-                    )
-                self._apply(self.scheduler.on_tick(self._view()))
-                self._feed_channels()
-                next_tick += self.tick_period
+        if self.t >= self._next_tick - _EPS:
+            # refresh measured per-chunk rates over the last period
+            for st in self.states:
+                delta = st.delivered - st.delivered_at_last_tick
+                st.delivered_at_last_tick = st.delivered
+                st.rate_estimate = tick_rate_update(
+                    st.rate_estimate, delta, self.tick_period
+                )
+            self._apply(self.scheduler.on_tick(self._view()))
+            self._feed_channels()
+            self._next_tick += self.tick_period
 
+    def result(self) -> SimResult:
+        if not self._started:
+            raise RuntimeError("Simulation.result() before start()")
         per_chunk_time = {
             st.chunk.name: st.completed_at for st in self.states
         }
@@ -311,12 +363,18 @@ class Simulation:
         return SimResult(
             network=self.network.name,
             scheduler=self.scheduler.name,
-            total_bytes=total_bytes,
+            total_bytes=self._total_bytes,
             total_time=total_time,
-            throughput=total_bytes / total_time,
+            throughput=self._total_bytes / total_time,
             per_chunk_time=per_chunk_time,
             per_chunk_bytes=per_chunk_bytes,
             timeline=self.timeline,
             n_events=self.n_events,
             n_moves=self.n_moves,
         )
+
+    def run(self) -> SimResult:
+        self.start()
+        while not self.done:
+            self.step()
+        return self.result()

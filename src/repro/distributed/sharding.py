@@ -28,6 +28,25 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 AxisSpec = Union[None, str, Tuple[str, ...]]
 
+
+def abstract_mesh(axis_sizes: Sequence[int], axis_names: Sequence[str]):
+    """Version-portable ``AbstractMesh`` constructor.
+
+    Newer jax takes ``AbstractMesh(axis_sizes, axis_names)``; 0.4.x takes a
+    single ``shape_tuple`` of ``(name, size)`` pairs (passing sizes-only there
+    fails with ``TypeError: 'int' object is not iterable``). Rule resolution
+    only needs axis names/sizes, never devices, so an abstract mesh is the
+    right object for tests and planning code on any version.
+    """
+    sizes = tuple(int(s) for s in axis_sizes)
+    names = tuple(axis_names)
+    if len(sizes) != len(names):
+        raise ValueError(f"{len(sizes)} sizes for {len(names)} axis names")
+    try:
+        return jax.sharding.AbstractMesh(sizes, names)
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(names, sizes)))
+
 #: default logical -> physical rules for the production meshes.
 DEFAULT_RULES: Dict[str, AxisSpec] = {
     # activations
@@ -123,6 +142,51 @@ def use_sharding(
         _local.ctx = prev
 
 
+def mark_varying(x, axes):
+    """Mark ``x`` varying over manual ``axes``, across jax generations.
+
+    Newer jax tracks varying-manual-axes types and exposes ``pcast`` (or the
+    earlier ``pvary``); 0.4.x shard_map has no such type system, so there the
+    annotation is a no-op and values are already treated as device-varying.
+    """
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    if hasattr(jax.lax, "pcast"):
+        try:
+            return jax.lax.pcast(x, axes, to="varying")
+        except TypeError:
+            return jax.lax.pcast(x, to="varying", axes=axes)
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, axes)
+    return x
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs, manual_axes):
+    """shard_map manual over ``manual_axes`` only, across jax generations.
+
+    Newer jax spells this ``jax.shard_map(..., axis_names=manual)``. 0.4.x
+    has partial-manual (``auto=rest``) but its XLA CHECK-fails on real model
+    bodies (hlo_sharding_util IsManualSubgroup), so there we fall back to a
+    FULLY manual region: non-manual axes replicate compute instead of
+    sharding it. Collectives over ``manual_axes`` lower identically, so
+    numerics — and therefore the scheduling/compression semantics under
+    test — are unchanged; only legacy-jax step cost differs.
+    ``check_rep=False`` because the legacy replication checker predates
+    explicitly-scheduled per-bucket collectives.
+    """
+    manual = frozenset(manual_axes)
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=set(manual),
+        )
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    return _legacy_shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False,
+    )
+
+
 def vary_for_manual(x):
     """Mark ``x`` varying over any active manual axes (scan-carry inits that
     will accumulate manual-axis-varying values need matching vma types)."""
@@ -130,12 +194,7 @@ def vary_for_manual(x):
     if ctx is None or not ctx.manual_axes:
         return x
     axes = tuple(ctx.manual_axes)
-    try:
-        return jax.tree.map(
-            lambda a: jax.lax.pcast(a, axes, to="varying"), x
-        )
-    except (AttributeError, TypeError):
-        return jax.tree.map(lambda a: jax.lax.pvary(a, axes), x)
+    return jax.tree.map(lambda a: mark_varying(a, axes), x)
 
 
 def shard(x: jax.Array, *names: Optional[str]) -> jax.Array:
@@ -150,6 +209,11 @@ def shard(x: jax.Array, *names: Optional[str]) -> jax.Array:
         return x
     if len(names) != x.ndim:
         raise ValueError(f"shard(): {len(names)} names for rank-{x.ndim} array")
+    if ctx.manual_axes and not hasattr(jax, "shard_map"):
+        # legacy (0.4.x) partial-manual shard_map: XLA CHECK-fails on sharding
+        # constraints inside the auto sub-region (hlo_sharding_util
+        # IsManualSubgroup). Drop the hint; in_specs still seed propagation.
+        return x
     pspec = ctx.resolve(names, x.shape)
     return jax.lax.with_sharding_constraint(x, pspec)
 

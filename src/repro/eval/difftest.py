@@ -1,0 +1,69 @@
+"""Differential testing: batch fast-path vs the event-driven reference.
+
+The batch simulator re-implements the event semantics with vectorized
+numerics; this harness is the contract that keeps the two implementations
+equivalent. For every scenario in a matrix it runs both backends and
+compares throughput (and completion time, which is 1:1 with throughput for
+a fixed byte count) under a relative tolerance — the acceptance bar is 2%
+on every scenario, not on the average.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+from .runner import run_matrix
+from .scenarios import Scenario
+
+DEFAULT_RTOL = 0.02
+
+
+@dataclasses.dataclass(frozen=True)
+class DiffReport:
+    scenario: str
+    event_throughput: float
+    batch_throughput: float
+    event_time: float
+    batch_time: float
+
+    @property
+    def rel_err(self) -> float:
+        denom = max(abs(self.event_throughput), 1e-12)
+        return abs(self.batch_throughput - self.event_throughput) / denom
+
+    def ok(self, rtol: float = DEFAULT_RTOL) -> bool:
+        return self.rel_err <= rtol
+
+
+def diff_matrix(scenarios: Sequence[Scenario]) -> List[DiffReport]:
+    """Run both backends over the matrix and pair up their results."""
+    event = run_matrix(scenarios, backend="event")
+    batch = run_matrix(scenarios, backend="batch")
+    return [
+        DiffReport(
+            scenario=sc.name,
+            event_throughput=e.throughput,
+            batch_throughput=b.throughput,
+            event_time=e.total_time,
+            batch_time=b.total_time,
+        )
+        for sc, e, b in zip(scenarios, event, batch)
+    ]
+
+
+def assert_agreement(
+    reports: Sequence[DiffReport], rtol: float = DEFAULT_RTOL
+) -> None:
+    """Raise with a readable table of every violator (not just the first)."""
+    bad = [r for r in reports if not r.ok(rtol)]
+    if not bad:
+        return
+    lines = [
+        f"{len(bad)}/{len(reports)} scenarios exceed rtol={rtol:.3%}:"
+    ]
+    for r in sorted(bad, key=lambda r: -r.rel_err)[:25]:
+        lines.append(
+            f"  {r.scenario}: event={r.event_throughput:.4g} B/s "
+            f"batch={r.batch_throughput:.4g} B/s rel_err={r.rel_err:.3%}"
+        )
+    raise AssertionError("\n".join(lines))

@@ -1,0 +1,163 @@
+"""Matrix runner: scenarios -> results on either backend + golden snapshots.
+
+Golden snapshots are small JSON files mapping scenario name to the metrics
+both tests and benchmarks care about (throughput, completion time, event and
+move counts). They pin the simulator's behaviour across refactors: a diff in
+a golden file is a *reviewable semantic change*, not a test flake. Refresh
+with::
+
+    PYTHONPATH=src python -m repro.eval.runner --refresh-golden \
+        --out tests/golden/eval_matrix.json
+
+which is also this module's __main__.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, Iterable, List, Optional, Sequence
+
+from repro.core.simulator import SimResult, Simulation
+
+from .batchsim import BatchSimulation
+from .scenarios import Scenario, build_simulation, default_matrix, smoke_matrix
+
+#: metrics captured per scenario; keep additive — removing/renaming a field
+#: invalidates every golden file.
+SNAPSHOT_FIELDS = (
+    "throughput_gbps",
+    "total_time",
+    "total_bytes",
+    "n_moves",
+)
+
+
+def run_scenario(scenario: Scenario, backend: str = "event") -> SimResult:
+    if backend == "event":
+        return build_simulation(scenario).run()
+    if backend == "batch":
+        return run_matrix([scenario], backend="batch")[0]
+    raise ValueError(f"unknown backend {backend!r}; options: event, batch")
+
+
+def run_matrix(
+    scenarios: Sequence[Scenario], backend: str = "batch"
+) -> List[SimResult]:
+    """Run every scenario; order of results matches the input order."""
+    if backend == "event":
+        return [build_simulation(sc).run() for sc in scenarios]
+    if backend == "batch":
+        sims = [build_simulation(sc) for sc in scenarios]
+        return BatchSimulation(sims, names=[sc.name for sc in scenarios]).run()
+    raise ValueError(f"unknown backend {backend!r}; options: event, batch")
+
+
+def run_simulations(
+    sims: Sequence["Simulation"],
+    names: Optional[Sequence[str]] = None,
+    backend: str = "batch",
+) -> List[SimResult]:
+    """Batch-execute prebuilt Simulations (for sweeps that don't fit the
+    Scenario grid, e.g. the figure benchmarks' custom dataset scales)."""
+    if backend == "event":
+        return [sim.run() for sim in sims]
+    if backend == "batch":
+        return BatchSimulation(sims, names=names).run()
+    raise ValueError(f"unknown backend {backend!r}; options: event, batch")
+
+
+# --------------------------------------------------------------------------
+# golden snapshots
+# --------------------------------------------------------------------------
+
+
+def metrics_snapshot(
+    scenarios: Sequence[Scenario], results: Sequence[SimResult]
+) -> Dict[str, Dict[str, float]]:
+    snap: Dict[str, Dict[str, float]] = {}
+    for sc, r in zip(scenarios, results):
+        snap[sc.name] = {
+            "throughput_gbps": round(r.throughput_gbps, 6),
+            "total_time": round(r.total_time, 6),
+            "total_bytes": float(r.total_bytes),
+            "n_moves": int(r.n_moves),
+        }
+    return snap
+
+
+def save_golden(path: str, snapshot: Dict[str, Dict[str, float]]) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(snapshot, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
+def load_golden(path: str) -> Dict[str, Dict[str, float]]:
+    with open(path) as f:
+        return json.load(f)
+
+
+@dataclasses.dataclass(frozen=True)
+class GoldenDeviation:
+    scenario: str
+    field: str
+    golden: float
+    observed: float
+
+    @property
+    def rel_err(self) -> float:
+        denom = max(abs(self.golden), 1e-12)
+        return abs(self.observed - self.golden) / denom
+
+
+def compare_golden(
+    golden: Dict[str, Dict[str, float]],
+    observed: Dict[str, Dict[str, float]],
+    rtol: float = 1e-6,
+    fields: Iterable[str] = ("throughput_gbps", "total_time"),
+) -> List[GoldenDeviation]:
+    """Deviations of ``observed`` from ``golden`` beyond ``rtol`` (plus any
+    scenario missing from either side, reported with NaN metrics)."""
+    out: List[GoldenDeviation] = []
+    for name in sorted(set(golden) | set(observed)):
+        if name not in golden or name not in observed:
+            out.append(
+                GoldenDeviation(name, "presence", float("nan"), float("nan"))
+            )
+            continue
+        for f in fields:
+            dev = GoldenDeviation(name, f, golden[name][f], observed[name][f])
+            if dev.rel_err > rtol:
+                out.append(dev)
+    return out
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--matrix", choices=("default", "smoke"), default="default")
+    ap.add_argument("--backend", choices=("event", "batch"), default="event")
+    ap.add_argument("--out", default="tests/golden/eval_matrix.json")
+    ap.add_argument("--refresh-golden", action="store_true")
+    args = ap.parse_args(argv)
+
+    scenarios = default_matrix() if args.matrix == "default" else smoke_matrix()
+    results = run_matrix(scenarios, backend=args.backend)
+    snap = metrics_snapshot(scenarios, results)
+    if args.refresh_golden:
+        save_golden(args.out, snap)
+        print(f"wrote {len(snap)} scenario metrics to {args.out}")
+        return 0
+    golden = load_golden(args.out)
+    devs = compare_golden(golden, snap)
+    for d in devs[:20]:
+        print(f"DEVIATION {d.scenario} {d.field}: "
+              f"golden={d.golden} observed={d.observed}")
+    print(f"{len(snap)} scenarios, {len(devs)} deviations")
+    return 1 if devs else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

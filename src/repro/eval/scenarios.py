@@ -1,0 +1,166 @@
+"""Declarative scenario matrix: (testbed x dataset x scheduler x maxCC).
+
+A :class:`Scenario` is a pure value — building it twice yields bit-identical
+simulations because every dataset generator is seeded from the scenario
+itself. The default matrix crosses the paper's six WAN testbeds with scaled
+paper datasets and all five schedulers (SC / MC / ProMC / GlobusOnline /
+untuned) plus a maxCC sweep, giving 200+ scenarios that both the event-driven
+simulator and the batch fast-path consume unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Callable, Dict, List, Sequence
+
+from repro.core import testbeds
+from repro.core.runner import build_scheduler
+from repro.core.simulator import Simulation
+from repro.core.types import GB, MB, FileSpec
+from repro.data import filesets
+
+# --------------------------------------------------------------------------
+# dataset registry
+# --------------------------------------------------------------------------
+
+#: name -> builder(seed) -> list[FileSpec]. Scales are chosen so event-driven
+#: runs stay cheap (tens of files) while keeping every size class populated —
+#: the matrix trades per-scenario size for scenario count.
+DATASET_BUILDERS: Dict[str, Callable[[int], List[FileSpec]]] = {
+    "des": lambda seed: filesets.dark_energy_survey(scale=0.05, seed=seed),
+    "genome": lambda seed: filesets.genome_sequencing(scale=0.0004, seed=seed),
+    "mixed": lambda seed: filesets.mixed_dataset(scale=0.008, seed=seed),
+    "small_dominated": lambda seed: filesets.small_dominated_mixed(
+        scale=0.006, seed=seed
+    ),
+    "uniform_small": lambda seed: filesets.uniform_files(40, 4 * MB),
+    "uniform_huge": lambda seed: filesets.uniform_files(6, 8 * GB),
+}
+
+#: the paper's physical WAN testbeds (Tables 1-2); DCN/CKPT presets are
+#: exercised by grad-sync suites, not the transfer matrix.
+NETWORKS: Sequence[str] = (
+    testbeds.XSEDE.name,
+    testbeds.LONI.name,
+    testbeds.BLUEWATERS_STAMPEDE.name,
+    testbeds.STAMPEDE_COMET.name,
+    testbeds.SUPERMIC_BRIDGES.name,
+    testbeds.LAN.name,
+)
+
+ALGORITHMS: Sequence[str] = ("sc", "mc", "promc", "globus", "untuned")
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One point of the evaluation matrix. Hash-stable and JSON-friendly."""
+
+    network: str  # key into testbeds.TESTBEDS
+    dataset: str  # key into DATASET_BUILDERS
+    algorithm: str  # sc | mc | promc | globus | untuned
+    max_cc: int = 8
+    num_chunks: int = 4
+    tick_period: float = 5.0
+    seed: int = 0
+
+    @property
+    def name(self) -> str:
+        return (
+            f"{self.network}|{self.dataset}|{self.algorithm}"
+            f"|cc{self.max_cc}|k{self.num_chunks}|s{self.seed}"
+        )
+
+    @property
+    def dataset_seed(self) -> int:
+        """Seed for the dataset generator: scenario-unique, order-free."""
+        digest = hashlib.sha256(
+            f"{self.dataset}:{self.seed}".encode("utf-8")
+        ).digest()
+        return int.from_bytes(digest[:4], "little")
+
+
+def build_files(scenario: Scenario) -> List[FileSpec]:
+    try:
+        builder = DATASET_BUILDERS[scenario.dataset]
+    except KeyError:
+        raise ValueError(
+            f"unknown dataset {scenario.dataset!r}; "
+            f"options: {sorted(DATASET_BUILDERS)}"
+        )
+    return builder(scenario.dataset_seed)
+
+
+def build_simulation(
+    scenario: Scenario, record_timeline: bool = False
+) -> Simulation:
+    """Scenario -> ready-to-run event-driven Simulation (fresh scheduler)."""
+    network = testbeds.TESTBEDS[scenario.network]
+    sched = build_scheduler(
+        scenario.algorithm,
+        build_files(scenario),
+        network,
+        max_cc=scenario.max_cc,
+        num_chunks=scenario.num_chunks,
+    )
+    return Simulation(
+        sched.chunks,
+        sched.network,  # baselines may degrade the path (GCP mode)
+        sched,
+        tick_period=scenario.tick_period,
+        record_timeline=record_timeline,
+    )
+
+
+# --------------------------------------------------------------------------
+# matrices
+# --------------------------------------------------------------------------
+
+
+def default_matrix(seed: int = 0) -> List[Scenario]:
+    """The full grid: 6 networks x 6 datasets x 5 schedulers (maxCC=8)
+    = 180 scenarios, plus a maxCC sweep {1, 2, 4, 16} of the adaptive
+    schedulers (MC, ProMC) on two contrasting datasets = 96 more,
+    for 276 total."""
+    out: List[Scenario] = []
+    for net in NETWORKS:
+        for ds in DATASET_BUILDERS:
+            for algo in ALGORITHMS:
+                out.append(
+                    Scenario(network=net, dataset=ds, algorithm=algo, seed=seed)
+                )
+    for net in NETWORKS:
+        for ds in ("mixed", "uniform_huge"):
+            for algo in ("mc", "promc"):
+                for cc in (1, 2, 4, 16):
+                    out.append(
+                        Scenario(
+                            network=net, dataset=ds, algorithm=algo,
+                            max_cc=cc, seed=seed,
+                        )
+                    )
+    return out
+
+
+def smoke_matrix(seed: int = 0) -> List[Scenario]:
+    """A 24-scenario cross-section (every network, dataset, and scheduler
+    appears) for tier-1 tests and CI; the full matrix runs behind -m slow."""
+    out: List[Scenario] = []
+    datasets = list(DATASET_BUILDERS)
+    for i, net in enumerate(NETWORKS):
+        for j, algo in enumerate(ALGORITHMS):
+            ds = datasets[(i + j) % len(datasets)]
+            out.append(Scenario(network=net, dataset=ds, algorithm=algo, seed=seed))
+    # cheap extremes: concurrency starvation and oversubscription
+    out.append(
+        Scenario(
+            network=testbeds.LAN.name, dataset="uniform_small",
+            algorithm="promc", max_cc=1, seed=seed,
+        )
+    )
+    out.append(
+        Scenario(
+            network=testbeds.XSEDE.name, dataset="mixed",
+            algorithm="mc", max_cc=16, seed=seed,
+        )
+    )
+    return out

@@ -39,7 +39,7 @@ from repro.distributed.sharding import (  # noqa: E402
 )
 from repro.launch import hlo_analysis  # noqa: E402
 from repro.launch.flops_audit import audit_step  # noqa: E402
-from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.mesh import make_production_mesh, set_mesh  # noqa: E402
 from repro.launch.shapes import (  # noqa: E402
     SHAPES,
     ShapeSpec,
@@ -176,7 +176,7 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool,
         params_specs = param_pspecs(params_shapes, ctx)
         b = shape.global_batch
         clen = cache_len(cfg, shape)
-        with jax.set_mesh(mesh), use_sharding(mesh, rules):
+        with set_mesh(mesh), use_sharding(mesh, rules):
             cache_shapes = jax.eval_shape(lambda: model.init_cache(b, clen))
         cache_specs = cache_pspecs(cache_shapes, ctx)
         params_arg = _shardify(params_shapes, params_specs, mesh)
@@ -229,7 +229,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             fn, args, donate, mesh, cfg_, model = build_cell(
                 arch, shape_name, multi_pod, **build_kw
             )
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 # trip-count-aware global FLOPs + dot bytes
                 # (cost_analysis counts scan bodies once; flops_audit.py)
                 flops_audit, dot_bytes_audit = audit_step(fn, *args)

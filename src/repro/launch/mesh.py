@@ -6,7 +6,25 @@ smoke tests keep the default single device.
 """
 from __future__ import annotations
 
+import contextlib
+
 import jax
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """Version-portable ambient-mesh context.
+
+    ``jax.set_mesh`` only exists on newer jax; older releases (0.4.x) resolve
+    bare PartitionSpecs inside jit through the legacy ``with mesh:`` context.
+    Every launcher/test goes through this helper instead of either API.
+    """
+    if hasattr(jax, "set_mesh"):
+        with jax.set_mesh(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -23,6 +23,7 @@ import jax  # noqa: E402
 
 from repro.launch import hlo_analysis, roofline  # noqa: E402
 from repro.launch.dryrun import build_cell  # noqa: E402
+from repro.launch.mesh import set_mesh  # noqa: E402
 from repro.launch.flops_audit import audit_step  # noqa: E402
 from repro.models.model import build_model, count_active_params  # noqa: E402
 from repro.optim.adamw import AdamWConfig  # noqa: E402
@@ -50,7 +51,7 @@ def measure(arch, shape, multi_pod, *, step_cfg=None, rules_override=None,
             mesh_override=mesh_override,
             serve_params_dtype=serve_params_dtype,
         )
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             fl, db = audit_step(fn, *args)
             compiled = jax.jit(fn, donate_argnums=donate).lower(*args).compile()
         mem = compiled.memory_analysis()

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed import grad_sync
-from repro.distributed.sharding import use_sharding
+from repro.distributed.sharding import mark_varying, shard_map_compat, use_sharding
 from repro.models.model import BaseLM
 from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
 
@@ -34,11 +34,7 @@ PyTree = Any
 
 def _pod_vary(tree: PyTree) -> PyTree:
     """Mark params as pod-varying so grads are pod-local (we own the sync)."""
-    try:
-        f = lambda x: jax.lax.pcast(x, to="varying", axes="pod")
-        return jax.tree.map(f, tree)
-    except (AttributeError, TypeError):
-        return jax.tree.map(lambda x: jax.lax.pvary(x, "pod"), tree)
+    return jax.tree.map(lambda x: mark_varying(x, "pod"), tree)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -270,12 +266,12 @@ def make_train_step(
             raise ValueError("multi_pod requires a mesh")
         n_pods = mesh.shape["pod"]
         inner = partial(_core, manual_axes=frozenset({"pod"}), n_pods=n_pods)
-        step = jax.shard_map(
+        step = shard_map_compat(
             inner,
             mesh=mesh,
             in_specs=(P(), P("pod")),
             out_specs=(P(), P()),
-            axis_names={"pod"},
+            manual_axes={"pod"},
         )
         return step
     return partial(_core, manual_axes=frozenset(), n_pods=1)

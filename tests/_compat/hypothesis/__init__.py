@@ -1,0 +1,132 @@
+"""Minimal offline stand-in for the ``hypothesis`` property-testing library.
+
+This package is only importable when the real ``hypothesis`` distribution is
+absent: ``tests/conftest.py`` appends ``tests/_compat`` to ``sys.path`` iff
+``importlib.util.find_spec("hypothesis")`` fails, so an installed hypothesis
+always wins.
+
+Scope: exactly the surface the repo's property tests use —
+``@given(**strategies)``, ``@settings(max_examples=..., deadline=...)``,
+``assume``, and the strategies in :mod:`hypothesis.strategies`
+(integers/floats/lists/tuples/sampled_from/booleans/just/one_of).
+
+Semantics: each test runs ``max_examples`` times with values drawn from a
+PRNG seeded from the test's qualified name, so runs are deterministic across
+processes and machines. There is no shrinking and no example database; a
+failing example's kwargs are attached to the assertion message instead.
+"""
+from __future__ import annotations
+
+import functools
+import zlib
+
+from . import strategies
+from .strategies import Random
+
+__all__ = ["given", "settings", "assume", "example", "HealthCheck", "strategies"]
+
+#: real hypothesis exposes a version; some tooling sniffs it
+__version__ = "0.0-repro-compat-shim"
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+class _Unsatisfied(Exception):
+    """Raised by assume(False); the current example is silently skipped."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class HealthCheck:
+    """No-op placeholders (the shim has no health checks to suppress)."""
+
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+    data_too_large = "data_too_large"
+
+    @classmethod
+    def all(cls):
+        return [cls.too_slow, cls.filter_too_much, cls.data_too_large]
+
+
+class settings:
+    """Decorator recording run parameters for a ``@given`` wrapper.
+
+    Usable above or below ``@given`` (both orders appear in the wild); only
+    ``max_examples`` matters to the shim, the rest is accepted and ignored.
+    """
+
+    def __init__(self, max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._shim_settings = self
+        return fn
+
+
+def example(*_args, **_kwargs):
+    """Accepted for API compatibility; explicit examples are not replayed."""
+
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+class _HypothesisHandle:
+    """Mimics hypothesis's per-test handle (plugins read .inner_test)."""
+
+    def __init__(self, inner_test):
+        self.inner_test = inner_test
+
+
+def given(*arg_strategies, **kw_strategies):
+    if arg_strategies and kw_strategies:
+        raise TypeError("shim @given supports all-positional or all-keyword")
+
+    def deco(fn):
+        inner = getattr(fn, "_shim_inner", fn)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_shim_settings", None) or getattr(
+                inner, "_shim_settings", None
+            )
+            max_examples = cfg.max_examples if cfg else _DEFAULT_MAX_EXAMPLES
+            rng = Random(zlib.crc32(fn.__qualname__.encode("utf-8")))
+            ran = 0
+            attempts = 0
+            while ran < max_examples and attempts < max_examples * 20:
+                attempts += 1
+                if arg_strategies:
+                    drawn_args = [s.example(rng) for s in arg_strategies]
+                    drawn_kw = {}
+                else:
+                    drawn_args = []
+                    drawn_kw = {k: s.example(rng) for k, s in kw_strategies.items()}
+                try:
+                    inner(*args, *drawn_args, **kwargs, **drawn_kw)
+                except _Unsatisfied:
+                    continue
+                except AssertionError as e:
+                    shown = drawn_kw if drawn_kw else tuple(drawn_args)
+                    raise AssertionError(
+                        f"falsifying example (shim, try #{attempts}): {shown!r}"
+                    ) from e
+                ran += 1
+            return None
+
+        # pytest must not see the strategy parameters as fixtures: drop the
+        # __wrapped__ link functools.wraps installed so inspect.signature
+        # reports the wrapper's own (*args, **kwargs).
+        wrapper.__dict__.pop("__wrapped__", None)
+        wrapper._shim_inner = inner
+        # pytest plugins (anyio, hypothesis's own) sniff fn.hypothesis.inner_test
+        wrapper.hypothesis = _HypothesisHandle(inner)
+        return wrapper
+
+    return deco

@@ -1,0 +1,166 @@
+"""Strategies for the offline hypothesis shim (see package docstring).
+
+Each strategy is a tiny object with ``example(rng) -> value``. Draws bias
+toward boundary values (the endpoints of integer/float ranges, empty/full
+lists) because that is where the real library finds most bugs; the bias
+keeps the shim useful as a regression net, not just a smoke loop.
+"""
+from __future__ import annotations
+
+import math
+from random import Random
+from typing import Callable, List, Optional, Sequence
+
+__all__ = [
+    "SearchStrategy",
+    "integers",
+    "floats",
+    "booleans",
+    "just",
+    "none",
+    "sampled_from",
+    "one_of",
+    "lists",
+    "tuples",
+    "Random",
+]
+
+#: probability that a bounded scalar draw returns a range endpoint
+_EDGE_P = 0.15
+
+
+class SearchStrategy:
+    def __init__(self, draw: Callable[[Random], object], label: str = "strategy"):
+        self._draw = draw
+        self._label = label
+
+    def example(self, rng: Optional[Random] = None):
+        return self._draw(rng if rng is not None else Random())
+
+    def map(self, fn: Callable) -> "SearchStrategy":
+        return SearchStrategy(lambda rng: fn(self._draw(rng)), f"{self._label}.map")
+
+    def filter(self, pred: Callable) -> "SearchStrategy":
+        def draw(rng: Random):
+            for _ in range(1000):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError(f"{self._label}.filter found no passing example")
+
+        return SearchStrategy(draw, f"{self._label}.filter")
+
+    def __repr__(self):
+        return f"<shim {self._label}>"
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    if min_value > max_value:
+        raise ValueError("min_value > max_value")
+
+    def draw(rng: Random) -> int:
+        r = rng.random()
+        if r < _EDGE_P / 2:
+            return min_value
+        if r < _EDGE_P:
+            return max_value
+        return rng.randint(min_value, max_value)
+
+    return SearchStrategy(draw, f"integers({min_value}, {max_value})")
+
+
+def floats(
+    min_value: float,
+    max_value: float,
+    allow_nan: bool = False,
+    allow_infinity: bool = False,
+) -> SearchStrategy:
+    if not (min_value <= max_value):
+        raise ValueError("min_value > max_value")
+
+    log_spread = min_value > 0 and max_value / min_value > 1e3
+
+    def draw(rng: Random) -> float:
+        r = rng.random()
+        if r < _EDGE_P / 2:
+            return float(min_value)
+        if r < _EDGE_P:
+            return float(max_value)
+        if log_spread and rng.random() < 0.5:
+            # wide positive ranges: half the draws log-uniform so tiny
+            # magnitudes are actually exercised
+            return float(
+                math.exp(rng.uniform(math.log(min_value), math.log(max_value)))
+            )
+        return rng.uniform(min_value, max_value)
+
+    return SearchStrategy(draw, f"floats({min_value}, {max_value})")
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5, "booleans()")
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value, f"just({value!r})")
+
+
+def none() -> SearchStrategy:
+    return just(None)
+
+
+def sampled_from(elements: Sequence) -> SearchStrategy:
+    pool = list(elements)
+    if not pool:
+        raise ValueError("sampled_from requires a non-empty sequence")
+    return SearchStrategy(lambda rng: pool[rng.randrange(len(pool))], "sampled_from")
+
+
+def one_of(*strategies: SearchStrategy) -> SearchStrategy:
+    if not strategies:
+        raise ValueError("one_of requires at least one strategy")
+    return SearchStrategy(
+        lambda rng: strategies[rng.randrange(len(strategies))].example(rng),
+        "one_of",
+    )
+
+
+def lists(
+    elements: SearchStrategy,
+    min_size: int = 0,
+    max_size: Optional[int] = None,
+    unique_by: Optional[Callable] = None,
+) -> SearchStrategy:
+    cap = max_size if max_size is not None else min_size + 10
+
+    def draw(rng: Random) -> List:
+        r = rng.random()
+        if r < _EDGE_P / 2:
+            n = min_size
+        elif r < _EDGE_P:
+            n = cap
+        else:
+            n = rng.randint(min_size, cap)
+        out: List = []
+        seen = set()
+        attempts = 0
+        while len(out) < n and attempts < 200 + 50 * n:
+            attempts += 1
+            v = elements.example(rng)
+            if unique_by is not None:
+                k = unique_by(v)
+                if k in seen:
+                    continue
+                seen.add(k)
+            out.append(v)
+        if len(out) < min_size:
+            raise ValueError("lists(): could not satisfy uniqueness constraint")
+        return out
+
+    return SearchStrategy(draw, f"lists(min={min_size}, max={max_size})")
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: tuple(s.example(rng) for s in strategies), "tuples"
+    )

@@ -12,6 +12,14 @@ from repro.models.model import build_model, count_active_params, count_params
 
 ARCH_IDS = sorted(ARCHS)
 
+#: cheap representatives exercised in tier-1; every other architecture's
+#: smoke runs with -m slow (they are all still covered there)
+FAST_ARCHS = {"llama3.2-3b", "phi4-mini-3.8b"}
+ARCH_PARAMS = [
+    pytest.param(a, marks=() if a in FAST_ARCHS else (pytest.mark.slow,))
+    for a in ARCH_IDS
+]
+
 
 def _batch_for(cfg, rng, batch=2, seq=16):
     tokens = jax.random.randint(rng, (batch, seq), 0, cfg.vocab_size)
@@ -34,7 +42,7 @@ def rng():
     return jax.random.PRNGKey(0)
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_forward_and_loss(arch, rng):
     cfg = reduce_for_smoke(get_config(arch))
     model = build_model(cfg)
@@ -48,7 +56,7 @@ def test_forward_and_loss(arch, rng):
     assert float(loss) > 0
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_train_gradient_step(arch, rng):
     cfg = reduce_for_smoke(get_config(arch))
     model = build_model(cfg)
@@ -67,7 +75,7 @@ def test_train_gradient_step(arch, rng):
     assert gnorm > 0
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_prefill_then_decode(arch, rng):
     cfg = reduce_for_smoke(get_config(arch))
     model = build_model(cfg)
@@ -88,7 +96,7 @@ def test_prefill_then_decode(arch, rng):
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_decode_matches_forward(arch, rng):
     """Teacher-forced decode logits must match the train forward logits
     (same params, same tokens) — validates cache correctness."""
@@ -120,6 +128,7 @@ def test_decode_matches_forward(arch, rng):
         )
 
 
+@pytest.mark.slow
 def test_param_counts_sane():
     """Full configs: parameter totals in the right ballpark for their names."""
     expect = {

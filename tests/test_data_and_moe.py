@@ -175,6 +175,7 @@ def test_moe_shared_experts_add_dense_path():
     assert float(jnp.linalg.norm(y_shared)) > 0
 
 
+@pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(
     t=st.sampled_from([8, 16, 64]),

@@ -21,7 +21,8 @@ from repro.distributed.fault import (
     elastic_mesh_plans,
     reallocate_channels_for_straggler,
 )
-from repro.distributed.sharding import DEFAULT_RULES, ShardingCtx
+from repro.distributed.sharding import DEFAULT_RULES, ShardingCtx, abstract_mesh
+from repro.launch.mesh import set_mesh
 
 # ------------------------------------------------------------------ #
 # sharding rules
@@ -29,8 +30,9 @@ from repro.distributed.sharding import DEFAULT_RULES, ShardingCtx
 
 
 def _ctx(shape=(2, 2, 2), axes=("pod", "data", "model"), manual=frozenset()):
-    # AbstractMesh: shape-only (rule resolution never touches devices)
-    mesh = jax.sharding.AbstractMesh(shape, axes)
+    # AbstractMesh: shape-only (rule resolution never touches devices);
+    # abstract_mesh() papers over the 0.4.x vs newer constructor signatures
+    mesh = abstract_mesh(shape, axes)
     return ShardingCtx(mesh=mesh, rules=dict(DEFAULT_RULES), manual_axes=manual)
 
 
@@ -163,6 +165,7 @@ _SUBPROC = textwrap.dedent(
     from repro.train.train_step import StepConfig, init_train_state, make_train_step
     from repro.optim.adamw import AdamWConfig
     from repro.data.synthetic import SyntheticLM, DataConfig
+    from repro.launch.mesh import set_mesh
 
     cfg = reduce_for_smoke(get_config("llama3.2-3b"))
     model = build_model(cfg)
@@ -170,7 +173,7 @@ _SUBPROC = textwrap.dedent(
              next(SyntheticLM(cfg, DataConfig(global_batch=8, seq_len=32)).batches(1)).items()}
     opt = AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=50)
     mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         outs = {}
         for name, scfg in {
             "naive": StepConfig(optimizer=opt, sync_algorithm="naive"),

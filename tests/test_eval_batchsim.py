@@ -1,0 +1,132 @@
+"""Batch fast-path unit tests: vectorized water-filling, queue feeding,
+and single-scenario equivalence with the event-driven simulator."""
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import MB, GB, netmodel, testbeds
+from repro.core.types import FileSpec, TransferParams
+from repro.core.baselines import _StaticOneChunkScheduler
+from repro.core.chunking import partition_files
+from repro.core.simulator import Simulation
+from repro.data.filesets import uniform_files
+from repro.eval.batchsim import BatchSimulation
+from repro.eval.scenarios import Scenario, build_simulation
+
+# ------------------------------------------------------------------ #
+# waterfill_batch == waterfill (the scalar reference)
+# ------------------------------------------------------------------ #
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    caps=st.lists(
+        st.floats(min_value=0.0, max_value=1e10), min_size=1, max_size=12
+    ),
+    pool=st.floats(min_value=0.0, max_value=5e10),
+)
+def test_waterfill_batch_matches_scalar(caps, pool):
+    batch = netmodel.waterfill_batch(np.array([caps]), np.array([pool]))[0]
+    scalar = netmodel.waterfill(caps, pool)
+    assert batch.shape == (len(caps),)
+    np.testing.assert_allclose(batch, scalar, rtol=1e-9, atol=1e-3)
+
+
+def test_waterfill_batch_many_rows():
+    rng = np.random.RandomState(0)
+    caps = rng.uniform(0, 1e9, size=(64, 8))
+    caps[rng.uniform(size=caps.shape) < 0.3] = 0.0  # idle channels
+    pool = rng.uniform(0, 4e9, size=64)
+    out = netmodel.waterfill_batch(caps, pool)
+    for i in range(64):
+        np.testing.assert_allclose(
+            out[i], netmodel.waterfill(list(caps[i]), pool[i]),
+            rtol=1e-9, atol=1e-3,
+        )
+    # conservation: never allocate more than pool nor more than caps
+    assert (out <= caps + 1e-6).all()
+    assert (out.sum(axis=1) <= pool + 1e-3).all()
+
+
+# ------------------------------------------------------------------ #
+# single-scenario equivalence with the event simulator
+# ------------------------------------------------------------------ #
+
+
+def _event_and_batch(files, net, pp, p, cc):
+    def mk():
+        chunks = partition_files(files, net, 1)
+        sched = _StaticOneChunkScheduler(
+            chunks, net, cc,
+            TransferParams(pipelining=pp, parallelism=p, concurrency=cc),
+        )
+        return Simulation(sched.chunks, net, sched, tick_period=5.0)
+
+    event = mk().run()
+    batch = BatchSimulation([mk()]).run()[0]
+    return event, batch
+
+
+@pytest.mark.parametrize(
+    "n,size,pp,p,cc",
+    [
+        (40, 4 * MB, 4, 1, 4),
+        (6, 2 * GB, 0, 4, 2),
+        (25, 64 * MB, 2, 2, 8),
+        (1, 512 * MB, 0, 1, 1),
+    ],
+)
+def test_batch_matches_event_static(n, size, pp, p, cc):
+    ev, ba = _event_and_batch(uniform_files(n, size), testbeds.XSEDE, pp, p, cc)
+    assert ba.total_bytes == ev.total_bytes
+    assert ba.total_time == pytest.approx(ev.total_time, rel=1e-9)
+    assert ba.throughput == pytest.approx(ev.throughput, rel=1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=20),
+    size=st.integers(min_value=1, max_value=int(1 * GB)),
+    cc=st.integers(min_value=1, max_value=10),
+)
+def test_batch_matches_event_property(n, size, cc):
+    ev, ba = _event_and_batch(
+        uniform_files(n, size), testbeds.STAMPEDE_COMET, 2, 2, cc
+    )
+    assert ba.throughput == pytest.approx(ev.throughput, rel=1e-9)
+    assert sum(ba.per_chunk_bytes.values()) == pytest.approx(
+        sum(ev.per_chunk_bytes.values()), rel=1e-9
+    )
+
+
+def test_batch_adaptive_schedulers_match_event():
+    for algo in ("sc", "mc", "promc"):
+        sc = Scenario(
+            network=testbeds.BLUEWATERS_STAMPEDE.name,
+            dataset="mixed",
+            algorithm=algo,
+        )
+        ev = build_simulation(sc).run()
+        ba = BatchSimulation([build_simulation(sc)], names=[sc.name]).run()[0]
+        assert ba.throughput == pytest.approx(ev.throughput, rel=1e-6), algo
+        assert ba.n_moves == ev.n_moves, algo
+
+
+def test_batch_runs_disjoint_scenarios_together():
+    """Scenarios of different sizes/chunk counts coexist in one batch and
+    each matches its solo event run."""
+    scs = [
+        Scenario(network=testbeds.LAN.name, dataset="uniform_small",
+                 algorithm="untuned"),
+        Scenario(network=testbeds.XSEDE.name, dataset="uniform_huge",
+                 algorithm="promc", max_cc=4),
+        Scenario(network=testbeds.LONI.name, dataset="des",
+                 algorithm="globus"),
+    ]
+    batch = BatchSimulation(
+        [build_simulation(s) for s in scs], names=[s.name for s in scs]
+    ).run()
+    for s, ba in zip(scs, batch):
+        ev = build_simulation(s).run()
+        assert ba.throughput == pytest.approx(ev.throughput, rel=1e-9), s.name

@@ -1,0 +1,125 @@
+"""Differential matrix tests: batch fast-path vs event simulator, golden
+snapshot round-trip, and determinism of scenario construction.
+
+The smoke cross-section runs in tier-1; the full 200+-scenario matrix (the
+ISSUE-1 acceptance gate) runs the same assertion behind ``-m slow`` and in
+CI's difftest job.
+"""
+import math
+import os
+
+import pytest
+
+from repro.eval import (
+    Scenario,
+    assert_agreement,
+    default_matrix,
+    diff_matrix,
+    load_golden,
+    metrics_snapshot,
+    run_matrix,
+    save_golden,
+    smoke_matrix,
+)
+from repro.eval.runner import compare_golden
+from repro.eval.scenarios import build_files
+
+
+def test_default_matrix_is_large_and_unique():
+    scs = default_matrix()
+    assert len(scs) >= 200
+    names = [s.name for s in scs]
+    assert len(set(names)) == len(names)
+
+
+def test_scenario_build_is_deterministic():
+    sc = Scenario(network="xsede-lonestar-gordon", dataset="mixed",
+                  algorithm="promc")
+    a, b = build_files(sc), build_files(sc)
+    assert [(f.name, f.size) for f in a] == [(f.name, f.size) for f in b]
+    # a different seed produces a different dataset draw
+    c = build_files(Scenario(network=sc.network, dataset="mixed",
+                             algorithm="promc", seed=1))
+    assert [f.size for f in c] != [f.size for f in a]
+
+
+def test_smoke_matrix_agreement():
+    reports = diff_matrix(smoke_matrix())
+    assert len(reports) >= 20
+    assert_agreement(reports, rtol=0.02)
+    # the backends are the same semantics vectorized, so agreement is in
+    # practice far tighter than the 2% acceptance bar
+    assert max(r.rel_err for r in reports) < 1e-6
+
+
+@pytest.mark.slow
+def test_full_matrix_agreement():
+    """ISSUE-1 acceptance: >= 200 scenarios, every one within 2%."""
+    scs = default_matrix()
+    assert len(scs) >= 200
+    reports = diff_matrix(scs)
+    assert_agreement(reports, rtol=0.02)
+
+
+def test_assert_agreement_reports_all_violators():
+    reports = diff_matrix(smoke_matrix()[:3])
+    bad = [
+        type(r)(
+            scenario=r.scenario,
+            event_throughput=r.event_throughput,
+            batch_throughput=r.event_throughput * 1.5,
+            event_time=r.event_time,
+            batch_time=r.batch_time,
+        )
+        for r in reports
+    ]
+    with pytest.raises(AssertionError) as exc:
+        assert_agreement(bad, rtol=0.02)
+    msg = str(exc.value)
+    assert "3/3 scenarios" in msg
+    for r in bad:
+        assert r.scenario in msg
+
+
+# ------------------------------------------------------------------ #
+# golden snapshots
+# ------------------------------------------------------------------ #
+
+
+def test_golden_roundtrip(tmp_path):
+    scs = smoke_matrix()[:4]
+    res = run_matrix(scs, backend="batch")
+    snap = metrics_snapshot(scs, res)
+    path = str(tmp_path / "golden.json")
+    save_golden(path, snap)
+    assert compare_golden(load_golden(path), snap) == []
+
+
+def test_golden_compare_flags_deviation_and_missing(tmp_path):
+    scs = smoke_matrix()[:3]
+    res = run_matrix(scs, backend="batch")
+    snap = metrics_snapshot(scs, res)
+    mutated = {k: dict(v) for k, v in snap.items()}
+    victim = next(iter(mutated))
+    mutated[victim]["throughput_gbps"] *= 1.10
+    dropped = sorted(mutated)[-1]
+    del mutated[dropped]
+    devs = compare_golden(snap, mutated)
+    kinds = {(d.scenario, d.field) for d in devs}
+    assert (victim, "throughput_gbps") in kinds
+    assert (dropped, "presence") in kinds
+    rel = [d for d in devs if d.field == "throughput_gbps"][0].rel_err
+    assert math.isclose(rel, 0.10, rel_tol=1e-6)
+
+
+def test_checked_in_golden_matches_batch_backend():
+    """The repo's golden file stays in lockstep with the simulator; refresh
+    with `python -m repro.eval.runner --refresh-golden` when semantics
+    change intentionally (see TESTING.md)."""
+    scs = smoke_matrix()
+    golden = load_golden(
+        os.path.join(os.path.dirname(__file__), "golden", "eval_smoke.json")
+    )
+    snap = metrics_snapshot(scs, run_matrix(scs, backend="batch"))
+    devs = compare_golden(golden, snap, rtol=1e-6)
+    assert devs == [], devs[:5]

@@ -12,6 +12,14 @@ from repro.kernels.rwkv6_scan import rwkv6_scan
 KEY = jax.random.PRNGKey(42)
 
 
+def _tiered(cases, fast_n):
+    """First ``fast_n`` cases stay in tier-1; the rest run with -m slow."""
+    return [
+        pytest.param(c, marks=() if i < fast_n else (pytest.mark.slow,))
+        for i, c in enumerate(cases)
+    ]
+
+
 def _rand(key, shape, dtype, scale=1.0):
     return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
 
@@ -33,7 +41,7 @@ FA_CASES = [
 ]
 
 
-@pytest.mark.parametrize("case", FA_CASES)
+@pytest.mark.parametrize("case", _tiered(FA_CASES, 2))
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_flash_attention_matches_ref(case, dtype):
     b, h, kv, s, d, causal, window, cap = case
@@ -55,6 +63,7 @@ def test_flash_attention_matches_ref(case, dtype):
     )
 
 
+@pytest.mark.slow
 def test_flash_attention_block_shape_independence():
     """Result must not depend on the block decomposition."""
     b, h, kv, s, d = 1, 2, 2, 512, 64
@@ -99,7 +108,7 @@ WKV_CASES = [
 ]
 
 
-@pytest.mark.parametrize("case", WKV_CASES)
+@pytest.mark.parametrize("case", _tiered(WKV_CASES, 1))
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_rwkv6_scan_matches_ref(case, dtype):
     b, h, t, d = case
@@ -118,6 +127,7 @@ def test_rwkv6_scan_matches_ref(case, dtype):
     np.testing.assert_allclose(np.asarray(sf), np.asarray(sf_ref), rtol=tol, atol=tol)
 
 
+@pytest.mark.slow
 def test_rwkv6_chunk_independence():
     b, h, t, d = 1, 2, 128, 32
     ks = jax.random.split(KEY, 6)
@@ -133,6 +143,7 @@ def test_rwkv6_chunk_independence():
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_rwkv6_state_carry_composition():
     """scan(T) == scan(first half) then scan(second half with carried state)."""
     b, h, t, d = 1, 2, 64, 16
@@ -164,7 +175,7 @@ def test_rwkv6_state_carry_composition():
 RG_CASES = [(1, 64, 128), (2, 128, 256), (1, 96, 512), (3, 100, 64)]
 
 
-@pytest.mark.parametrize("case", RG_CASES)
+@pytest.mark.parametrize("case", _tiered(RG_CASES, 1))
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_rglru_scan_matches_ref(case, dtype):
     b, t, w = case
@@ -179,6 +190,7 @@ def test_rglru_scan_matches_ref(case, dtype):
     np.testing.assert_allclose(np.asarray(hf), np.asarray(hf_ref), rtol=tol, atol=tol)
 
 
+@pytest.mark.slow
 def test_rglru_matches_associative_scan_in_model():
     """Kernel agrees with the model's associative-scan path."""
     from repro.models.rglru import rglru_scan_ref as assoc_ref
@@ -205,6 +217,7 @@ from hypothesis import given, settings
 import hypothesis.strategies as st
 
 
+@pytest.mark.slow
 @settings(max_examples=12, deadline=None)
 @given(
     s=st.sampled_from([64, 128, 192, 320]),

@@ -64,6 +64,7 @@ def test_checkpoint_gc_keeps_latest(tmp_path):
     assert sorted(steps) == [4, 5]
 
 
+@pytest.mark.slow
 def test_crash_resume_bit_exact(tmp_path):
     """Train 30 steps straight vs train-crash-at-20-resume: same final state."""
     cfg, model, data, scfg = _setup()
@@ -93,6 +94,7 @@ def test_crash_resume_bit_exact(tmp_path):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
+@pytest.mark.slow
 def test_supervisor_restarts_until_success(tmp_path):
     cfg, model, data, scfg = _setup()
     d = str(tmp_path / "sup")
