@@ -1,0 +1,127 @@
+"""Scenario-matrix throughput across backends: the perf trajectory bench.
+
+Measures scenarios/sec of the event reference, the NumPy fabric driver,
+and the JAX jit/vmap driver on the acceptance grid (``full_matrix``, 1000+
+scenarios; ``BENCH_EVAL_GRID=smoke`` shrinks it for CI), plus the
+jax/numpy ratio at increasing grid sizes so the crossover point — the
+grid size beyond which the device loop beats eager NumPy — is part of the
+record. ``benchmarks/run.py --bench-json`` serializes :data:`LAST_SNAPSHOT`
+to ``BENCH_eval_matrix.json`` so future PRs have a baseline to beat.
+
+JAX wall time is recorded cold (first run, including XLA compilation) and
+steady (second run, compile cache warm); scenarios/sec uses the steady
+number, which is what matters for sweep workloads that run grids
+repeatedly.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List, Optional
+
+from benchmarks.common import row
+from repro.eval import run_matrix
+from repro.eval.scenarios import default_matrix, full_matrix, smoke_matrix
+
+#: snapshot of the last run(), serialized by ``run.py --bench-json``
+LAST_SNAPSHOT: Optional[Dict] = None
+
+_JAX_TARGET_RATIO = 2.0
+
+
+def _time_backend(scenarios, backend: str, repeat: int = 2) -> Dict[str, float]:
+    t0 = time.perf_counter()
+    run_matrix(scenarios, backend=backend)
+    cold = time.perf_counter() - t0
+    # steady state: best of ``repeat`` further runs (for jax the first run
+    # above also populated the XLA compile cache)
+    steady = cold if backend != "jax" else float("inf")
+    for _ in range(repeat if backend == "jax" else repeat - 1):
+        t0 = time.perf_counter()
+        run_matrix(scenarios, backend=backend)
+        steady = min(steady, time.perf_counter() - t0)
+    return {
+        "wall_s_cold": round(cold, 3),
+        "wall_s": round(steady, 3),
+        "scen_per_s": round(len(scenarios) / max(steady, 1e-9), 2),
+    }
+
+
+def run(claims) -> List[Dict]:
+    global LAST_SNAPSHOT
+    grid_name = os.environ.get("BENCH_EVAL_GRID", "full")
+    grids = {
+        "smoke": smoke_matrix,
+        "default": default_matrix,
+        "full": full_matrix,
+    }
+    scenarios = grids[grid_name]()
+    n = len(scenarios)
+
+    backends = {}
+    for backend in ("event", "numpy", "jax"):
+        backends[backend] = _time_backend(scenarios, backend)
+
+    # jax/numpy ratio vs grid size: where does the device loop cross over?
+    by_size: Dict[str, float] = {}
+    crossover = None
+    for name in ("smoke", "default", "full"):
+        sub = grids[name]()
+        if len(sub) > n:  # never exceed the requested grid's cost
+            break
+        if len(sub) == n:  # the requested grid was measured above
+            np_t = backends["numpy"]["wall_s"]
+            jx_t = backends["jax"]["wall_s"]
+        else:
+            np_t = _time_backend(sub, "numpy")["wall_s"]
+            jx_t = _time_backend(sub, "jax")["wall_s"]
+        ratio = round(np_t / max(jx_t, 1e-9), 3)
+        by_size[str(len(sub))] = ratio
+        if crossover is None and ratio >= 1.0:
+            crossover = len(sub)
+
+    ratio_full = round(
+        backends["numpy"]["wall_s"] / max(backends["jax"]["wall_s"], 1e-9), 3
+    )
+    if grid_name == "full":
+        claims.check(
+            "jax fabric backend beats NumPy scenarios/sec at full-matrix "
+            "scale",
+            ratio_full >= 1.0,
+            f"{ratio_full:.2f}x at {n} scenarios (steady-state)",
+        )
+        claims.check(
+            f"jax backend >= {_JAX_TARGET_RATIO:.0f}x NumPy (stretch target)",
+            ratio_full >= _JAX_TARGET_RATIO,
+            f"measured {ratio_full:.2f}x at {n}; ratio by grid size "
+            f"{by_size}, crossover at {crossover} scenarios",
+        )
+    else:
+        # small grids favor eager NumPy by design (device-loop round-trip
+        # overhead); record the measurement without gating on it
+        claims.check(
+            f"eval matrix bench runs on all backends (grid={grid_name})",
+            True,
+            f"jax/numpy {ratio_full:.2f}x at {n} scenarios",
+        )
+
+    LAST_SNAPSHOT = {
+        "bench": "eval_matrix",
+        "timestamp": round(time.time(), 1),
+        "grid": {"name": grid_name, "scenarios": n},
+        "backends": backends,
+        "jax_vs_numpy": {
+            "steady_ratio": ratio_full,
+            "target": _JAX_TARGET_RATIO,
+            "ratio_by_grid_size": by_size,
+            "crossover_scenarios": crossover,
+        },
+    }
+    return [
+        row(
+            f"eval_matrix/{b}",
+            m["wall_s"] * 1e6 / max(n, 1),
+            f"{m['scen_per_s']} scen/s",
+        )
+        for b, m in backends.items()
+    ]

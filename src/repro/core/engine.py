@@ -26,6 +26,7 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional, Sequence
 
+from . import netmodel
 from .schedulers import Close, ChunkView, Move, Open, Scheduler
 from .types import Chunk, FileSpec, NetworkSpec, TransferParams
 
@@ -43,27 +44,56 @@ class TransferTask:
     finalize: Optional[Callable[[], None]] = None
 
 
+class _DstFd:
+    """One destination fd for a TransferTask's lifetime.
+
+    The old implementation reopened (and closed) the destination on every
+    ``pwrite`` — per-block syscall churn that dominated small-block striped
+    writes and defeated kernel write-behind. ``pwrite`` is positional and
+    thread-safe on a shared fd, so the stripe sub-threads need no lock on
+    the data path; the lock only guards lazy open and close.
+    """
+
+    __slots__ = ("path", "_fd", "_lock")
+
+    def __init__(self, path: str):
+        self.path = path
+        self._fd = None
+        self._lock = threading.Lock()
+
+    def get(self) -> int:
+        fd = self._fd
+        if fd is None:
+            with self._lock:
+                if self._fd is None:
+                    self._fd = os.open(
+                        self.path, os.O_RDWR | os.O_CREAT, 0o644
+                    )
+                fd = self._fd
+        return fd
+
+    def close(self) -> None:
+        with self._lock:
+            if self._fd is not None:
+                os.close(self._fd)
+                self._fd = None
+
+
 def file_task(spec: FileSpec, src: str, dst: str) -> TransferTask:
-    """Copy a real file src -> dst (dst preallocated at first write)."""
+    """Copy a real file src -> dst (dst created at first write; one fd held
+    for the task's lifetime, released in ``finalize``)."""
 
     def read(offset: int, length: int) -> bytes:
         with open(src, "rb") as f:
             f.seek(offset)
             return f.read(length)
 
-    lock = threading.Lock()
+    out = _DstFd(dst)
 
     def write(offset: int, data: bytes) -> None:
-        with lock:
-            # open in r+b, creating if needed
-            flags = os.O_RDWR | os.O_CREAT
-            fd = os.open(dst, flags, 0o644)
-            try:
-                os.pwrite(fd, data, offset)
-            finally:
-                os.close(fd)
+        os.pwrite(out.get(), data, offset)
 
-    return TransferTask(spec=spec, read=read, write=write)
+    return TransferTask(spec=spec, read=read, write=write, finalize=out.close)
 
 
 def bytes_task(
@@ -74,14 +104,12 @@ def bytes_task(
     def read(offset: int, length: int) -> bytes:
         return data[offset : offset + length]
 
-    def write(offset: int, chunk: bytes) -> None:
-        fd = os.open(dst, os.O_RDWR | os.O_CREAT, 0o644)
-        try:
-            os.pwrite(fd, chunk, offset)
-        finally:
-            os.close(fd)
+    out = _DstFd(dst)
 
-    return TransferTask(spec=spec, read=read, write=write)
+    def write(offset: int, chunk: bytes) -> None:
+        os.pwrite(out.get(), chunk, offset)
+
+    return TransferTask(spec=spec, read=read, write=write, finalize=out.close)
 
 
 @dataclasses.dataclass
@@ -175,8 +203,9 @@ class TransferEngine:
         def transfer_one(f: FileSpec, params: TransferParams, chunk_idx: int):
             task = tasks[f.name]
             if self.inject_latency:
-                # control-channel gap amortized by pipelining depth
-                gap = self.network.rtt / (1.0 + params.pipelining)
+                # control-channel gap amortized by pipelining depth (uses
+                # the control RTT on asymmetric paths, like the simulator)
+                gap = netmodel.control_gap(self.network, params)
                 time.sleep((gap + self.network.unhidden_overhead) * self.latency_scale)
             size = f.size
             p = params.parallelism if size >= self.STRIPE_MIN else 1

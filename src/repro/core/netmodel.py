@@ -49,42 +49,11 @@ def waterfill(caps: Sequence[float], pool: float) -> List[float]:
     return alloc
 
 
-def waterfill_batch(caps, pool):
-    """Vectorized :func:`waterfill` over a batch of scenarios.
-
-    ``caps``: float array (S, C) of per-entity rate ceilings — entries for
-    absent/idle channels must be 0 (a zero cap allocates zero, exactly like
-    being excluded). ``pool``: float array (S,). Returns (S, C) allocations.
-
-    Uses the closed form of max-min fairness with ceilings: every entity gets
-    ``min(cap, lam)`` for the water level ``lam`` solving
-    ``sum_i min(cap_i, lam) = min(pool, sum_i cap_i)`` — the same fixpoint the
-    scalar progressive-filling loop converges to, found here by sorting each
-    row once instead of iterating.
-    """
-    import numpy as np
-
-    caps = np.asarray(caps, dtype=np.float64)
-    pool = np.asarray(pool, dtype=np.float64)
-    S, C = caps.shape
-    if C == 0:
-        return np.zeros((S, 0))
-    caps_sorted = np.sort(caps, axis=1)
-    prefix = np.cumsum(caps_sorted, axis=1)
-    pool_eff = np.clip(np.minimum(pool, prefix[:, -1]), 0.0, None)
-    # candidate level if the k smallest caps are filled outright:
-    #   lam_k = (pool_eff - prefix[k-1]) / (C - k); valid when lam_k <= c_(k)
-    prev = np.concatenate([np.zeros((S, 1)), prefix[:, :-1]], axis=1)
-    denom = (C - np.arange(C)).astype(np.float64)
-    lam_k = (pool_eff[:, None] - prev) / denom
-    valid = lam_k <= caps_sorted + 1e-9 * np.maximum(caps_sorted, 1.0)
-    # rows with pool >= sum(caps) have every candidate invalid except the
-    # last; argmax picks the first valid k
-    k = np.argmax(valid, axis=1)
-    no_valid = ~valid.any(axis=1)
-    lam = lam_k[np.arange(S), k]
-    lam[no_valid] = caps_sorted[no_valid, -1]
-    return np.minimum(caps, lam[:, None])
+# The batched (vectorized) form of :func:`waterfill` lives in the
+# backend-neutral fabric kernel layer; re-exported here because this module
+# is the scalar reference it mirrors (the hypothesis suite pins the two
+# together on random inputs).
+from repro.eval.fabric.kernels import waterfill_batch  # noqa: E402,F401
 
 
 def per_channel_disk_lane(network: NetworkSpec) -> float:
@@ -125,17 +94,28 @@ def allocate_rates(
     return rates
 
 
+def control_gap(network: NetworkSpec, params: TransferParams) -> float:
+    """Control-channel ack gap per file, amortized by pipelining.
+
+    Asymmetric paths (satellite uplinks, congested reverse routes) pay the
+    *control* RTT here, which may differ from the data-path RTT that sizes
+    the TCP window (``NetworkSpec.control_rtt``).
+    """
+    rtt = network.control_rtt if network.control_rtt is not None else network.rtt
+    return rtt / (1.0 + params.pipelining)
+
+
 def file_start_dead_time(network: NetworkSpec, params: TransferParams) -> float:
     """Serial per-file overhead paid before bytes flow on a channel.
 
-    control gap   RTT/(1+pipelining): with q commands queued at the server the
-                  round-trip ack gap amortizes over q+1 files (Sec. 3,
-                  "multiple transfer commands can be queued up").
+    control gap   control-RTT/(1+pipelining): with q commands queued at the
+                  server the round-trip ack gap amortizes over q+1 files
+                  (Sec. 3, "multiple transfer commands can be queued up").
     unhidden      server-side per-file processing pipelining cannot hide;
                   bounds the small-file pipelining win near 2x (Fig 1a/2a).
     disk          per-file seek/open/close/metadata cost.
     """
-    gap = network.rtt / (1.0 + params.pipelining)
+    gap = control_gap(network, params)
     return gap + network.unhidden_overhead + network.disk.per_file_overhead
 
 

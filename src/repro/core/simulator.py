@@ -26,45 +26,16 @@ from .types import Chunk, FileSpec, NetworkSpec, TransferParams
 _EPS = 1e-12
 
 
-# ------------------------------------------------------------------ #
-# pure stepping hooks (shared with eval.batchsim — keep side-effect free)
-# ------------------------------------------------------------------ #
-
-
-def tick_rate_update(prev_estimate: float, delta_bytes: float, period: float) -> float:
-    """Measured-rate refresh at a controller tick (EMA after the first one).
-
-    The first measurement seeds the estimate; afterwards old and new are
-    blended 50/50, matching the paper's 5-second smoothing.
-    """
-    inst = delta_bytes / period
-    return inst if prev_estimate == 0 else 0.5 * prev_estimate + 0.5 * inst
-
-
-def next_event_dt(
-    time_to_tick: float,
-    deads: Sequence[float],
-    remainings: Sequence[float],
-    rates: Sequence[float],
-) -> float:
-    """Time until the next state change among busy channels, capped by the
-    controller tick. ``deads[i] > 0`` means channel i is in dead time (its
-    next event is dead-time expiry); otherwise it finishes its file in
-    ``remaining/rate``. Channels with no pending event contribute nothing.
-    """
-    dt = time_to_tick
-    for dead, rem, r in zip(deads, remainings, rates):
-        if dead > _EPS:
-            dt = min(dt, dead)
-        elif r > _EPS:
-            dt = min(dt, rem / r)
-    return max(dt, 0.0)
-
-
-def resume_file(remaining: float) -> FileSpec:
-    """Synthetic file re-queued when a busy channel is closed mid-transfer
-    (the in-flight remainder restarts; conservative, matches GridFTP)."""
-    return FileSpec(name="__resume__", size=int(math.ceil(remaining)))
+# The pure stepping hooks (tick EMA, next-event horizon, resume-file
+# construction) moved to the backend-neutral fabric layer — they are the
+# scalar references the batched fabric kernels mirror. Re-exported here
+# because this event loop consumes them directly and they are part of this
+# module's historical API.
+from repro.eval.fabric.reference import (  # noqa: E402
+    next_event_dt,
+    resume_file,
+    tick_rate_update,
+)
 
 
 @dataclasses.dataclass

@@ -17,7 +17,56 @@ Calibration targets (paper observations the simulator should land near):
 """
 from __future__ import annotations
 
+import dataclasses
+import math
+
 from .types import MB, DiskSpec, NetworkSpec, gbps
+
+#: Ethernet-ish segment size used by the Mathis loss-window model below.
+_MSS = 1460.0
+
+
+def impaired_variant(
+    base: NetworkSpec,
+    name: str,
+    *,
+    loss_rate: float = 0.0,
+    jitter: float = 0.0,
+    control_rtt: float | None = None,
+) -> NetworkSpec:
+    """Derive a pathologically impaired path from a clean testbed preset.
+
+    loss_rate     random segment loss. Per-stream TCP throughput follows the
+                  Mathis bound ``MSS/(RTT*sqrt(loss))`` — modeled by capping
+                  the effective window at ``MSS * sqrt(1.5/loss)`` bytes, so
+                  parallelism (many small windows) becomes the decisive
+                  knob, exactly the regime the paper's Sec. 3 argues for.
+    jitter        RTT variance. Ack clocking keys on the worst-case RTT, so
+                  the window-limited rate sees ``rtt + 2*jitter`` and the
+                  per-file command gap inherits the same inflation.
+    control_rtt   asymmetric routes: the control channel's round trip when
+                  it differs from the data path (satellite uplink, congested
+                  reverse path). Inflates per-file dead time only; omit to
+                  keep the base path's (a)symmetry.
+    """
+    rtt = base.rtt + 2.0 * jitter
+    buffer_size = base.buffer_size
+    window_efficiency = base.window_efficiency
+    if loss_rate > 0.0:
+        mathis_window = _MSS * math.sqrt(1.5 / loss_rate)
+        buffer_size = int(min(buffer_size, mathis_window))
+        # loss recovery also wastes a slice of whatever window remains
+        window_efficiency *= 0.9
+    fields = dict(
+        name=name,
+        rtt=rtt,
+        buffer_size=buffer_size,
+        window_efficiency=window_efficiency,
+        unhidden_overhead=base.unhidden_overhead + jitter,
+    )
+    if control_rtt is not None:  # else inherit the base's control path
+        fields["control_rtt"] = control_rtt
+    return dataclasses.replace(base, **fields)
 
 # ---------------------------------------------------------------------------
 # Table 1 environments (Sec. 3 parameter-effect experiments, Figs. 1-2)
@@ -125,6 +174,39 @@ LAN = NetworkSpec(
 )
 
 # ---------------------------------------------------------------------------
+# Impaired-path variants (loss / jitter / asymmetric RTT) — the conditions
+# HARP-style sweeps (arXiv:1708.03053) and the two-phase model
+# (arXiv:1812.11255) tune against. These widen the full evaluation matrix
+# beyond the paper's clean research WANs.
+# ---------------------------------------------------------------------------
+
+#: transatlantic-grade path with residual random loss: per-stream windows
+#: collapse to the Mathis bound, so parallelism decides everything.
+LOSSY_TRANSATLANTIC = impaired_variant(
+    STAMPEDE_COMET,
+    "lossy-transatlantic",
+    loss_rate=2e-4,
+)
+LOSSY_TRANSATLANTIC = dataclasses.replace(LOSSY_TRANSATLANTIC, rtt=90e-3)
+
+#: overlay/VPN path with heavy RTT variance: ack clocking keys on the
+#: worst-case RTT and the per-file command gap inflates with it.
+JITTERY_OVERLAY = impaired_variant(
+    XSEDE,
+    "jittery-overlay",
+    jitter=12e-3,
+)
+
+#: asymmetric route: clean 20 ms data path, but control traffic rides a
+#: congested 180 ms reverse path — pipelining (not parallelism) is the
+#: decisive knob because only the per-file command gap is inflated.
+ASYM_CONTROL_PATH = impaired_variant(
+    dataclasses.replace(LONI, rtt=20e-3),
+    "asym-control-path",
+    control_rtt=180e-3,
+)
+
+# ---------------------------------------------------------------------------
 # TPU-fabric adaptation presets (DESIGN.md Sec. 2)
 # ---------------------------------------------------------------------------
 
@@ -173,6 +255,9 @@ TESTBEDS = {
         STAMPEDE_COMET,
         SUPERMIC_BRIDGES,
         LAN,
+        LOSSY_TRANSATLANTIC,
+        JITTERY_OVERLAY,
+        ASYM_CONTROL_PATH,
         DCN,
         CKPT_STORE,
     )

@@ -164,6 +164,11 @@ class NetworkSpec:
     #: server-enforced cap on data streams per transfer (GridFTP server
     #: configuration; SuperMIC-like endpoints clamp this low).
     max_streams_per_channel: int = 64
+    #: round-trip time of the *control* channel when it differs from the
+    #: data path (asymmetric routes: satellite uplinks, congested reverse
+    #: paths). None means symmetric — the data RTT governs the per-file
+    #: command/ack gap too.
+    control_rtt: Optional[float] = None
 
     @property
     def bdp(self) -> float:

@@ -138,6 +138,41 @@ def equal_class_dataset(
     return out
 
 
+def heavy_tail_dataset(
+    scale: float = 1.0, seed: int = 6, alpha: float = 1.1
+) -> List[FileSpec]:
+    """Pareto(alpha~1.1) file sizes: the classic storage-census shape where
+    a handful of files carry most of the bytes while the count is dominated
+    by small ones. Stresses chunk partitioning harder than the paper's
+    datasets — the HUGE chunk is nearly all bytes, the SMALL chunk nearly
+    all files — which is exactly where scheduler channel-allocation
+    differences show up.
+    """
+    rng = np.random.RandomState(seed)
+    n = max(12, int(round(4000 * scale)))
+    sizes = 256 * KB * (1.0 + rng.pareto(alpha, size=n))
+    sizes = np.clip(sizes, 64 * KB, 20 * GB)
+    rng.shuffle(sizes)
+    return _spec_list("htail", sizes)
+
+
+def small_file_swarm(scale: float = 1.0, seed: int = 7) -> List[FileSpec]:
+    """Mixed-small-file swarm: 95% of files in 32 KB..2 MB plus a thin mid
+    band, no huge anchors. Per-file dead time (pipelining) dominates and
+    bandwidth is nearly irrelevant — the opposite corner of the parameter
+    space from ``uniform_huge``.
+    """
+    rng = np.random.RandomState(seed)
+    n = max(20, int(round(15_000 * scale)))
+    n_tiny = int(0.95 * n)
+    n_mid = max(1, n - n_tiny)
+    tiny = np.exp(rng.uniform(np.log(32 * KB), np.log(2 * MB), size=n_tiny))
+    mid = rng.uniform(2 * MB, 48 * MB, size=n_mid)
+    sizes = np.concatenate([tiny, mid])
+    rng.shuffle(sizes)
+    return _spec_list("swarm", sizes)
+
+
 def uniform_files(n: int, size: int, prefix: str = "u") -> List[FileSpec]:
     """n equal files — used for the Fig. 1/2 single-parameter sweeps."""
     return [FileSpec(name=f"{prefix}/{i:06d}", size=size) for i in range(n)]
@@ -149,4 +184,6 @@ DATASETS = {
     "mixed": mixed_dataset,
     "small_dominated": small_dominated_mixed,
     "chunk_count_mixed": chunk_count_mixed,
+    "heavy_tail": heavy_tail_dataset,
+    "small_file_swarm": small_file_swarm,
 }

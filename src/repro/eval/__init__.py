@@ -5,44 +5,59 @@ The paper's claim is breadth: heuristic tuning wins across widely varying
 breadth into an executable object:
 
   - :mod:`scenarios`  declarative Scenario grid + deterministic builders
-  - :mod:`batchsim`   vectorized fluid fast-path advancing ALL scenarios'
-                      channel states in batched NumPy arrays between
-                      controller decision points — multi-fold faster sweeps
-                      than looping the event loop per scenario (measured
-                      2.5-3x on the default matrix, growing with matrix
-                      size and channel counts) at bit-exact agreement
-  - :mod:`runner`     matrix runner over either backend + golden JSON
-                      metric snapshots shared by tests and benchmarks
-  - :mod:`difftest`   differential harness asserting fast-path/event-sim
-                      agreement within tolerance on every scenario
+                      (``default_matrix`` 276 scenarios, ``full_matrix``
+                      1000+ with impaired-path testbeds and heavy-tail
+                      datasets)
+  - :mod:`fabric`     backend-neutral fluid kernels + the batched drivers
+                      (NumPy fast path; JAX jit/vmap device loop; optional
+                      Pallas water-fill)
+  - :mod:`batchsim`   compatibility alias for the NumPy driver
+  - :mod:`runner`     matrix runner over any backend (event/numpy/jax)
+                      with chunked execution + golden JSON snapshots
+  - :mod:`difftest`   differential harness asserting backend agreement
+                      within tolerance on every scenario
 
 Every future tuning PR is validated against this matrix; see TESTING.md.
-"""
-from .batchsim import BatchSimulation
-from .difftest import DiffReport, assert_agreement, diff_matrix
-from .runner import (
-    load_golden,
-    metrics_snapshot,
-    run_matrix,
-    run_scenario,
-    run_simulations,
-    save_golden,
-)
-from .scenarios import Scenario, build_simulation, default_matrix, smoke_matrix
 
-__all__ = [
-    "BatchSimulation",
-    "DiffReport",
-    "assert_agreement",
-    "diff_matrix",
-    "Scenario",
-    "build_simulation",
-    "default_matrix",
-    "smoke_matrix",
-    "run_matrix",
-    "run_scenario",
-    "run_simulations",
-    "metrics_snapshot",
-    "save_golden",
-    "load_golden",
-]
+Submodules resolve lazily (PEP 562) so that ``core.netmodel`` /
+``core.simulator`` can re-export fabric kernels without an import cycle.
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    "BatchSimulation": ".batchsim",
+    "FabricSimulation": ".fabric.driver",
+    "JaxFabricSimulation": ".fabric.jax_backend",
+    "DiffReport": ".difftest",
+    "assert_agreement": ".difftest",
+    "diff_matrix": ".difftest",
+    "Scenario": ".scenarios",
+    "build_simulation": ".scenarios",
+    "default_matrix": ".scenarios",
+    "full_matrix": ".scenarios",
+    "smoke_matrix": ".scenarios",
+    "run_matrix": ".runner",
+    "run_scenario": ".runner",
+    "run_simulations": ".runner",
+    "metrics_snapshot": ".runner",
+    "save_golden": ".runner",
+    "load_golden": ".runner",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    try:
+        modname = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    value = getattr(importlib.import_module(modname, __name__), name)
+    globals()[name] = value
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

@@ -1,555 +1,15 @@
-"""Vectorized fluid fast-path: all scenarios advance in batched NumPy arrays.
+"""Compatibility shim: the vectorized fluid fast-path moved to
+:mod:`repro.eval.fabric`.
 
-The event-driven :class:`repro.core.simulator.Simulation` spends its time in
-per-event Python: water-filling over channels, horizon search, per-channel
-advancement, queue feeding. This module runs the *same* event semantics for
-S scenarios at once — channel state lives in (S, C) arrays, per-chunk queue
-state in (S, K) arrays over one flat file-size buffer, and rates come from
-the closed-form ``netmodel.waterfill_batch``. Each outer iteration advances
-every live scenario to its own next event simultaneously; scenarios are
-independent, so their clocks drift apart freely.
-
-Python only runs where the controller genuinely needs it: scheduler
-callbacks (``on_tick`` of ProMC, ``on_chunk_complete`` of SC/MC/ProMC) and
-the rare re-queue of an interrupted file after a channel closure. Baseline
-schedulers inherit the no-op callbacks, so their scenarios complete without
-leaving the vectorized path at all.
-
-Fidelity contract: state transitions mirror ``Simulation.step`` exactly —
-same rate model (``netmodel.channel_rate_cap`` / disk aggregate / max-min
-fill), same dead-time accounting (``netmodel.file_start_dead_time``,
-``channel_open_cost``), same tick EMA (``simulator.tick_rate_update``), same
-feed -> completions -> tick ordering. ``eval.difftest`` enforces agreement
-on every matrix scenario; if you change one side, change the other.
+``BatchSimulation`` is the NumPy instantiation of the backend-neutral
+fabric driver (:class:`repro.eval.fabric.driver.FabricSimulation`); the
+JAX instantiation lives in :mod:`repro.eval.fabric.jax_backend`. The
+fidelity contract that used to live here is now the
+:mod:`repro.eval.fabric` package docstring.
 """
 from __future__ import annotations
 
-import math
-from typing import List, Optional, Sequence
+from .fabric.driver import FabricSimulation as BatchSimulation
+from .fabric.driver import _ScenarioRuntime  # noqa: F401  (test hooks)
 
-import numpy as np
-
-from repro.core import netmodel
-from repro.core.schedulers import Close, ChunkView, Move, Open, Scheduler
-from repro.core.simulator import (
-    SimResult,
-    Simulation,
-    next_event_dt,  # noqa: F401  (scalar reference the arrays mirror)
-    resume_file,
-    tick_rate_update,
-)
-from repro.core.types import TransferParams
-
-_EPS = 1e-12
-_NO_CHUNK = -1
-
-
-class _ScenarioRuntime:
-    """Python-side (non-vectorizable) per-scenario state: the controller,
-    chunk metadata, and re-queued (resume) files."""
-
-    __slots__ = (
-        "index", "name", "network", "scheduler", "chunks", "params",
-        "prepend", "trivial_tick", "trivial_complete", "tick_period",
-        "finish_t", "n_moves", "total_bytes", "avg_fs", "predict_cache",
-        "timeline",
-    )
-
-    def __init__(self, index: int, name: str, sim: Simulation):
-        self.index = index
-        self.name = name
-        self.network = sim.network
-        self.scheduler = sim.scheduler
-        self.chunks = [st.chunk for st in sim.states]
-        self.params: List[TransferParams] = [c.params for c in self.chunks]
-        #: re-queued resume files per chunk, LIFO (deque.appendleft mirror)
-        self.prepend: List[List[float]] = [[] for _ in self.chunks]
-        cls = type(sim.scheduler)
-        self.trivial_tick = cls.on_tick is Scheduler.on_tick
-        self.trivial_complete = (
-            cls.on_chunk_complete is Scheduler.on_chunk_complete
-        )
-        self.tick_period = sim.tick_period
-        self.finish_t = 0.0
-        self.n_moves = 0
-        self.total_bytes = float(sum(st.queue_bytes for st in sim.states))
-        self.avg_fs = [max(c.avg_file_size, 1.0) for c in self.chunks]
-        self.timeline: List[tuple] = []
-        #: (chunk, n_channels, total_channels) -> predicted rate; the model
-        #: is pure, and allocations revisit the same few tuples constantly
-        self.predict_cache: dict = {}
-
-
-class BatchSimulation:
-    """Run many scenarios through the fluid transfer model simultaneously.
-
-    Construction takes ready ``Simulation`` objects (one per scenario, fresh
-    schedulers) so scenario assembly stays in one place (eval.scenarios);
-    only their initial state is consumed, never their event loop.
-    """
-
-    def __init__(
-        self,
-        sims: Sequence[Simulation],
-        names: Optional[Sequence[str]] = None,
-    ):
-        if names is None:
-            names = [f"scenario{i}" for i in range(len(sims))]
-        self.rt = [
-            _ScenarioRuntime(i, n, sim)
-            for i, (n, sim) in enumerate(zip(names, sims))
-        ]
-        S = len(self.rt)
-        self.S = S
-        self.C = 4  # channel capacity; grows on demand
-        K = max((len(r.chunks) for r in self.rt), default=1)
-        self.K = K
-
-        # scenario scalars
-        self.t = np.zeros(S)
-        self.done = np.zeros(S, dtype=bool)
-        self.next_tick = np.array([r.tick_period for r in self.rt])
-        self.tick_period = np.array([r.tick_period for r in self.rt])
-        self.n_events = np.zeros(S, dtype=np.int64)
-        # per-scenario settings carried over from the event Simulations
-        self.max_time = np.array([sim.max_time for sim in sims])
-        self.record_timeline = np.array(
-            [sim.record_timeline for sim in sims], dtype=bool
-        )
-        self.has_prepend = np.zeros(S, dtype=bool)
-        self.trivial_tick = np.array([r.trivial_tick for r in self.rt])
-        self.trivial_complete = np.array(
-            [r.trivial_complete for r in self.rt]
-        )
-        # network constants
-        self.bw = np.array([r.network.bandwidth for r in self.rt])
-        self.disk_rate = np.array(
-            [r.network.disk.streaming_rate for r in self.rt]
-        )
-        self.sat_cc = np.array(
-            [r.network.disk.saturation_cc for r in self.rt], dtype=np.int64
-        )
-        self.contention = np.array(
-            [r.network.disk.contention for r in self.rt]
-        )
-
-        # channel state, padded to capacity C
-        self.chunk_of = np.full((S, self.C), _NO_CHUNK, dtype=np.int64)
-        self.dead = np.zeros((S, self.C))
-        self.rem = np.zeros((S, self.C))
-        self.busy = np.zeros((S, self.C), dtype=bool)
-        self.cap = np.zeros((S, self.C))
-
-        # per-chunk state, padded to K (padding slots are born done/empty)
-        self.n_chunks = np.array(
-            [len(r.chunks) for r in self.rt], dtype=np.int64
-        )
-        self.chunk_done = np.zeros((S, K), dtype=bool)
-        self.chunk_done[np.arange(K)[None, :] >= self.n_chunks[:, None]] = True
-        self.completed_at = np.full((S, K), math.nan)
-        self.delivered = np.zeros((S, K))
-        self.delivered_at_tick = np.zeros((S, K))
-        self.rate_est = np.zeros((S, K))
-        self.queue_bytes = np.zeros((S, K))
-        #: serial per-file dead time per chunk (params are fixed per chunk)
-        self.fsdt = np.zeros((S, K))
-
-        # FIFO queues: one flat size buffer + (offset, length, cursor) per
-        # (scenario, chunk). Resume files go to rt.prepend (LIFO), consumed
-        # before the cursor moves — exactly deque.appendleft/popleft order.
-        sizes: List[float] = []
-        self.qoff = np.zeros((S, K), dtype=np.int64)
-        self.qlen = np.zeros((S, K), dtype=np.int64)
-        self.qptr = np.zeros((S, K), dtype=np.int64)
-        #: count of re-queued resume files per (scenario, chunk)
-        self.prepend_n = np.zeros((S, K), dtype=np.int64)
-        for r in self.rt:
-            for k, chunk in enumerate(r.chunks):
-                self.qoff[r.index, k] = len(sizes)
-                self.qlen[r.index, k] = len(chunk.files)
-                self.queue_bytes[r.index, k] = chunk.total_bytes
-                sizes.extend(float(f.size) for f in chunk.files)
-                self.fsdt[r.index, k] = netmodel.file_start_dead_time(
-                    r.network, r.params[k]
-                )
-        self.qsizes = np.asarray(sizes, dtype=np.float64)
-
-    # ------------------------------------------------------------------ #
-    # channel bookkeeping (mirrors Simulation._open_channel/_close_channels)
-    # ------------------------------------------------------------------ #
-
-    def _grow(self) -> None:
-        pad = self.C
-        self.C *= 2
-
-        def z(a, fill):
-            return np.concatenate(
-                [a, np.full((self.S, pad), fill, dtype=a.dtype)], axis=1
-            )
-
-        self.chunk_of = z(self.chunk_of, _NO_CHUNK)
-        self.dead = z(self.dead, 0.0)
-        self.rem = z(self.rem, 0.0)
-        self.busy = z(self.busy, False)
-        self.cap = z(self.cap, 0.0)
-
-    def _open_channel(
-        self, r: _ScenarioRuntime, chunk: int, prev: Optional[TransferParams]
-    ) -> None:
-        s = r.index
-        free = np.flatnonzero(self.chunk_of[s] == _NO_CHUNK)
-        if free.size == 0:
-            self._grow()
-            free = np.flatnonzero(self.chunk_of[s] == _NO_CHUNK)
-        c = free[0]
-        params = r.params[chunk]
-        self.chunk_of[s, c] = chunk
-        self.dead[s, c] = netmodel.channel_open_cost(r.network, params, prev)
-        self.rem[s, c] = 0.0
-        self.busy[s, c] = False
-        self.cap[s, c] = netmodel.channel_rate_cap(r.network, params.parallelism)
-
-    def _close_channels(
-        self, r: _ScenarioRuntime, chunk: int, n: int
-    ) -> List[TransferParams]:
-        s = r.index
-        cols = np.flatnonzero(self.chunk_of[s] == chunk)
-        # idle first, matching the event simulator's preference
-        cols = sorted(cols, key=lambda c: bool(self.busy[s, c]))
-        closed: List[TransferParams] = []
-        for c in cols[:n]:
-            if self.busy[s, c] and self.rem[s, c] > 0:
-                f = resume_file(self.rem[s, c])
-                r.prepend[chunk].append(float(f.size))
-                self.queue_bytes[s, chunk] += f.size
-                self.prepend_n[s, chunk] += 1
-                self.has_prepend[s] = True
-            self.chunk_of[s, c] = _NO_CHUNK
-            self.busy[s, c] = False
-            self.dead[s, c] = 0.0
-            self.rem[s, c] = 0.0
-            self.cap[s, c] = 0.0
-            closed.append(r.params[chunk])
-        return closed
-
-    def _apply(self, r: _ScenarioRuntime, actions) -> None:
-        for act in actions:
-            if isinstance(act, Open):
-                for _ in range(act.n):
-                    self._open_channel(r, act.chunk, prev=None)
-            elif isinstance(act, Close):
-                self._close_channels(r, act.chunk, act.n)
-            elif isinstance(act, Move):
-                moved = self._close_channels(r, act.src, act.n)
-                for prev in moved:
-                    self._open_channel(r, act.dst, prev=prev)
-                r.n_moves += len(moved)
-
-    # ------------------------------------------------------------------ #
-    # queue feeding
-    # ------------------------------------------------------------------ #
-
-    def _files_left(self, s: int, k: int) -> int:
-        return int(self.qlen[s, k] - self.qptr[s, k]) + len(
-            self.rt[s].prepend[k]
-        )
-
-    def _feed_py(self, r: _ScenarioRuntime) -> None:
-        """Scalar feed for one scenario (resume files present / after
-        scheduler actions). Mirrors Simulation._feed_channels."""
-        s = r.index
-        idle = np.flatnonzero((self.chunk_of[s] != _NO_CHUNK) & ~self.busy[s])
-        for c in idle:
-            k = int(self.chunk_of[s, c])
-            if r.prepend[k]:
-                size = r.prepend[k].pop()
-                self.prepend_n[s, k] -= 1
-            elif self.qptr[s, k] < self.qlen[s, k]:
-                size = self.qsizes[self.qoff[s, k] + self.qptr[s, k]]
-                self.qptr[s, k] += 1
-            else:
-                continue
-            self.queue_bytes[s, k] -= size
-            self.busy[s, c] = True
-            self.rem[s, c] = size
-            self.dead[s, c] += self.fsdt[s, k]
-        self.has_prepend[s] = bool(self.prepend_n[s].any())
-
-    def _feed_vec(self, rows: np.ndarray) -> None:
-        """Batched feed for scenarios without resume files: every idle open
-        channel pulls the next file of its chunk straight off the flat
-        buffer. Channels of one chunk are interchangeable (same params), so
-        assignment order within a chunk is immaterial."""
-        idle = (self.chunk_of != _NO_CHUNK) & ~self.busy
-        idle[~rows] = False
-        s_idx, c_idx = np.nonzero(idle)
-        if s_idx.size == 0:
-            return
-        k_idx = self.chunk_of[s_idx, c_idx]
-        # rank of each idle channel within its (scenario, chunk) group;
-        # (s, c) pairs arrive lexicographically sorted, so stable-sorting by
-        # group key keeps column order and a running offset gives the rank
-        group = s_idx * self.K + k_idx
-        order = np.argsort(group, kind="stable")
-        g_sorted = group[order]
-        boundary = np.concatenate([[True], g_sorted[1:] != g_sorted[:-1]])
-        idx = np.arange(g_sorted.size)
-        rank = idx - np.maximum.accumulate(np.where(boundary, idx, 0))
-        fidx = self.qptr[s_idx[order], k_idx[order]] + rank
-        valid = fidx < self.qlen[s_idx[order], k_idx[order]]
-        so, co, ko = s_idx[order][valid], c_idx[order][valid], k_idx[order][valid]
-        sizes = self.qsizes[self.qoff[so, ko] + fidx[valid]]
-        self.busy[so, co] = True
-        self.rem[so, co] = sizes
-        self.dead[so, co] += self.fsdt[so, ko]
-        np.add.at(self.queue_bytes, (so, ko), -sizes)
-        np.add.at(self.qptr, (so, ko), 1)
-
-    # ------------------------------------------------------------------ #
-    # controller plumbing (mirrors Simulation._view)
-    # ------------------------------------------------------------------ #
-
-    def _bytes_remaining(self, r: _ScenarioRuntime, k: int) -> float:
-        s = r.index
-        mask = (self.chunk_of[s] == k) & self.busy[s]
-        return float(self.queue_bytes[s, k]) + float(self.rem[s][mask].sum())
-
-    def _view(self, r: _ScenarioRuntime) -> List[ChunkView]:
-        s = r.index
-        ko = self.chunk_of[s]
-        open_mask = ko != _NO_CHUNK
-        n_open_total = int(open_mask.sum())
-        nK = len(r.chunks)
-        n_ch = np.bincount(ko[open_mask], minlength=nK)
-        busy_ch = np.bincount(ko[open_mask & self.busy[s]], minlength=nK)
-        inflight = np.zeros(nK)
-        np.add.at(
-            inflight, ko[open_mask & self.busy[s]],
-            self.rem[s][open_mask & self.busy[s]],
-        )
-        views = []
-        for k, chunk in enumerate(r.chunks):
-            key = (k, int(n_ch[k]), n_open_total)
-            predicted = r.predict_cache.get(key)
-            if predicted is None:
-                predicted = netmodel.predict_chunk_rate(
-                    r.network,
-                    r.avg_fs[k],
-                    chunk.params,
-                    max(int(n_ch[k]), 1),
-                    total_active_channels=max(1, n_open_total),
-                )
-                r.predict_cache[key] = predicted
-            views.append(
-                ChunkView(
-                    index=k,
-                    ctype=chunk.ctype,
-                    bytes_remaining=float(self.queue_bytes[s, k])
-                    + float(inflight[k]),
-                    files_remaining=self._files_left(s, k) + int(busy_ch[k]),
-                    throughput=float(self.rate_est[s, k]),
-                    n_channels=int(n_ch[k]),
-                    done=bool(self.chunk_done[s, k]),
-                    predicted_rate=predicted,
-                )
-            )
-        return views
-
-    def _check_completions_py(self, r: _ScenarioRuntime) -> List[int]:
-        s = r.index
-        completed = []
-        for k in range(len(r.chunks)):
-            if self.chunk_done[s, k]:
-                continue
-            busy = bool(((self.chunk_of[s] == k) & self.busy[s]).any())
-            if self._files_left(s, k) == 0 and not busy:
-                self._mark_complete(s, k)
-                completed.append(k)
-        return completed
-
-    def _mark_complete(self, s: int, k: int) -> None:
-        self.chunk_done[s, k] = True
-        self.queue_bytes[s, k] = 0.0
-        self.completed_at[s, k] = self.t[s]
-
-    # ------------------------------------------------------------------ #
-    # the vectorized event loop
-    # ------------------------------------------------------------------ #
-
-    def start(self) -> None:
-        for r in self.rt:
-            self._apply(r, r.scheduler.initial_actions(self._view(r)))
-            self._feed_py(r)
-
-    def step(self) -> None:
-        """One synchronized sweep: every live scenario advances to its own
-        next event. Mirrors Simulation.step; keep the orders in lockstep."""
-        act = ~self.done
-        if not act.any():
-            return
-        over = act & (self.t > self.max_time)
-        if over.any():
-            s = int(np.flatnonzero(over)[0])
-            raise RuntimeError(
-                f"batch scenario {self.rt[s].name!r} exceeded max_time="
-                f"{self.max_time[s]}s (t={self.t[s]:.1f})"
-            )
-        self.n_events[act] += 1
-
-        transferring = self.busy & (self.dead <= _EPS)
-        n_t = transferring.sum(axis=1)
-        over_sat = np.maximum(0, n_t - self.sat_cc)
-        agg_disk = self.disk_rate / (1.0 + self.contention * over_sat)
-        pool = np.where(n_t > 0, np.minimum(self.bw, agg_disk), 0.0)
-        # water-fill only live rows: the sort inside is the costliest
-        # per-iteration op and finished scenarios would pay it for nothing
-        rates = np.zeros_like(self.rem)
-        act_rows = np.flatnonzero(act)
-        rates[act_rows] = netmodel.waterfill_batch(
-            np.where(transferring[act_rows], self.cap[act_rows], 0.0),
-            pool[act_rows],
-        )
-        rec = act & self.record_timeline
-        if rec.any():
-            agg = rates.sum(axis=1)
-            for s in np.flatnonzero(rec):
-                self.rt[s].timeline.append((float(self.t[s]), float(agg[s])))
-
-        # horizon: min over dead-time expiries, file completions, tick
-        dead_evt = np.where(self.busy & (self.dead > _EPS), self.dead, np.inf)
-        with np.errstate(divide="ignore", invalid="ignore"):
-            xfer_evt = np.where(
-                transferring & (rates > _EPS), self.rem / rates, np.inf
-            )
-        dt = np.minimum(
-            self.next_tick - self.t,
-            np.minimum(dead_evt.min(axis=1), xfer_evt.min(axis=1)),
-        )
-        dt = np.where(act, np.maximum(dt, 0.0), 0.0)
-
-        # stranded-chunk detection (scheduler bug), as in the event sim
-        no_busy = act & ~self.busy.any(axis=1)
-        for s in np.flatnonzero(no_busy):
-            r = self.rt[s]
-            live = np.flatnonzero(~self.chunk_done[s])
-            held = set(self.chunk_of[s][self.chunk_of[s] != _NO_CHUNK].tolist())
-            if any(int(k) not in held for k in live):
-                raise RuntimeError(
-                    f"scheduler {r.scheduler.name} stranded chunks "
-                    f"{[r.chunks[int(k)].name for k in live]} in {r.name!r}"
-                )
-
-        # advance every live scenario by its own dt
-        self.t += np.where(act, dt, 0.0)
-        dtc = dt[:, None]
-        in_dead = self.busy & (self.dead > _EPS)
-        np.copyto(
-            self.dead,
-            np.maximum(0.0, self.dead - dtc),
-            where=in_dead & act[:, None],
-        )
-        moving = transferring & (rates > _EPS) & act[:, None]
-        moved = np.where(moving, np.minimum(self.rem, rates * dtc), 0.0)
-        self.rem -= moved
-        s_idx, c_idx = np.nonzero(moved)
-        if s_idx.size:
-            np.add.at(
-                self.delivered,
-                (s_idx, self.chunk_of[s_idx, c_idx]),
-                moved[s_idx, c_idx],
-            )
-        finished = transferring & act[:, None] & (self.rem <= _EPS)
-        self.busy[finished] = False
-        self.rem[finished] = 0.0
-
-        # ---- feed (vector fast path; scalar where resume files exist) ----
-        fin_any = finished.any(axis=1)
-        self._feed_vec(act & ~self.has_prepend)
-        for s in np.flatnonzero(act & self.has_prepend):
-            self._feed_py(self.rt[s])
-
-        # ---- chunk completions ----
-        # a chunk can only complete in an iteration where one of its
-        # channels finished a file (or lost its channels to an action, which
-        # is handled inside the python branches below)
-        busy_per_chunk = np.zeros((self.S, self.K), dtype=np.int64)
-        bs, bc = np.nonzero(self.busy)
-        if bs.size:
-            np.add.at(busy_per_chunk, (bs, self.chunk_of[bs, bc]), 1)
-        files_left = self.qlen - self.qptr + self.prepend_n
-        completed = (
-            act[:, None]
-            & ~self.chunk_done
-            & (files_left == 0)
-            & (busy_per_chunk == 0)
-        )
-        comp_rows = completed.any(axis=1)
-        # trivial controllers (baselines): pure vector bookkeeping
-        vec_rows = comp_rows & self.trivial_complete & ~self.has_prepend
-        if vec_rows.any():
-            m = completed & vec_rows[:, None]
-            self.chunk_done |= m
-            self.queue_bytes[m] = 0.0
-            rs, ks = np.nonzero(m)
-            self.completed_at[rs, ks] = self.t[rs]
-        # real controllers: event-ordered python (detect -> callback -> feed)
-        for s in np.flatnonzero(comp_rows & ~vec_rows):
-            r = self.rt[s]
-            for k in self._check_completions_py(r):
-                actions = r.scheduler.on_chunk_complete(self._view(r), k)
-                if actions:
-                    self._apply(r, actions)
-                    self._feed_py(r)
-
-        # ---- controller tick ----
-        tick_hit = act & (self.t >= self.next_tick - _EPS)
-        if tick_hit.any():
-            delta = self.delivered - self.delivered_at_tick
-            inst = delta / self.tick_period[:, None]
-            ema = np.where(
-                self.rate_est == 0.0, inst, 0.5 * self.rate_est + 0.5 * inst
-            )
-            rows = tick_hit[:, None]
-            np.copyto(self.rate_est, ema, where=rows)
-            np.copyto(self.delivered_at_tick, self.delivered, where=rows)
-            for s in np.flatnonzero(tick_hit & ~self.trivial_tick):
-                r = self.rt[s]
-                actions = r.scheduler.on_tick(self._view(r))
-                if actions:
-                    self._apply(r, actions)
-                    self._feed_py(r)
-            self.next_tick += np.where(tick_hit, self.tick_period, 0.0)
-
-        # ---- scenario completion ----
-        newly = act & self.chunk_done.all(axis=1) & (fin_any | comp_rows)
-        for s in np.flatnonzero(newly):
-            self.rt[s].finish_t = float(self.t[s])
-        self.done |= newly
-
-    def run(self) -> List[SimResult]:
-        self.start()
-        while not self.done.all():
-            self.step()
-        return [self._result(r) for r in self.rt]
-
-    def _result(self, r: _ScenarioRuntime) -> SimResult:
-        s = r.index
-        total_time = max(r.finish_t, _EPS)
-        return SimResult(
-            network=r.network.name,
-            scheduler=r.scheduler.name,
-            total_bytes=r.total_bytes,
-            total_time=total_time,
-            throughput=r.total_bytes / total_time,
-            per_chunk_time={
-                c.name: float(self.completed_at[s, k])
-                for k, c in enumerate(r.chunks)
-            },
-            per_chunk_bytes={
-                c.name: float(self.delivered[s, k])
-                for k, c in enumerate(r.chunks)
-            },
-            timeline=r.timeline,
-            n_events=int(self.n_events[s]),
-            n_moves=r.n_moves,
-        )
+__all__ = ["BatchSimulation"]

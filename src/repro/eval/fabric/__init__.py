@@ -1,0 +1,66 @@
+"""Backend-neutral fluid-kernel layer for the scenario-matrix simulator.
+
+This package owns the *array semantics* of the fluid transfer model. The
+kernels in :mod:`repro.eval.fabric.kernels` — batched water-filling,
+per-file dead time, tick EMA, next-event horizon reduction, and the
+feed/complete/tick state transitions — are written once against a minimal
+array-API shim (:mod:`repro.eval.fabric.shim`) and instantiated twice:
+
+  * **NumPy** (:class:`repro.eval.fabric.driver.FabricSimulation` with
+    :func:`repro.eval.fabric.shim.numpy_ops`) — the eager batched fast
+    path; bit-compatible successor of the old ``eval.batchsim`` module.
+  * **JAX** (:class:`repro.eval.fabric.jax_backend.JaxFabricSimulation`)
+    — the same kernels traced per-scenario, ``vmap``-mapped over the
+    batch, and advanced inside a ``jit``-compiled ``lax.while_loop`` so
+    scenarios run on-device between controller decision points.
+
+An optional Pallas water-fill kernel
+(:mod:`repro.eval.fabric.kernels.waterfill_pallas`) sits behind the same
+``(caps, pool) -> rates`` signature with an interpreter-mode fallback for
+CPU-only hosts.
+
+Fidelity contract
+-----------------
+State transitions mirror ``core.simulator.Simulation.step`` exactly — the
+same rate model (``netmodel.channel_rate_cap`` / disk aggregate pool /
+max-min water-filling), the same serial dead-time accounting
+(``netmodel.file_start_dead_time``, ``netmodel.channel_open_cost``), the
+same controller-tick EMA (``fabric.reference.tick_rate_update``), and the
+same feed -> completions -> tick ordering within an event sweep. Scenarios
+are mutually independent, so backends may advance their clocks in any
+interleaving (the JAX backend runs each scenario ahead to its own next
+Python decision point), but every *per-scenario* event sequence must be
+identical. ``eval.difftest`` enforces per-scenario throughput agreement
+across all backends on every matrix scenario; if you change one side,
+change the other — and the scalar references in
+:mod:`repro.eval.fabric.reference` / ``core.netmodel`` — together.
+"""
+from __future__ import annotations
+
+import importlib
+
+#: public name -> defining submodule, resolved lazily (PEP 562) so that
+#: ``core.netmodel``/``core.simulator`` can re-export fabric pieces without
+#: dragging the driver (and its core imports) into their import cycle.
+_EXPORTS = {
+    "ArrayOps": ".shim",
+    "numpy_ops": ".shim",
+    "jax_ops": ".shim",
+    "FabricSimulation": ".driver",
+    "JaxFabricSimulation": ".jax_backend",
+    "waterfill_batch": ".kernels",
+    "get_backend": ".registry",
+    "BACKENDS": ".registry",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    try:
+        modname = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    value = getattr(importlib.import_module(modname, __name__), name)
+    globals()[name] = value
+    return value

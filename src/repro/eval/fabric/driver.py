@@ -1,0 +1,640 @@
+"""Batched fluid fast-path driver over the backend-neutral fabric kernels.
+
+The event-driven :class:`repro.core.simulator.Simulation` spends its time in
+per-event Python: water-filling over channels, horizon search, per-channel
+advancement, queue feeding. :class:`FabricSimulation` runs the *same* event
+semantics for S scenarios at once — channel state lives in (S, C) arrays,
+per-chunk queue state in (S, K) arrays over one flat file-size buffer, and
+all array math goes through :mod:`repro.eval.fabric.kernels` against an
+:class:`repro.eval.fabric.shim.ArrayOps` namespace. Each outer sweep
+advances every live scenario to its own next event simultaneously;
+scenarios are independent, so their clocks drift apart freely.
+
+Python only runs where the controller genuinely needs it: scheduler
+callbacks (``on_tick`` of ProMC, ``on_chunk_complete`` of SC/MC/ProMC) and
+the rare re-queue of an interrupted file after a channel closure. Baseline
+schedulers inherit the no-op callbacks, so their scenarios complete without
+leaving the vectorized path at all.
+
+A sweep is split into :meth:`FabricSimulation._advance` (rates, horizon,
+fluid byte movement) and :meth:`FabricSimulation._post` (feed, completions,
+tick, scenario-done detection); the JAX backend reuses ``_post`` verbatim
+for scenarios its on-device loop parks at a Python decision point.
+
+The fidelity contract against ``Simulation.step`` lives in the package
+docstring (:mod:`repro.eval.fabric`); ``eval.difftest`` enforces it on
+every matrix scenario.
+"""
+from __future__ import annotations
+
+import math
+import os
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import netmodel
+from repro.core.schedulers import Close, ChunkView, Move, Open, Scheduler
+from repro.core.simulator import SimResult, Simulation
+from repro.core.types import TransferParams
+
+from . import kernels
+from .reference import resume_file
+from .shim import NO_CHUNK, ArrayOps, numpy_ops
+
+_EPS = 1e-12
+_NO_CHUNK = NO_CHUNK
+
+
+class _ScenarioRuntime:
+    """Python-side (non-vectorizable) per-scenario state: the controller,
+    chunk metadata, and re-queued (resume) files."""
+
+    __slots__ = (
+        "index", "name", "network", "scheduler", "chunks", "params",
+        "prepend", "trivial_tick", "trivial_complete", "tick_period",
+        "n_moves", "total_bytes", "avg_fs", "predict_cache", "timeline",
+        "archive",
+    )
+
+    def __init__(self, index: int, name: str, sim: Simulation):
+        self.index = index
+        #: final metrics snapshot taken when the scenario's row is retired
+        #: by compaction: (finish_t, n_events, completed_at, delivered)
+        self.archive = None
+        self.name = name
+        self.network = sim.network
+        self.scheduler = sim.scheduler
+        self.chunks = [st.chunk for st in sim.states]
+        self.params: List[TransferParams] = [c.params for c in self.chunks]
+        #: re-queued resume files per chunk, LIFO (deque.appendleft mirror)
+        self.prepend: List[List[float]] = [[] for _ in self.chunks]
+        cls = type(sim.scheduler)
+        self.trivial_tick = cls.on_tick is Scheduler.on_tick
+        self.trivial_complete = (
+            cls.on_chunk_complete is Scheduler.on_chunk_complete
+        )
+        self.tick_period = sim.tick_period
+        self.n_moves = 0
+        self.total_bytes = float(sum(st.queue_bytes for st in sim.states))
+        self.avg_fs = [max(c.avg_file_size, 1.0) for c in self.chunks]
+        self.timeline: List[tuple] = []
+        #: (chunk, n_channels, total_channels) -> predicted rate; the model
+        #: is pure, and allocations revisit the same few tuples constantly
+        self.predict_cache: dict = {}
+
+
+#: every per-scenario row array of the driver state, for compaction and
+#: device upload; (S,) scalars and (S, C)/(S, K) tables alike
+_ROW_ARRAYS = (
+    "t", "done", "next_tick", "tick_period", "n_events", "finish_t",
+    "fin_any", "max_time", "record_timeline", "has_prepend",
+    "trivial_tick", "trivial_complete", "bw", "disk_rate", "sat_cc",
+    "contention", "n_chunks", "chunk_of", "dead", "rem", "busy", "cap",
+    "chunk_done", "completed_at", "delivered", "delivered_at_tick",
+    "rate_est", "queue_bytes", "fsdt", "qoff", "qlen", "qptr", "prepend_n",
+)
+
+
+class FabricSimulation:
+    """Run many scenarios through the fluid transfer model simultaneously.
+
+    Construction takes ready ``Simulation`` objects (one per scenario, fresh
+    schedulers) so scenario assembly stays in one place (eval.scenarios);
+    only their initial state is consumed, never their event loop.
+
+    ``ops`` selects the array backend for the batched sweeps (NumPy by
+    default; the JAX subclass drives the same state on-device).
+    ``waterfill_impl`` may name an alternative water-fill kernel
+    (``"closed"`` — the sort-based closed form — or ``"pallas"`` for the
+    optional Pallas kernel; also via ``REPRO_FABRIC_WATERFILL``).
+    """
+
+    def __init__(
+        self,
+        sims: Sequence[Simulation],
+        names: Optional[Sequence[str]] = None,
+        *,
+        ops: Optional[ArrayOps] = None,
+        waterfill_impl: Optional[str] = None,
+    ):
+        if names is None:
+            names = [f"scenario{i}" for i in range(len(sims))]
+        self.ops = ops or numpy_ops()
+        impl = waterfill_impl or os.environ.get(
+            "REPRO_FABRIC_WATERFILL", "closed"
+        )
+        if impl not in ("closed", "pallas"):
+            raise ValueError(
+                f"unknown waterfill_impl {impl!r}; options: closed, pallas"
+            )
+        self.waterfill_impl = impl
+        self.rt = [
+            _ScenarioRuntime(i, n, sim)
+            for i, (n, sim) in enumerate(zip(names, sims))
+        ]
+        S = len(self.rt)
+        self.S = S
+        self.C = 4  # channel capacity; grows on demand
+        K = max((len(r.chunks) for r in self.rt), default=1)
+        self.K = K
+
+        # scenario scalars
+        self.t = np.zeros(S)
+        self.done = np.zeros(S, dtype=bool)
+        self.next_tick = np.array([r.tick_period for r in self.rt])
+        self.tick_period = np.array([r.tick_period for r in self.rt])
+        self.n_events = np.zeros(S, dtype=np.int64)
+        self.finish_t = np.zeros(S)
+        #: per-sweep flag: some channel finished a file (consumed by _post)
+        self.fin_any = np.zeros(S, dtype=bool)
+        # per-scenario settings carried over from the event Simulations
+        self.max_time = np.array([sim.max_time for sim in sims])
+        self.record_timeline = np.array(
+            [sim.record_timeline for sim in sims], dtype=bool
+        )
+        self.has_prepend = np.zeros(S, dtype=bool)
+        self.trivial_tick = np.array([r.trivial_tick for r in self.rt])
+        self.trivial_complete = np.array(
+            [r.trivial_complete for r in self.rt]
+        )
+        # network constants
+        self.bw = np.array([r.network.bandwidth for r in self.rt])
+        self.disk_rate = np.array(
+            [r.network.disk.streaming_rate for r in self.rt]
+        )
+        self.sat_cc = np.array(
+            [r.network.disk.saturation_cc for r in self.rt], dtype=np.int64
+        )
+        self.contention = np.array(
+            [r.network.disk.contention for r in self.rt]
+        )
+
+        # channel state, padded to capacity C
+        self.chunk_of = np.full((S, self.C), _NO_CHUNK, dtype=np.int64)
+        self.dead = np.zeros((S, self.C))
+        self.rem = np.zeros((S, self.C))
+        self.busy = np.zeros((S, self.C), dtype=bool)
+        self.cap = np.zeros((S, self.C))
+
+        # per-chunk state, padded to K (padding slots are born done/empty)
+        self.n_chunks = np.array(
+            [len(r.chunks) for r in self.rt], dtype=np.int64
+        )
+        self.chunk_done = np.zeros((S, K), dtype=bool)
+        self.chunk_done[np.arange(K)[None, :] >= self.n_chunks[:, None]] = True
+        self.completed_at = np.full((S, K), math.nan)
+        self.delivered = np.zeros((S, K))
+        self.delivered_at_tick = np.zeros((S, K))
+        self.rate_est = np.zeros((S, K))
+        self.queue_bytes = np.zeros((S, K))
+        #: serial per-file dead time per chunk (params are fixed per chunk)
+        self.fsdt = np.zeros((S, K))
+
+        # FIFO queues: one flat size buffer + (offset, length, cursor) per
+        # (scenario, chunk). Resume files go to rt.prepend (LIFO), consumed
+        # before the cursor moves — exactly deque.appendleft/popleft order.
+        sizes: List[float] = []
+        self.qoff = np.zeros((S, K), dtype=np.int64)
+        self.qlen = np.zeros((S, K), dtype=np.int64)
+        self.qptr = np.zeros((S, K), dtype=np.int64)
+        #: count of re-queued resume files per (scenario, chunk)
+        self.prepend_n = np.zeros((S, K), dtype=np.int64)
+        for r in self.rt:
+            for k, chunk in enumerate(r.chunks):
+                self.qoff[r.index, k] = len(sizes)
+                self.qlen[r.index, k] = len(chunk.files)
+                self.queue_bytes[r.index, k] = chunk.total_bytes
+                sizes.extend(float(f.size) for f in chunk.files)
+                self.fsdt[r.index, k] = netmodel.file_start_dead_time(
+                    r.network, r.params[k]
+                )
+        self.qsizes = np.asarray(sizes, dtype=np.float64)
+        self._started = False
+
+    # ------------------------------------------------------------------ #
+    # water-fill dispatch
+    # ------------------------------------------------------------------ #
+
+    def _waterfill(self, caps, pool):
+        if self.waterfill_impl == "pallas":
+            from .kernels.waterfill_pallas import waterfill_pallas_f64
+
+            return waterfill_pallas_f64(caps, pool)
+        return kernels.waterfill(self.ops, caps, pool)
+
+    # ------------------------------------------------------------------ #
+    # channel bookkeeping (mirrors Simulation._open_channel/_close_channels)
+    # ------------------------------------------------------------------ #
+
+    def _grow(self) -> None:
+        pad = self.C
+        self.C *= 2
+
+        def z(a, fill):
+            return np.concatenate(
+                [a, np.full((self.S, pad), fill, dtype=a.dtype)], axis=1
+            )
+
+        self.chunk_of = z(self.chunk_of, _NO_CHUNK)
+        self.dead = z(self.dead, 0.0)
+        self.rem = z(self.rem, 0.0)
+        self.busy = z(self.busy, False)
+        self.cap = z(self.cap, 0.0)
+
+    def _open_channel(
+        self, r: _ScenarioRuntime, chunk: int, prev: Optional[TransferParams]
+    ) -> None:
+        s = r.index
+        free = np.flatnonzero(self.chunk_of[s] == _NO_CHUNK)
+        if free.size == 0:
+            self._grow()
+            free = np.flatnonzero(self.chunk_of[s] == _NO_CHUNK)
+        c = free[0]
+        params = r.params[chunk]
+        self.chunk_of[s, c] = chunk
+        self.dead[s, c] = netmodel.channel_open_cost(r.network, params, prev)
+        self.rem[s, c] = 0.0
+        self.busy[s, c] = False
+        self.cap[s, c] = netmodel.channel_rate_cap(r.network, params.parallelism)
+
+    def _close_channels(
+        self, r: _ScenarioRuntime, chunk: int, n: int
+    ) -> List[TransferParams]:
+        s = r.index
+        cols = np.flatnonzero(self.chunk_of[s] == chunk)
+        # idle first, matching the event simulator's preference
+        cols = sorted(cols, key=lambda c: bool(self.busy[s, c]))
+        closed: List[TransferParams] = []
+        for c in cols[:n]:
+            if self.busy[s, c] and self.rem[s, c] > 0:
+                f = resume_file(self.rem[s, c])
+                r.prepend[chunk].append(float(f.size))
+                self.queue_bytes[s, chunk] += f.size
+                self.prepend_n[s, chunk] += 1
+                self.has_prepend[s] = True
+            self.chunk_of[s, c] = _NO_CHUNK
+            self.busy[s, c] = False
+            self.dead[s, c] = 0.0
+            self.rem[s, c] = 0.0
+            self.cap[s, c] = 0.0
+            closed.append(r.params[chunk])
+        return closed
+
+    def _apply(self, r: _ScenarioRuntime, actions) -> None:
+        for act in actions:
+            if isinstance(act, Open):
+                for _ in range(act.n):
+                    self._open_channel(r, act.chunk, prev=None)
+            elif isinstance(act, Close):
+                self._close_channels(r, act.chunk, act.n)
+            elif isinstance(act, Move):
+                moved = self._close_channels(r, act.src, act.n)
+                for prev in moved:
+                    self._open_channel(r, act.dst, prev=prev)
+                r.n_moves += len(moved)
+
+    # ------------------------------------------------------------------ #
+    # queue feeding
+    # ------------------------------------------------------------------ #
+
+    def _files_left(self, s: int, k: int) -> int:
+        return int(self.qlen[s, k] - self.qptr[s, k]) + len(
+            self.rt[s].prepend[k]
+        )
+
+    def _feed_py(self, r: _ScenarioRuntime) -> None:
+        """Scalar feed for one scenario (resume files present / after
+        scheduler actions). Mirrors Simulation._feed_channels."""
+        s = r.index
+        idle = np.flatnonzero((self.chunk_of[s] != _NO_CHUNK) & ~self.busy[s])
+        for c in idle:
+            k = int(self.chunk_of[s, c])
+            if r.prepend[k]:
+                size = r.prepend[k].pop()
+                self.prepend_n[s, k] -= 1
+            elif self.qptr[s, k] < self.qlen[s, k]:
+                size = self.qsizes[self.qoff[s, k] + self.qptr[s, k]]
+                self.qptr[s, k] += 1
+            else:
+                continue
+            self.queue_bytes[s, k] -= size
+            self.busy[s, c] = True
+            self.rem[s, c] = size
+            self.dead[s, c] += self.fsdt[s, k]
+        self.has_prepend[s] = bool(self.prepend_n[s].any())
+
+    def _feed_vec(self, rows: np.ndarray) -> None:
+        """Batched feed for scenarios without resume files (the
+        ``kernels.feed_queues`` fabric kernel)."""
+        self.busy, self.dead, self.rem, self.qptr, self.queue_bytes = (
+            kernels.feed_queues(
+                self.ops, rows, self.chunk_of, self.busy, self.dead,
+                self.rem, self.qsizes, self.qoff, self.qlen, self.qptr,
+                self.queue_bytes, self.fsdt,
+            )
+        )
+
+    # ------------------------------------------------------------------ #
+    # controller plumbing (mirrors Simulation._view)
+    # ------------------------------------------------------------------ #
+
+    def _bytes_remaining(self, r: _ScenarioRuntime, k: int) -> float:
+        s = r.index
+        mask = (self.chunk_of[s] == k) & self.busy[s]
+        return float(self.queue_bytes[s, k]) + float(self.rem[s][mask].sum())
+
+    def _view(self, r: _ScenarioRuntime) -> List[ChunkView]:
+        s = r.index
+        ko = self.chunk_of[s]
+        open_mask = ko != _NO_CHUNK
+        n_open_total = int(open_mask.sum())
+        nK = len(r.chunks)
+        n_ch = np.bincount(ko[open_mask], minlength=nK)
+        busy_ch = np.bincount(ko[open_mask & self.busy[s]], minlength=nK)
+        inflight = np.zeros(nK)
+        np.add.at(
+            inflight, ko[open_mask & self.busy[s]],
+            self.rem[s][open_mask & self.busy[s]],
+        )
+        views = []
+        for k, chunk in enumerate(r.chunks):
+            key = (k, int(n_ch[k]), n_open_total)
+            predicted = r.predict_cache.get(key)
+            if predicted is None:
+                predicted = netmodel.predict_chunk_rate(
+                    r.network,
+                    r.avg_fs[k],
+                    chunk.params,
+                    max(int(n_ch[k]), 1),
+                    total_active_channels=max(1, n_open_total),
+                )
+                r.predict_cache[key] = predicted
+            views.append(
+                ChunkView(
+                    index=k,
+                    ctype=chunk.ctype,
+                    bytes_remaining=float(self.queue_bytes[s, k])
+                    + float(inflight[k]),
+                    files_remaining=self._files_left(s, k) + int(busy_ch[k]),
+                    throughput=float(self.rate_est[s, k]),
+                    n_channels=int(n_ch[k]),
+                    done=bool(self.chunk_done[s, k]),
+                    predicted_rate=predicted,
+                )
+            )
+        return views
+
+    def _check_completions_py(self, r: _ScenarioRuntime) -> List[int]:
+        s = r.index
+        completed = []
+        for k in range(len(r.chunks)):
+            if self.chunk_done[s, k]:
+                continue
+            busy = bool(((self.chunk_of[s] == k) & self.busy[s]).any())
+            if self._files_left(s, k) == 0 and not busy:
+                self._mark_complete(s, k)
+                completed.append(k)
+        return completed
+
+    def _mark_complete(self, s: int, k: int) -> None:
+        self.chunk_done[s, k] = True
+        self.queue_bytes[s, k] = 0.0
+        self.completed_at[s, k] = self.t[s]
+
+    # ------------------------------------------------------------------ #
+    # the vectorized event loop
+    # ------------------------------------------------------------------ #
+
+    def start(self) -> None:
+        self._started = True
+        for r in self.rt:
+            self._apply(r, r.scheduler.initial_actions(self._view(r)))
+            self._feed_py(r)
+
+    def step(self, rows: Optional[np.ndarray] = None) -> None:
+        """One synchronized sweep over ``rows`` (default: all scenarios):
+        every live selected scenario advances to its own next event.
+        Mirrors Simulation.step; keep the orders in lockstep."""
+        act = ~self.done if rows is None else (~self.done & rows)
+        if not act.any():
+            return
+        self._advance(act)
+        self._post(act)
+
+    def _advance(self, act: np.ndarray) -> None:
+        """Physics half of a sweep: rates, horizon, fluid byte movement.
+
+        Leaves ``self.fin_any[act]`` holding whether a channel finished a
+        file, which :meth:`_post` consumes for scenario-done detection.
+        """
+        over = act & (self.t > self.max_time)
+        if over.any():
+            s = int(np.flatnonzero(over)[0])
+            raise RuntimeError(
+                f"batch scenario {self.rt[s].name!r} exceeded max_time="
+                f"{self.max_time[s]}s (t={self.t[s]:.1f})"
+            )
+        self.n_events[act] += 1
+
+        transferring = self.busy & (self.dead <= _EPS)
+        n_t = transferring.sum(axis=1)
+        pool = kernels.disk_pool(
+            self.ops, n_t, self.bw, self.disk_rate, self.sat_cc,
+            self.contention,
+        )
+        # water-fill only live rows: the sort inside is the costliest
+        # per-iteration op and finished scenarios would pay it for nothing
+        rates = np.zeros_like(self.rem)
+        act_rows = np.flatnonzero(act)
+        rates[act_rows] = self._waterfill(
+            np.where(transferring[act_rows], self.cap[act_rows], 0.0),
+            pool[act_rows],
+        )
+        rec = act & self.record_timeline
+        if rec.any():
+            agg = rates.sum(axis=1)
+            for s in np.flatnonzero(rec):
+                self.rt[s].timeline.append((float(self.t[s]), float(agg[s])))
+
+        dt = kernels.event_horizon(
+            self.ops, self.next_tick - self.t, self.busy, self.dead,
+            transferring, self.rem, rates,
+        )
+        dt = np.where(act, dt, 0.0)
+
+        # stranded-chunk detection (scheduler bug), as in the event sim
+        no_busy = act & ~self.busy.any(axis=1)
+        for s in np.flatnonzero(no_busy):
+            r = self.rt[s]
+            live = np.flatnonzero(~self.chunk_done[s])
+            held = set(self.chunk_of[s][self.chunk_of[s] != _NO_CHUNK].tolist())
+            if any(int(k) not in held for k in live):
+                raise RuntimeError(
+                    f"scheduler {r.scheduler.name} stranded chunks "
+                    f"{[r.chunks[int(k)].name for k in live]} in {r.name!r}"
+                )
+
+        # advance every live scenario by its own dt
+        self.t += dt
+        self.busy, self.dead, self.rem, moved, finished = (
+            kernels.advance_channels(
+                self.ops, act, dt, self.busy, self.dead, transferring,
+                self.rem, rates,
+            )
+        )
+        self.delivered = self.ops.chunk_scatter_add(
+            self.delivered, self.chunk_of, moved, moved != 0.0
+        )
+        self.fin_any = np.where(act, finished.any(axis=1), self.fin_any)
+
+    def _post(self, act: np.ndarray) -> None:
+        """Transition half of a sweep: feed -> completions -> tick -> done.
+
+        The order is the fidelity contract's feed/complete/tick ordering;
+        the JAX backend calls this directly for scenarios it parked at a
+        Python decision point (their ``_advance`` ran on-device).
+        """
+        # ---- feed (vector fast path; scalar where resume files exist) ----
+        self._feed_vec(act & ~self.has_prepend)
+        for s in np.flatnonzero(act & self.has_prepend):
+            self._feed_py(self.rt[s])
+
+        # ---- chunk completions ----
+        # a chunk can only complete in an iteration where one of its
+        # channels finished a file (or lost its channels to an action, which
+        # is handled inside the python branches below)
+        busy_per_chunk = self.ops.count_by_chunk(
+            self.chunk_of, self.busy, self.K
+        )
+        files_left = self.qlen - self.qptr + self.prepend_n
+        completed = (
+            act[:, None]
+            & ~self.chunk_done
+            & (files_left == 0)
+            & (busy_per_chunk == 0)
+        )
+        comp_rows = completed.any(axis=1)
+        # trivial controllers (baselines): pure vector bookkeeping
+        vec_rows = comp_rows & self.trivial_complete & ~self.has_prepend
+        if vec_rows.any():
+            m = completed & vec_rows[:, None]
+            self.chunk_done |= m
+            self.queue_bytes[m] = 0.0
+            rs, ks = np.nonzero(m)
+            self.completed_at[rs, ks] = self.t[rs]
+        # real controllers: event-ordered python (detect -> callback -> feed)
+        for s in np.flatnonzero(comp_rows & ~vec_rows):
+            r = self.rt[s]
+            for k in self._check_completions_py(r):
+                actions = r.scheduler.on_chunk_complete(self._view(r), k)
+                if actions:
+                    self._apply(r, actions)
+                    self._feed_py(r)
+
+        # ---- controller tick ----
+        tick_hit = act & (self.t >= self.next_tick - _EPS)
+        if tick_hit.any():
+            ema = kernels.tick_ema(
+                self.ops, self.rate_est, self.delivered,
+                self.delivered_at_tick, self.tick_period[:, None],
+            )
+            rows = tick_hit[:, None]
+            np.copyto(self.rate_est, ema, where=rows)
+            np.copyto(self.delivered_at_tick, self.delivered, where=rows)
+            for s in np.flatnonzero(tick_hit & ~self.trivial_tick):
+                r = self.rt[s]
+                actions = r.scheduler.on_tick(self._view(r))
+                if actions:
+                    self._apply(r, actions)
+                    self._feed_py(r)
+            self.next_tick += np.where(tick_hit, self.tick_period, 0.0)
+
+        # ---- scenario completion ----
+        newly = act & self.chunk_done.all(axis=1) & (self.fin_any | comp_rows)
+        self.finish_t = np.where(newly, self.t, self.finish_t)
+        self.done |= newly
+
+    # ------------------------------------------------------------------ #
+    # live-row compaction
+    # ------------------------------------------------------------------ #
+
+    def _compact(self) -> bool:
+        """Retire finished scenarios from the batch arrays.
+
+        Synchronized sweeps pay O(live rows) per iteration; without
+        compaction a heterogeneous matrix pays full width until its very
+        last straggler finishes. Final metrics of retired rows are archived
+        on their runtime objects; surviving rows are re-indexed in place.
+        Scenarios are independent, so dropping finished rows cannot change
+        any survivor's event sequence.
+        """
+        alive = np.flatnonzero(~self.done)
+        if alive.size == self.S:
+            return False
+        for r in self.rt:
+            if r.archive is None and self.done[r.index]:
+                s = r.index
+                r.archive = (
+                    float(self.finish_t[s]),
+                    int(self.n_events[s]),
+                    self.completed_at[s].copy(),
+                    self.delivered[s].copy(),
+                )
+        for name in self._row_arrays():
+            setattr(self, name, getattr(self, name)[alive])
+        survivors = []
+        for new_row, s in enumerate(alive):
+            r = self.rt[int(s)]
+            r.index = new_row
+            survivors.append(r)
+        self.rt = survivors
+        self.S = alive.size
+        return True
+
+    def _row_arrays(self) -> tuple:
+        return _ROW_ARRAYS
+
+    def _maybe_compact(self) -> None:
+        # amortized: only rebuild once half the batch has finished
+        if self.S > 16 and int(self.done.sum()) * 2 >= self.S:
+            self._compact()
+
+    # ------------------------------------------------------------------ #
+
+    def run(self) -> List[SimResult]:
+        all_rt = list(self.rt)
+        self.start()
+        while not self.done.all():
+            self.step()
+            self._maybe_compact()
+        return [self._result(r) for r in all_rt]
+
+    def _result(self, r: _ScenarioRuntime) -> SimResult:
+        if r.archive is not None:
+            finish_t, n_events, completed_at, delivered = r.archive
+        else:
+            s = r.index
+            finish_t = float(self.finish_t[s])
+            n_events = int(self.n_events[s])
+            completed_at = self.completed_at[s]
+            delivered = self.delivered[s]
+        total_time = max(finish_t, _EPS)
+        return SimResult(
+            network=r.network.name,
+            scheduler=r.scheduler.name,
+            total_bytes=r.total_bytes,
+            total_time=total_time,
+            throughput=r.total_bytes / total_time,
+            per_chunk_time={
+                c.name: float(completed_at[k])
+                for k, c in enumerate(r.chunks)
+            },
+            per_chunk_bytes={
+                c.name: float(delivered[k])
+                for k, c in enumerate(r.chunks)
+            },
+            timeline=r.timeline,
+            n_events=n_events,
+            n_moves=r.n_moves,
+        )

@@ -1,0 +1,346 @@
+"""JAX instantiation of the fabric kernels: jit + vmap at matrix scale.
+
+The inter-decision advance loop runs entirely on-device: a per-scenario
+sweep function (the same :mod:`repro.eval.fabric.kernels` the NumPy driver
+uses, on ``(C,)``/``(K,)`` rows) is ``vmap``-mapped over the scenario axis
+and iterated inside a ``jit``-compiled ``lax.while_loop``. Scenarios whose
+next transition needs Python — a non-trivial controller tick or chunk
+completion, or queued resume files whose LIFO order lives in host lists —
+*park* (``stall``) at that decision point while the rest keep sweeping;
+the loop exits when every live scenario is parked. The host then replays
+exactly the NumPy driver's Python half (:meth:`FabricSimulation._post` /
+``step``) for the parked rows and re-enters the device loop, so each
+host round-trip amortizes over every scenario's full run-up to its next
+decision instead of costing one sync per event.
+
+Scenarios are independent — their clocks may drift arbitrarily — so this
+interleaving produces the same per-scenario event sequence as the
+synchronized NumPy sweeps; ``eval.difftest`` holds all backends to the
+event simulator within the 2% bar.
+
+Numerics run in float64 via the scoped ``jax.experimental.enable_x64``
+context (never the global flag: the rest of the repo traces in f32).
+Timeline-recording scenarios are permanently parked and advance through
+the host path, which appends their (t, rate) samples.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.simulator import SimResult, Simulation
+
+from . import kernels
+from .driver import _EPS, _NO_CHUNK, FabricSimulation
+from .shim import jax_ops
+
+_ERR_NONE, _ERR_MAXTIME, _ERR_STRANDED = 0, 1, 2
+_STALL_NONE, _STALL_POST, _STALL_FULL = 0, 1, 2
+
+#: cap on device sweeps per while_loop entry: parked scenarios wait for
+#: the loop to exit before their Python decision runs, so unbounded entries
+#: let one long trivial stretch starve every parked controller. Bounded
+#: entries + the half-parked early exit keep rows rejoining promptly while
+#: still amortizing hundreds of events per host round-trip.
+_ROUND_CAP = 512
+
+#: state arrays the device sweep may mutate (host <-> device sync set)
+_MUTABLE = (
+    "t", "done", "next_tick", "n_events", "dead", "rem", "busy",
+    "chunk_done", "completed_at", "delivered", "delivered_at_tick",
+    "rate_est", "queue_bytes", "qptr", "finish_t", "fin_any", "stall",
+    "err",
+)
+#: read-only inputs the Python half may rewrite between rounds
+#: (scheduler actions retarget channels; feeds consume resume files)
+_CONST_PY = ("has_prepend", "chunk_of", "cap", "prepend_n")
+#: read-only inputs fixed for a batch's lifetime — device-cached, rebuilt
+#: only when compaction changes the row set
+_CONST_STATIC = (
+    "max_time", "tick_period", "bw", "disk_rate", "sat_cc", "contention",
+    "trivial_tick", "trivial_complete", "qoff", "qlen", "fsdt",
+)
+_CONST = _CONST_PY + _CONST_STATIC
+
+
+def _sweep_row(row: dict, qsizes):
+    """One event sweep of a single scenario (vmapped over the batch).
+
+    Mirrors ``FabricSimulation._advance`` + the vector branches of
+    ``_post``; rows whose transition needs Python set ``stall`` and keep
+    their post-advance state for the host to finish.
+    """
+    ops = jax_ops()
+    xp = ops.xp
+    K = row["chunk_done"].shape[-1]
+
+    runnable = (
+        ~row["done"]
+        & (row["stall"] == _STALL_NONE)
+        & (row["err"] == _ERR_NONE)
+    )
+    err = xp.where(
+        row["t"] > row["max_time"], _ERR_MAXTIME, _ERR_NONE
+    )
+
+    # ---- advance (P1): rates, horizon, fluid byte movement ----
+    transferring = row["busy"] & (row["dead"] <= _EPS)
+    pool = kernels.disk_pool(
+        ops, xp.sum(transferring), row["bw"], row["disk_rate"],
+        row["sat_cc"], row["contention"],
+    )
+    rates = kernels.waterfill(
+        ops, xp.where(transferring, row["cap"], 0.0), pool
+    )
+    held = ops.count_by_chunk(
+        row["chunk_of"], row["chunk_of"] != _NO_CHUNK, K
+    ) > 0
+    stranded = (~xp.any(row["busy"])) & xp.any(~row["chunk_done"] & ~held)
+    err = xp.where((err == _ERR_NONE) & stranded, _ERR_STRANDED, err)
+
+    dt = kernels.event_horizon(
+        ops, row["next_tick"] - row["t"], row["busy"], row["dead"],
+        transferring, row["rem"], rates,
+    )
+    t2 = row["t"] + dt
+    busy2, dead2, rem2, moved, finished = kernels.advance_channels(
+        ops, xp.asarray(True), dt, row["busy"], row["dead"], transferring,
+        row["rem"], rates,
+    )
+    delivered2 = ops.chunk_scatter_add(
+        row["delivered"], row["chunk_of"], moved, moved != 0.0
+    )
+    fin_any = xp.any(finished)
+
+    # ---- decision-point detection (pre-feed completion == post-feed:
+    # feeding swaps queue files for busy channels, never zeroes both) ----
+    files_left = row["qlen"] - row["qptr"] + row["prepend_n"]
+    busy_pc = ops.count_by_chunk(row["chunk_of"], busy2, K)
+    comp_pre = ~row["chunk_done"] & (files_left == 0) & (busy_pc == 0)
+    tick_hit = t2 >= row["next_tick"] - _EPS
+    needs_py = (
+        row["has_prepend"]
+        | (xp.any(comp_pre) & ~row["trivial_complete"])
+        | (tick_hit & ~row["trivial_tick"])
+    )
+
+    # ---- post (P2-P5), fully vectorizable rows only ----
+    busy3, dead3, rem3, qptr3, qb3 = kernels.feed_queues(
+        ops, ~needs_py, row["chunk_of"], busy2, dead2, rem2, qsizes,
+        row["qoff"], row["qlen"], row["qptr"], row["queue_bytes"],
+        row["fsdt"],
+    )
+    busy_pc3 = ops.count_by_chunk(row["chunk_of"], busy3, K)
+    completed = (
+        ~row["chunk_done"]
+        & ((row["qlen"] - qptr3 + row["prepend_n"]) == 0)
+        & (busy_pc3 == 0)
+        & ~needs_py
+    )
+    chunk_done2 = row["chunk_done"] | completed
+    qb4 = xp.where(completed, 0.0, qb3)
+    completed_at2 = xp.where(completed, t2, row["completed_at"])
+    comp_any = xp.any(completed)
+
+    do_tick = tick_hit & ~needs_py
+    ema = kernels.tick_ema(
+        ops, row["rate_est"], delivered2, row["delivered_at_tick"],
+        row["tick_period"],
+    )
+    rate_est2 = xp.where(do_tick, ema, row["rate_est"])
+    dat2 = xp.where(do_tick, delivered2, row["delivered_at_tick"])
+    next_tick2 = row["next_tick"] + xp.where(
+        do_tick, row["tick_period"], 0.0
+    )
+
+    done2 = ~needs_py & xp.all(chunk_done2) & (fin_any | comp_any)
+    finish_t2 = xp.where(done2, t2, row["finish_t"])
+
+    # ---- commit: skip parked/done rows, freeze errored rows pre-sweep ----
+    upd = runnable & (err == _ERR_NONE)
+
+    def sel(new, old):
+        return xp.where(upd, new, old)
+
+    out = dict(row)
+    out["err"] = xp.where(runnable, err, row["err"])
+    out["t"] = sel(t2, row["t"])
+    out["n_events"] = row["n_events"] + xp.where(upd, 1, 0)
+    out["busy"] = sel(busy3, row["busy"])
+    out["dead"] = sel(dead3, row["dead"])
+    out["rem"] = sel(rem3, row["rem"])
+    out["delivered"] = sel(delivered2, row["delivered"])
+    out["fin_any"] = sel(fin_any, row["fin_any"])
+    out["qptr"] = sel(qptr3, row["qptr"])
+    out["queue_bytes"] = sel(qb4, row["queue_bytes"])
+    out["chunk_done"] = sel(chunk_done2, row["chunk_done"])
+    out["completed_at"] = sel(completed_at2, row["completed_at"])
+    out["rate_est"] = sel(rate_est2, row["rate_est"])
+    out["delivered_at_tick"] = sel(dat2, row["delivered_at_tick"])
+    out["next_tick"] = sel(next_tick2, row["next_tick"])
+    out["finish_t"] = sel(finish_t2, row["finish_t"])
+    out["done"] = row["done"] | (upd & done2)
+    out["stall"] = xp.where(
+        upd & needs_py, _STALL_POST, row["stall"]
+    )
+    return out
+
+
+@jax.jit
+def _device_rounds(state: dict, qsizes):
+    """Advance every runnable scenario to its own next Python decision
+    point (or completion): vmapped sweeps inside lax.while_loop."""
+    sweep = jax.vmap(_sweep_row, in_axes=(0, None))
+
+    def runnable(st):
+        return (
+            ~st["done"]
+            & (st["stall"] == _STALL_NONE)
+            & (st["err"] == _ERR_NONE)
+        )
+
+    start_count = jnp.sum(runnable(state))
+
+    def cond(carry):
+        st, it = carry
+        n = jnp.sum(runnable(st))
+        # run while anything is runnable, under the sweep cap, until half
+        # the round's starting cohort has parked at a Python decision
+        return (n > 0) & (it < _ROUND_CAP) & (2 * n > start_count)
+
+    def body(carry):
+        st, it = carry
+        return sweep(st, qsizes), it + 1
+
+    state, iters = lax.while_loop(cond, body, (state, 0))
+    return state, iters
+
+
+class JaxFabricSimulation(FabricSimulation):
+    """FabricSimulation driven by the jit/vmap device loop.
+
+    Host state (the parent's NumPy arrays) stays canonical; each round
+    uploads it, lets the device run every scenario to its next decision
+    point, downloads, and replays the parent's Python half for parked
+    rows. Python-side bookkeeping (schedulers, resume queues, views) is
+    inherited unchanged.
+    """
+
+    def __init__(
+        self,
+        sims: Sequence[Simulation],
+        names: Optional[Sequence[str]] = None,
+        **kwargs,
+    ):
+        super().__init__(sims, names=names, **kwargs)
+
+    # -------------------------------------------------------------- #
+
+    def _row_arrays(self) -> tuple:
+        return super()._row_arrays() + ("_stall",)
+
+    def _pad_rows(self) -> int:
+        """Row count uploaded to the device: next power of two >= live rows
+        (min 32). Padded rows are born ``done`` and never sweep; bucketing
+        bounds the number of XLA shapes traced as compaction shrinks S."""
+        n = max(32, self.S)
+        return 1 << (n - 1).bit_length()
+
+    def _padded(self, key: str, arr: np.ndarray, pad: int):
+        if pad:
+            fill = np.ones if key == "done" else np.zeros
+            arr = np.concatenate(
+                [arr, fill((pad,) + arr.shape[1:], dtype=arr.dtype)]
+            )
+        return jnp.asarray(arr)
+
+    def _upload(self) -> dict:
+        pad = self._pad_rows() - self.S
+        state = {}
+        for key in _MUTABLE + _CONST_PY:
+            if key == "stall":
+                arr = self._stall
+            elif key == "err":
+                arr = np.zeros(self.S, dtype=np.int64)
+            else:
+                arr = getattr(self, key)
+            state[key] = self._padded(key, arr, pad)
+        # statics are immutable for a given row set: cache on device and
+        # rebuild only when compaction (or channel growth) reshapes rows
+        cache_key = (self.S, self.C, pad)
+        if getattr(self, "_static_cache_key", None) != cache_key:
+            self._static_cache = {
+                key: self._padded(key, getattr(self, key), pad)
+                for key in _CONST_STATIC
+            }
+            self._static_cache_key = cache_key
+        state.update(self._static_cache)
+        return state
+
+    def _download(self, state: dict) -> None:
+        for key in _MUTABLE:
+            if key == "err":
+                continue
+            # np.array (not asarray): device buffers are zero-copy
+            # read-only views, and the host half mutates these in place
+            arr = np.array(state[key][: self.S])
+            setattr(self, "_stall" if key == "stall" else key, arr)
+        err = np.asarray(state["err"][: self.S])
+        if err.any():
+            s = int(np.flatnonzero(err)[0])
+            if err[s] == _ERR_MAXTIME:
+                raise RuntimeError(
+                    f"batch scenario {self.rt[s].name!r} exceeded max_time="
+                    f"{self.max_time[s]}s (t={self.t[s]:.1f})"
+                )
+            r = self.rt[s]
+            live = np.flatnonzero(~self.chunk_done[s])
+            raise RuntimeError(
+                f"scheduler {r.scheduler.name} stranded chunks "
+                f"{[r.chunks[int(k)].name for k in live]} in {r.name!r}"
+            )
+
+    # -------------------------------------------------------------- #
+
+    def run(self) -> List[SimResult]:
+        from jax.experimental import enable_x64
+
+        all_rt = list(self.rt)
+        self.start()
+        with enable_x64():
+            self._drive()
+        return [self._result(r) for r in all_rt]
+
+    def _drive(self) -> None:
+        # timeline-recording rows park permanently: their (t, rate) samples
+        # are host-side appends, so they advance through the NumPy path
+        self._stall = np.where(
+            self.record_timeline, _STALL_FULL, _STALL_NONE
+        ).astype(np.int64)
+        qsizes_dev = jnp.asarray(self.qsizes)
+        while not self.done.all():
+            progressed = False
+            runnable = ~self.done & (self._stall == _STALL_NONE)
+            if runnable.any():
+                state, iters = _device_rounds(self._upload(), qsizes_dev)
+                self._download(state)
+                progressed = int(iters) > 0
+            post_rows = ~self.done & (self._stall == _STALL_POST)
+            full_rows = ~self.done & (self._stall == _STALL_FULL)
+            if post_rows.any():
+                self._post(post_rows)
+                self._stall[post_rows] = _STALL_NONE
+                progressed = True
+            if full_rows.any():
+                self.step(full_rows)
+                progressed = True
+            if not progressed:
+                raise RuntimeError(
+                    "jax fabric backend made no progress; device loop "
+                    f"exited with {int(runnable.sum())} runnable rows"
+                )
+            self._maybe_compact()

@@ -1,0 +1,198 @@
+"""Backend-neutral array kernels of the fluid transfer model.
+
+Every function takes an :class:`repro.eval.fabric.shim.ArrayOps` first and
+treats channel (C) / chunk (K) structure as the trailing axes, so one
+definition serves both the batched NumPy driver (leading scenario axis S)
+and the JAX backend (no leading axis; ``vmap`` supplies it). The scalar
+references these mirror live in ``core.netmodel`` (water-filling, dead
+time) and :mod:`repro.eval.fabric.reference` (horizon, tick EMA);
+``tests/test_fabric_kernels.py`` pins the correspondence on random inputs.
+
+Nothing here may import from ``repro.core`` — ``core.netmodel`` re-exports
+:func:`waterfill_batch` from this module and a core import would cycle.
+"""
+from __future__ import annotations
+
+from ..shim import ArrayOps, numpy_ops
+
+_EPS = 1e-12
+
+
+def waterfill(ops: ArrayOps, caps, pool):
+    """Max-min fair allocation of ``pool`` across entities capped at ``caps``.
+
+    ``caps``: (..., C) per-entity rate ceilings — absent/idle channels must
+    carry 0 (a zero cap allocates zero, exactly like being excluded).
+    ``pool``: (...,). Returns (..., C) allocations.
+
+    Closed form of max-min fairness with ceilings: every entity gets
+    ``min(cap, lam)`` for the water level ``lam`` solving
+    ``sum_i min(cap_i, lam) = min(pool, sum_i cap_i)`` — the fixpoint the
+    scalar progressive-filling loop (``netmodel.waterfill``) converges to,
+    found here by sorting each row once instead of iterating.
+    """
+    xp = ops.xp
+    C = caps.shape[-1]
+    if C == 0:
+        return xp.zeros_like(caps)
+    caps_sorted = xp.sort(caps, axis=-1)
+    prefix = xp.cumsum(caps_sorted, axis=-1)
+    pool_eff = xp.clip(xp.minimum(pool, prefix[..., -1]), 0.0, None)
+    # candidate level if the k smallest caps are filled outright:
+    #   lam_k = (pool_eff - prefix[k-1]) / (C - k); valid when lam_k <= c_(k)
+    prev = xp.concatenate(
+        [xp.zeros_like(prefix[..., :1]), prefix[..., :-1]], axis=-1
+    )
+    denom = (C - xp.arange(C)).astype(caps_sorted.dtype)
+    lam_k = (pool_eff[..., None] - prev) / denom
+    valid = lam_k <= caps_sorted + 1e-9 * xp.maximum(caps_sorted, 1.0)
+    # rows with pool >= sum(caps) have every candidate invalid except the
+    # last; argmax picks the first valid k
+    k = xp.argmax(valid, axis=-1)
+    no_valid = ~xp.any(valid, axis=-1)
+    lam = xp.take_along_axis(lam_k, k[..., None], axis=-1)[..., 0]
+    lam = xp.where(no_valid, caps_sorted[..., -1], lam)
+    return xp.minimum(caps, lam[..., None])
+
+
+def waterfill_batch(caps, pool):
+    """NumPy instantiation of :func:`waterfill` over (S, C) scenario rows.
+
+    Re-exported by ``core.netmodel`` as the batched form of its scalar
+    ``waterfill`` reference.
+    """
+    import numpy as np
+
+    caps = np.asarray(caps, dtype=np.float64)
+    pool = np.asarray(pool, dtype=np.float64)
+    return waterfill(numpy_ops(), caps, pool)
+
+
+def disk_pool(
+    ops: ArrayOps, n_transferring, bandwidth, disk_rate, saturation_cc,
+    contention,
+):
+    """Shared rate pool: link capacity vs disk aggregate under contention.
+
+    Mirrors ``netmodel.allocate_rates``'s pool =
+    ``min(bandwidth, disk.aggregate_rate(active))`` with the DiskSpec
+    contention penalty past saturation; 0 when nothing transfers.
+    """
+    xp = ops.xp
+    over_sat = xp.maximum(0, n_transferring - saturation_cc)
+    agg_disk = disk_rate / (1.0 + contention * over_sat)
+    return xp.where(
+        n_transferring > 0, xp.minimum(bandwidth, agg_disk), 0.0
+    )
+
+
+def file_dead_time(
+    ops: ArrayOps, control_rtt, pipelining, unhidden_overhead,
+    per_file_overhead,
+):
+    """Batched ``netmodel.file_start_dead_time``: serial per-file overhead.
+
+    control gap ``control_rtt/(1+pipelining)`` + server-side processing the
+    pipelining cannot hide + per-file disk overhead.
+    """
+    gap = control_rtt / (1.0 + pipelining)
+    return gap + unhidden_overhead + per_file_overhead
+
+
+def event_horizon(
+    ops: ArrayOps, tick_dt, busy, dead, transferring, rem, rates,
+    eps: float = _EPS,
+):
+    """Time to the next state change, capped by the controller tick.
+
+    Batched ``fabric.reference.next_event_dt``: min over dead-time expiries
+    and file completions of busy channels, floored at 0.
+    """
+    xp = ops.xp
+    inf = float("inf")
+    dead_evt = xp.where(busy & (dead > eps), dead, inf)
+    xcond = transferring & (rates > eps)
+    xfer_evt = xp.where(xcond, rem, inf) / xp.where(xcond, rates, 1.0)
+    dt = xp.minimum(
+        tick_dt,
+        xp.minimum(xp.min(dead_evt, axis=-1), xp.min(xfer_evt, axis=-1)),
+    )
+    return xp.maximum(dt, 0.0)
+
+
+def advance_channels(
+    ops: ArrayOps, active, dt, busy, dead, transferring, rem, rates,
+    eps: float = _EPS,
+):
+    """Advance channel state by ``dt``: burn dead time, move fluid bytes.
+
+    ``active`` (...,) masks scenarios that advance this sweep. Returns
+    ``(busy, dead, rem, moved, finished)`` — ``moved`` is the per-channel
+    byte delta (0 on inactive rows), ``finished`` the channels that
+    completed their file.
+    """
+    xp = ops.xp
+    a = xp.expand_dims(active, -1)
+    dtc = xp.expand_dims(dt, -1)
+    in_dead = busy & (dead > eps) & a
+    dead2 = xp.where(in_dead, xp.maximum(0.0, dead - dtc), dead)
+    moving = transferring & (rates > eps) & a
+    moved = xp.where(moving, xp.minimum(rem, rates * dtc), 0.0)
+    rem2 = rem - moved
+    finished = transferring & a & (rem2 <= eps)
+    busy2 = busy & ~finished
+    rem3 = xp.where(finished, 0.0, rem2)
+    return busy2, dead2, rem3, moved, finished
+
+
+def tick_ema(ops: ArrayOps, rate_est, delivered, delivered_at_tick, period):
+    """Batched ``fabric.reference.tick_rate_update`` over chunk slots."""
+    xp = ops.xp
+    inst = (delivered - delivered_at_tick) / period
+    return xp.where(rate_est == 0.0, inst, 0.5 * rate_est + 0.5 * inst)
+
+
+def feed_queues(
+    ops: ArrayOps, enabled, chunk_of, busy, dead, rem, qsizes, qoff, qlen,
+    qptr, queue_bytes, fsdt,
+):
+    """Idle open channels pull the next FIFO file of their chunk.
+
+    Channels of one chunk are interchangeable (same params), and each idle
+    channel takes the file at ``qptr + rank`` where ``rank`` is its order
+    among the chunk's idle channels — byte-for-byte the assignment the
+    scalar feed loop produces. ``enabled`` (...,) gates whole scenarios
+    (rows with queued resume files must feed through the Python path to
+    preserve LIFO resume order).
+
+    Returns ``(busy, dead, rem, qptr, queue_bytes)``.
+    """
+    xp = ops.xp
+    K = qptr.shape[-1]
+    if qsizes.shape[0] == 0:  # no files anywhere: nothing can feed
+        return busy, dead, rem, qptr, queue_bytes
+    open_oh = chunk_of[..., :, None] == xp.arange(K)  # NO_CHUNK matches none
+    idle = (chunk_of >= 0) & ~busy & xp.expand_dims(enabled, -1)
+    incl = open_oh & idle[..., :, None]
+    # rank of each idle channel within its (scenario, chunk) group, in
+    # channel order: inclusive cumsum down the channel axis, gathered at
+    # the channel's own chunk column
+    cum = xp.cumsum(incl, axis=-2)
+    rank = xp.sum(xp.where(incl, cum, 0), axis=-1) - 1  # -1 when not idle
+    # chunk-indexed gathers; junk values on unassigned channels are
+    # harmless because ``valid`` requires ``idle`` (=> assigned)
+    ch_clip = xp.clip(chunk_of, 0, K - 1)
+    qptr_c = xp.take_along_axis(qptr, ch_clip, axis=-1)
+    qlen_c = xp.take_along_axis(qlen, ch_clip, axis=-1)
+    qoff_c = xp.take_along_axis(qoff, ch_clip, axis=-1)
+    fsdt_c = xp.take_along_axis(fsdt, ch_clip, axis=-1)
+    fidx = qptr_c + rank
+    valid = idle & (rank >= 0) & (fidx < qlen_c)
+    flat = xp.clip(qoff_c + fidx, 0, qsizes.shape[0] - 1)
+    sizes = xp.where(valid, xp.take(qsizes, flat), 0.0)
+    busy2 = busy | valid
+    rem2 = xp.where(valid, sizes, rem)
+    dead2 = dead + xp.where(valid, fsdt_c, 0.0)
+    qptr2 = qptr + ops.count_by_chunk(chunk_of, valid, K)
+    qb2 = ops.chunk_scatter_add(queue_bytes, chunk_of, -sizes, valid)
+    return busy2, dead2, rem2, qptr2, qb2

@@ -1,0 +1,57 @@
+"""Scalar reference semantics of the fluid stepping hooks.
+
+These are the pure, per-channel forms the fabric array kernels mirror; the
+event-driven ``core.simulator`` consumes them directly (it re-exports them
+for backwards compatibility), and the property tests in
+``tests/test_fabric_kernels.py`` pin the batched kernels to them on random
+inputs. Keep them dependency-free: this module sits below both ``core``
+and the fabric drivers in the import graph (only a function-level
+``core.types`` import for the resume-file constructor).
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+_EPS = 1e-12
+
+
+def tick_rate_update(
+    prev_estimate: float, delta_bytes: float, period: float
+) -> float:
+    """Measured-rate refresh at a controller tick (EMA after the first one).
+
+    The first measurement seeds the estimate; afterwards old and new are
+    blended 50/50, matching the paper's 5-second smoothing.
+    """
+    inst = delta_bytes / period
+    return inst if prev_estimate == 0 else 0.5 * prev_estimate + 0.5 * inst
+
+
+def next_event_dt(
+    time_to_tick: float,
+    deads: Sequence[float],
+    remainings: Sequence[float],
+    rates: Sequence[float],
+) -> float:
+    """Time until the next state change among busy channels, capped by the
+    controller tick. ``deads[i] > 0`` means channel i is in dead time (its
+    next event is dead-time expiry); otherwise it finishes its file in
+    ``remaining/rate``. Channels with no pending event contribute nothing.
+    """
+    dt = time_to_tick
+    for dead, rem, r in zip(deads, remainings, rates):
+        if dead > _EPS:
+            dt = min(dt, dead)
+        elif r > _EPS:
+            dt = min(dt, rem / r)
+    return max(dt, 0.0)
+
+
+def resume_file(remaining: float):
+    """Synthetic file re-queued when a busy channel is closed mid-transfer
+    (the in-flight remainder restarts; conservative, matches GridFTP)."""
+    from repro.core.types import FileSpec  # function-level: breaks the
+    # core -> fabric -> core import cycle
+
+    return FileSpec(name="__resume__", size=int(math.ceil(remaining)))

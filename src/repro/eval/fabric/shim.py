@@ -1,0 +1,103 @@
+"""Minimal array-API shim the fabric kernels are written against.
+
+The kernels need plain element-wise math, last-axis reductions, sorting,
+cumulative sums, and gathers — all spelled identically in ``numpy`` and
+``jax.numpy`` and reached through ``ops.xp``. The two operations whose
+efficient form genuinely differs between the backends (scatter-accumulate
+into per-chunk slots) are methods on :class:`ArrayOps`:
+
+  * NumPy uses ``np.add.at`` over the non-zero index set, which preserves
+    the exact per-element accumulation order of the original ``batchsim``
+    loop (bit-compatible golden snapshots);
+  * JAX uses a dense one-hot contraction, which traces to a single fused
+    XLA reduction and vectorizes under ``vmap``.
+
+Kernels treat chunk/channel structure as the *last* axis (or two), so the
+same kernel runs batched over ``(S, C)`` arrays under NumPy and per-scenario
+over ``(C,)`` rows under ``jax.vmap``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+#: sentinel for a channel slot not assigned to any chunk
+NO_CHUNK = -1
+
+
+class ArrayOps:
+    """Array namespace + the few backend-divergent primitives.
+
+    ``xp`` is ``numpy`` or ``jax.numpy``; everything else the kernels use
+    is reached as ``ops.xp.<fn>``.
+    """
+
+    name: str = "abstract"
+
+    def __init__(self, xp):
+        self.xp = xp
+
+    # ------------------------------------------------------------------ #
+
+    def count_by_chunk(self, chunk_idx, mask, n_chunks: int):
+        """Integer counts per chunk: ``out[..., k] = sum_c mask & (idx==k)``.
+
+        ``chunk_idx`` (..., C) may contain ``NO_CHUNK`` entries; they match
+        no chunk and are dropped. Exact (integer) on both backends.
+        """
+        xp = self.xp
+        onehot = (chunk_idx[..., :, None] == xp.arange(n_chunks)) & mask[
+            ..., :, None
+        ]
+        return xp.sum(onehot, axis=-2)
+
+    def chunk_scatter_add(self, target, chunk_idx, values, mask):
+        """``target[..., idx[..., c]] += values[..., c]`` where ``mask``.
+
+        ``target`` (..., K), ``chunk_idx``/``values``/``mask`` (..., C).
+        Returns the updated array (never mutates the input).
+        """
+        raise NotImplementedError
+
+
+class NumpyOps(ArrayOps):
+    name = "numpy"
+
+    def __init__(self):
+        super().__init__(np)
+
+    def chunk_scatter_add(self, target, chunk_idx, values, mask):
+        out = target.copy()
+        idx = np.nonzero(mask)
+        if idx[0].size:
+            # np.nonzero is row-major, so duplicate slots accumulate in the
+            # same (scenario, channel) order as the scalar event loop
+            np.add.at(out, idx[:-1] + (chunk_idx[idx],), values[idx])
+        return out
+
+
+class JaxOps(ArrayOps):
+    name = "jax"
+
+    def __init__(self):
+        import jax.numpy as jnp
+
+        super().__init__(jnp)
+
+    def chunk_scatter_add(self, target, chunk_idx, values, mask):
+        xp = self.xp
+        n_chunks = target.shape[-1]
+        onehot = (chunk_idx[..., :, None] == xp.arange(n_chunks)) & mask[
+            ..., :, None
+        ]
+        delta = xp.sum(
+            xp.where(onehot, values[..., :, None], 0.0), axis=-2
+        )
+        return target + delta
+
+
+def numpy_ops() -> NumpyOps:
+    return NumpyOps()
+
+
+def jax_ops() -> JaxOps:
+    return JaxOps()

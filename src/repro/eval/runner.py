@@ -1,10 +1,26 @@
-"""Matrix runner: scenarios -> results on either backend + golden snapshots.
+"""Matrix runner: scenarios -> results on any backend + golden snapshots.
+
+Backends (the ``--backend`` axis shared with ``eval.difftest``):
+
+  - ``event``  the per-scenario discrete-event reference
+                (``core.simulator.Simulation``);
+  - ``numpy``  the batched fabric driver (alias ``batch``, its historical
+                name);
+  - ``jax``    the jit/vmap fabric driver (``fabric.jax_backend``).
+
+Batched backends execute in *chunks* of ``chunk_size`` scenarios, ordered
+by a cheap per-scenario cost proxy: memory stays bounded at matrix scale
+(the 1000+-scenario grid holds every queue of every scenario otherwise)
+and each chunk is cost-homogeneous, so one long-running straggler doesn't
+pin the whole matrix's sweep width. Results always come back in input
+order, and per-scenario outputs are independent of chunk composition —
+scenarios never interact.
 
 Golden snapshots are small JSON files mapping scenario name to the metrics
-both tests and benchmarks care about (throughput, completion time, event and
-move counts). They pin the simulator's behaviour across refactors: a diff in
-a golden file is a *reviewable semantic change*, not a test flake. Refresh
-with::
+both tests and benchmarks care about (throughput, completion time, event
+and move counts). They pin the simulator's behaviour across refactors: a
+diff in a golden file is a *reviewable semantic change*, not a test flake.
+Refresh with::
 
     PYTHONPATH=src python -m repro.eval.runner --refresh-golden \
         --out tests/golden/eval_matrix.json
@@ -20,8 +36,21 @@ from typing import Dict, Iterable, List, Optional, Sequence
 
 from repro.core.simulator import SimResult, Simulation
 
-from .batchsim import BatchSimulation
-from .scenarios import Scenario, build_simulation, default_matrix, smoke_matrix
+from .scenarios import (
+    Scenario,
+    build_files,
+    build_simulation,
+    default_matrix,
+    full_matrix,
+    smoke_matrix,
+)
+
+#: default scenarios per batched execution chunk (bounds peak memory).
+#: NumPy sweeps pay per-row Python dispatch, so narrower chunks win; the
+#: JAX device loop amortizes fixed per-sweep overhead over width and skips
+#: parked rows cheaply, so it prefers wide chunks.
+BACKEND_CHUNK_SIZE = {"numpy": 256, "jax": 1024}
+DEFAULT_CHUNK_SIZE: Optional[int] = None  # per-backend default above
 
 #: metrics captured per scenario; keep additive — removing/renaming a field
 #: invalidates every golden file.
@@ -32,39 +61,90 @@ SNAPSHOT_FIELDS = (
     "n_moves",
 )
 
+BACKENDS = ("event", "numpy", "jax")
+
+
+def _resolve_backend(backend: str) -> str:
+    if backend == "batch":  # historical alias for the NumPy fast path
+        return "numpy"
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {backend!r}; options: {BACKENDS} (+ 'batch')"
+        )
+    return backend
+
+
+def _driver_cls(backend: str):
+    from .fabric.registry import get_backend
+
+    return get_backend(backend)
+
+
+def _cost_proxy(scenario: Scenario) -> float:
+    """Cheap *event-count* estimate for cost-homogeneous chunking.
+
+    Batched sweep cost scales with the straggler's event count (file
+    completions + controller ticks), so the proxy estimates the transfer
+    duration at the *achievable* rate — window-limited streams on lossy
+    paths run far below line rate — and converts it to ticks.
+    """
+    from repro.core import testbeds
+    from repro.core.netmodel import channel_rate_cap
+
+    files = build_files(scenario)
+    net = testbeds.TESTBEDS[scenario.network]
+    total = sum(f.size for f in files)
+    est_rate = min(
+        net.bandwidth,
+        net.disk.streaming_rate,
+        max(1, scenario.max_cc) * channel_rate_cap(net, 4),
+    )
+    duration = total / max(est_rate, 1.0)
+    return duration / max(scenario.tick_period, 1e-9) + len(files)
+
 
 def run_scenario(scenario: Scenario, backend: str = "event") -> SimResult:
+    backend = _resolve_backend(backend)
     if backend == "event":
         return build_simulation(scenario).run()
-    if backend == "batch":
-        return run_matrix([scenario], backend="batch")[0]
-    raise ValueError(f"unknown backend {backend!r}; options: event, batch")
+    return run_matrix([scenario], backend=backend)[0]
 
 
 def run_matrix(
-    scenarios: Sequence[Scenario], backend: str = "batch"
+    scenarios: Sequence[Scenario],
+    backend: str = "numpy",
+    chunk_size: Optional[int] = DEFAULT_CHUNK_SIZE,
 ) -> List[SimResult]:
     """Run every scenario; order of results matches the input order."""
+    backend = _resolve_backend(backend)
+    if chunk_size is not None and chunk_size <= 0:
+        raise ValueError(f"chunk_size must be positive, got {chunk_size}")
     if backend == "event":
         return [build_simulation(sc).run() for sc in scenarios]
-    if backend == "batch":
-        sims = [build_simulation(sc) for sc in scenarios]
-        return BatchSimulation(sims, names=[sc.name for sc in scenarios]).run()
-    raise ValueError(f"unknown backend {backend!r}; options: event, batch")
+    cls = _driver_cls(backend)
+    order = sorted(range(len(scenarios)), key=lambda i: _cost_proxy(scenarios[i]))
+    size = chunk_size or BACKEND_CHUNK_SIZE[backend]
+    results: List[Optional[SimResult]] = [None] * len(scenarios)
+    for lo in range(0, len(order), size):
+        part = order[lo : lo + size]
+        sims = [build_simulation(scenarios[i]) for i in part]
+        out = cls(sims, names=[scenarios[i].name for i in part]).run()
+        for i, res in zip(part, out):
+            results[i] = res
+    return results  # type: ignore[return-value]
 
 
 def run_simulations(
     sims: Sequence["Simulation"],
     names: Optional[Sequence[str]] = None,
-    backend: str = "batch",
+    backend: str = "numpy",
 ) -> List[SimResult]:
     """Batch-execute prebuilt Simulations (for sweeps that don't fit the
     Scenario grid, e.g. the figure benchmarks' custom dataset scales)."""
+    backend = _resolve_backend(backend)
     if backend == "event":
         return [sim.run() for sim in sims]
-    if backend == "batch":
-        return BatchSimulation(sims, names=names).run()
-    raise ValueError(f"unknown backend {backend!r}; options: event, batch")
+    return _driver_cls(backend)(sims, names=names).run()
 
 
 # --------------------------------------------------------------------------
@@ -133,18 +213,38 @@ def compare_golden(
     return out
 
 
+def build_matrix(name: str) -> List[Scenario]:
+    if name == "default":
+        return default_matrix()
+    if name == "smoke":
+        return smoke_matrix()
+    if name == "full":
+        return full_matrix()
+    raise ValueError(f"unknown matrix {name!r}; options: default, smoke, full")
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     import argparse
 
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--matrix", choices=("default", "smoke"), default="default")
-    ap.add_argument("--backend", choices=("event", "batch"), default="event")
+    ap.add_argument(
+        "--matrix", choices=("default", "smoke", "full"), default="default"
+    )
+    ap.add_argument(
+        "--backend", choices=BACKENDS + ("batch",), default="event"
+    )
+    ap.add_argument(
+        "--chunk-size", type=int, default=DEFAULT_CHUNK_SIZE,
+        help="scenarios per batched execution chunk (bounds memory)",
+    )
     ap.add_argument("--out", default="tests/golden/eval_matrix.json")
     ap.add_argument("--refresh-golden", action="store_true")
     args = ap.parse_args(argv)
 
-    scenarios = default_matrix() if args.matrix == "default" else smoke_matrix()
-    results = run_matrix(scenarios, backend=args.backend)
+    scenarios = build_matrix(args.matrix)
+    results = run_matrix(
+        scenarios, backend=args.backend, chunk_size=args.chunk_size
+    )
     snap = metrics_snapshot(scenarios, results)
     if args.refresh_golden:
         save_golden(args.out, snap)

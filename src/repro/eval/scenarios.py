@@ -2,10 +2,13 @@
 
 A :class:`Scenario` is a pure value — building it twice yields bit-identical
 simulations because every dataset generator is seeded from the scenario
-itself. The default matrix crosses the paper's six WAN testbeds with scaled
-paper datasets and all five schedulers (SC / MC / ProMC / GlobusOnline /
-untuned) plus a maxCC sweep, giving 200+ scenarios that both the event-driven
-simulator and the batch fast-path consume unchanged.
+itself. The golden-pinned default matrix crosses the paper's six WAN
+testbeds with scaled paper datasets and all five schedulers (SC / MC /
+ProMC / GlobusOnline / untuned) plus a maxCC sweep (276 scenarios);
+:func:`full_matrix` widens it with impaired-path testbeds (loss / jitter /
+asymmetric control RTT) and heavy-tail / small-file-swarm datasets to
+1000+ scenarios. Every backend — event simulator, NumPy fabric driver,
+JAX device loop — consumes the same grids unchanged.
 """
 from __future__ import annotations
 
@@ -35,10 +38,18 @@ DATASET_BUILDERS: Dict[str, Callable[[int], List[FileSpec]]] = {
     ),
     "uniform_small": lambda seed: filesets.uniform_files(40, 4 * MB),
     "uniform_huge": lambda seed: filesets.uniform_files(6, 8 * GB),
+    "heavy_tail": lambda seed: filesets.heavy_tail_dataset(
+        scale=0.012, seed=seed
+    ),
+    "small_file_swarm": lambda seed: filesets.small_file_swarm(
+        scale=0.004, seed=seed
+    ),
 }
 
 #: the paper's physical WAN testbeds (Tables 1-2); DCN/CKPT presets are
-#: exercised by grad-sync suites, not the transfer matrix.
+#: exercised by grad-sync suites, not the transfer matrix. This tuple is
+#: pinned — golden snapshots cover ``default_matrix`` — so impaired-path
+#: additions go to EXTENDED_NETWORKS / ``full_matrix`` instead.
 NETWORKS: Sequence[str] = (
     testbeds.XSEDE.name,
     testbeds.LONI.name,
@@ -46,6 +57,22 @@ NETWORKS: Sequence[str] = (
     testbeds.STAMPEDE_COMET.name,
     testbeds.SUPERMIC_BRIDGES.name,
     testbeds.LAN.name,
+)
+
+#: paper testbeds + the impaired-path variants (loss / jitter / asymmetric
+#: control RTT) driven only by the 1000+-scenario ``full_matrix``.
+EXTENDED_NETWORKS: Sequence[str] = NETWORKS + (
+    testbeds.LOSSY_TRANSATLANTIC.name,
+    testbeds.JITTERY_OVERLAY.name,
+    testbeds.ASYM_CONTROL_PATH.name,
+)
+
+#: datasets of the golden-pinned default/smoke matrices. Pinned for the
+#: same reason as NETWORKS: new generators join ``full_matrix`` via
+#: DATASET_BUILDERS without silently reshaping the snapshotted grids.
+CORE_DATASETS: Sequence[str] = (
+    "des", "genome", "mixed", "small_dominated", "uniform_small",
+    "uniform_huge",
 )
 
 ALGORITHMS: Sequence[str] = ("sc", "mc", "promc", "globus", "untuned")
@@ -117,13 +144,14 @@ def build_simulation(
 
 
 def default_matrix(seed: int = 0) -> List[Scenario]:
-    """The full grid: 6 networks x 6 datasets x 5 schedulers (maxCC=8)
-    = 180 scenarios, plus a maxCC sweep {1, 2, 4, 16} of the adaptive
-    schedulers (MC, ProMC) on two contrasting datasets = 96 more,
-    for 276 total."""
+    """The golden-pinned grid: 6 networks x 6 core datasets x 5 schedulers
+    (maxCC=8) = 180 scenarios, plus a maxCC sweep {1, 2, 4, 16} of the
+    adaptive schedulers (MC, ProMC) on two contrasting datasets = 96 more,
+    for 276 total. The 1000+-scenario acceptance grid is
+    :func:`full_matrix`."""
     out: List[Scenario] = []
     for net in NETWORKS:
-        for ds in DATASET_BUILDERS:
+        for ds in CORE_DATASETS:
             for algo in ALGORITHMS:
                 out.append(
                     Scenario(network=net, dataset=ds, algorithm=algo, seed=seed)
@@ -141,11 +169,54 @@ def default_matrix(seed: int = 0) -> List[Scenario]:
     return out
 
 
-def smoke_matrix(seed: int = 0) -> List[Scenario]:
-    """A 24-scenario cross-section (every network, dataset, and scheduler
-    appears) for tier-1 tests and CI; the full matrix runs behind -m slow."""
+def full_matrix(seed: int = 0) -> List[Scenario]:
+    """The 1000+-scenario acceptance grid for backend difftests and the
+    matrix benchmarks.
+
+    Base cross: 9 networks (paper testbeds + lossy/jittery/asymmetric-RTT
+    variants) x 8 datasets (core + heavy-tail + small-file swarm) x 5
+    schedulers x 2 dataset seeds = 720 scenarios. On top: a maxCC sweep
+    {1, 2, 4, 16} of the adaptive schedulers on three contrasting datasets
+    (216) and a chunk-count sweep {1, 2, 3} (vs the default 4) of the tuned
+    schedulers on the new shapes (162), for 1098 total.
+    """
     out: List[Scenario] = []
-    datasets = list(DATASET_BUILDERS)
+    for s in (seed, seed + 1):
+        for net in EXTENDED_NETWORKS:
+            for ds in DATASET_BUILDERS:
+                for algo in ALGORITHMS:
+                    out.append(
+                        Scenario(network=net, dataset=ds, algorithm=algo, seed=s)
+                    )
+    for net in EXTENDED_NETWORKS:
+        for ds in ("mixed", "uniform_huge", "heavy_tail"):
+            for algo in ("mc", "promc"):
+                for cc in (1, 2, 4, 16):
+                    out.append(
+                        Scenario(
+                            network=net, dataset=ds, algorithm=algo,
+                            max_cc=cc, seed=seed,
+                        )
+                    )
+    for net in EXTENDED_NETWORKS:
+        for ds in ("heavy_tail", "small_file_swarm"):
+            for algo in ("sc", "mc", "promc"):
+                for k in (1, 2, 3):
+                    out.append(
+                        Scenario(
+                            network=net, dataset=ds, algorithm=algo,
+                            num_chunks=k, seed=seed,
+                        )
+                    )
+    return out
+
+
+def smoke_matrix(seed: int = 0) -> List[Scenario]:
+    """A 24-scenario cross-section (every network, core dataset, and
+    scheduler appears) for tier-1 tests and CI; the full matrix runs
+    behind -m slow."""
+    out: List[Scenario] = []
+    datasets = list(CORE_DATASETS)
     for i, net in enumerate(NETWORKS):
         for j, algo in enumerate(ALGORITHMS):
             ds = datasets[(i + j) % len(datasets)]

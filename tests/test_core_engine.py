@@ -88,6 +88,35 @@ def test_engine_bytes_task(tmp_path):
     assert dst.read_bytes() == payload
 
 
+def test_task_holds_one_destination_fd_for_lifetime(tmp_path, monkeypatch):
+    """The destination is opened once per task (not per pwrite) and the fd
+    is released by finalize — the engine calls finalize after the last
+    stripe completes."""
+    opens = []
+    real_open = os.open
+
+    def counting_open(path, *a, **kw):
+        fd = real_open(path, *a, **kw)
+        opens.append(str(path))
+        return fd
+
+    monkeypatch.setattr(os, "open", counting_open)
+    payload = os.urandom(5 * MB)
+    dst = tmp_path / "out.bin"
+    task = bytes_task(FileSpec(name="x", size=len(payload)), payload, str(dst))
+    # many writes (the engine writes 1 MB blocks, striped across threads)
+    block = MB
+    for off in range(0, len(payload), block):
+        task.write(off, payload[off : off + block])
+    assert opens.count(str(dst)) == 1
+    task.finalize()
+    assert dst.read_bytes() == payload
+    # after finalize the fd is closed; a fresh write reopens exactly once
+    task.write(0, b"y")
+    task.finalize()
+    assert opens.count(str(dst)) == 2
+
+
 def test_engine_latency_injection_pipelining_speedup(tmp_path):
     """With injected control latency, pipelining visibly reduces wall time —
     the paper's mechanism, demonstrated on the real engine."""

@@ -1,9 +1,10 @@
-"""Differential matrix tests: batch fast-path vs event simulator, golden
+"""Differential matrix tests: fabric backends vs event simulator, golden
 snapshot round-trip, and determinism of scenario construction.
 
-The smoke cross-section runs in tier-1; the full 200+-scenario matrix (the
-ISSUE-1 acceptance gate) runs the same assertion behind ``-m slow`` and in
-CI's difftest job.
+The smoke cross-section runs in tier-1 (including a JAX-backend slice);
+the 276-scenario default matrix (ISSUE-1 gate) and the 1000+-scenario full
+matrix across all three backends (ISSUE-2 gate) run behind ``-m slow`` and
+in CI's difftest jobs.
 """
 import math
 import os
@@ -15,12 +16,14 @@ from repro.eval import (
     assert_agreement,
     default_matrix,
     diff_matrix,
+    full_matrix,
     load_golden,
     metrics_snapshot,
     run_matrix,
     save_golden,
     smoke_matrix,
 )
+from repro.eval.difftest import diff_backend
 from repro.eval.runner import compare_golden
 from repro.eval.scenarios import build_files
 
@@ -52,13 +55,46 @@ def test_smoke_matrix_agreement():
     assert max(r.rel_err for r in reports) < 1e-6
 
 
+def test_jax_backend_smoke_slice_agreement():
+    """Tier-1 slice of the JAX device loop: a cross-section of the smoke
+    matrix against both the event reference and the NumPy fast path.
+    diff_backend raises on any scenario beyond the 2% bar."""
+    scs = smoke_matrix()[::4]
+    reports = diff_backend(scs, "jax")
+    assert len(reports) >= 2 * len(scs)  # event pairing + numpy pairing
+
+
+def test_chunked_execution_is_composition_invariant():
+    """Chunk size (memory bound) must not change any scenario's result:
+    scenarios are independent, whatever batch they share."""
+    scs = smoke_matrix()[:9]
+    whole = run_matrix(scs, backend="numpy", chunk_size=None)
+    parts = run_matrix(scs, backend="numpy", chunk_size=4)
+    for w, p in zip(whole, parts):
+        assert w.throughput == p.throughput
+        assert w.total_time == p.total_time
+
+
 @pytest.mark.slow
-def test_full_matrix_agreement():
+def test_default_matrix_agreement():
     """ISSUE-1 acceptance: >= 200 scenarios, every one within 2%."""
     scs = default_matrix()
     assert len(scs) >= 200
     reports = diff_matrix(scs)
     assert_agreement(reports, rtol=0.02)
+
+
+@pytest.mark.slow
+def test_full_matrix_all_backends_agreement():
+    """ISSUE-2 acceptance: the >= 1000-scenario grid passes the 2% bar on
+    event vs numpy vs jax (jax additionally checked against numpy);
+    diff_backend raises on any violator."""
+    scs = full_matrix()
+    assert len(scs) >= 1000
+    cache: dict = {}
+    for backend in ("numpy", "jax"):
+        reports = diff_backend(scs, backend, results_cache=cache)
+        assert reports
 
 
 def test_assert_agreement_reports_all_violators():
