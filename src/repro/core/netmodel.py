@@ -73,11 +73,14 @@ def allocate_rates(
     network: NetworkSpec,
     parallelisms: Sequence[int],
     active: Optional[Sequence[bool]] = None,
+    bandwidth: Optional[float] = None,
 ) -> List[float]:
     """Instantaneous per-channel rates for channels currently moving data.
 
     ``parallelisms[i]`` is channel i's stream count; ``active[i]`` False means
     the channel is in dead time / idle and consumes no bandwidth.
+    ``bandwidth`` overrides the link capacity for this instant (time-varying
+    paths pass ``network.bandwidth_at(t)``; default: the nominal capacity).
     """
     n = len(parallelisms)
     if active is None:
@@ -86,7 +89,8 @@ def allocate_rates(
     if not idx:
         return [0.0] * n
     caps = [channel_rate_cap(network, parallelisms[i]) for i in idx]
-    pool = min(network.bandwidth, network.disk.aggregate_rate(len(idx)))
+    bw = network.bandwidth if bandwidth is None else bandwidth
+    pool = min(bw, network.disk.aggregate_rate(len(idx)))
     alloc = waterfill(caps, pool)
     rates = [0.0] * n
     for j, i in enumerate(idx):

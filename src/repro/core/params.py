@@ -12,13 +12,24 @@ Rationale (Sec. 3.1):
   - concurrency large for small chunks (they need many channels to reach the
     throughput large files get), lower-bounded by 2, upper-bounded by the
     user-supplied maxCC (end-system cost guard).
+
+The arithmetic itself lives in the array-native controller layer
+(:func:`repro.eval.fabric.controllers.tuning.optimal_params`); this module
+is the scalar facade — validation, types, and the single-chunk entry
+points — instantiating the same kernel the batched drivers use.
 """
 from __future__ import annotations
 
-import math
 from typing import Optional
 
+import numpy as np
+
+from repro.eval.fabric.controllers import tuning as _tuning
+from repro.eval.fabric.shim import numpy_ops
+
 from .types import Chunk, NetworkSpec, TransferParams
+
+_OPS = numpy_ops()
 
 #: Practical cap on command queue depth; BDP/avgFileSize is unbounded for tiny
 #: files and a queue deeper than the chunk is meaningless. GridFTP clients cap
@@ -43,28 +54,17 @@ def find_optimal_parameters(
         raise ValueError("avg_file_size must be positive")
     if max_cc < 1:
         raise ValueError("max_cc must be >= 1")
-
-    # line 2: pipelining = BDP / avgFileSize
-    pipelining = int(math.ceil(bdp / avg_file_size))
-    pipelining = max(0, min(pipelining, MAX_PIPELINING))
-
-    # line 3: parallelism = Min(ceil(BDP/buffer), ceil(avgFileSize/buffer))
-    parallelism = min(
-        int(math.ceil(bdp / buffer_size)),
-        int(math.ceil(avg_file_size / buffer_size)),
+    pp, par, cc = _tuning.optimal_params(
+        _OPS,
+        np.float64(avg_file_size),
+        np.float64(bdp),
+        np.float64(buffer_size),
+        np.float64(max_cc),
+        np.int64(num_files if num_files is not None else 0),
+        MAX_PIPELINING,
     )
-    parallelism = max(1, parallelism)
-
-    # line 4: concurrency = Min(Max(BDP/avgFileSize, 2), maxCC)
-    concurrency = min(max(bdp / avg_file_size, 2.0), float(max_cc))
-    concurrency = max(1, int(concurrency))
-
-    if num_files is not None and num_files > 0:
-        pipelining = min(pipelining, max(0, num_files - 1))
-        concurrency = min(concurrency, num_files)
-
     return TransferParams(
-        pipelining=pipelining, parallelism=parallelism, concurrency=concurrency
+        pipelining=int(pp), parallelism=int(par), concurrency=int(cc)
     )
 
 

@@ -11,12 +11,27 @@ both drive them through the same protocol:
 
 ``view`` is a ChunkViews snapshot (bytes remaining, measured throughput,
 channel counts, ETAs). Actions are Open/Close/Move of channels.
+
+This module is a thin *scalar facade* over the array-native controller
+kernels in :mod:`repro.eval.fabric.controllers`: every decision —
+round-robin and delta-weighted channel distribution, the ProMC streak
+state machine, laggard-ETA discounting — runs through the same kernels
+the batched NumPy driver and the fused JAX device loop execute, here
+instantiated on single-scenario NumPy rows. The arithmetic is mirrored
+operation-for-operation, so the facade is bit-identical to the historical
+pure-Python implementation (golden snapshots unchanged) and the three
+consumers cannot drift apart.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.eval.fabric import controllers as _ctrl
+from repro.eval.fabric.shim import numpy_ops
 
 from .params import assign_chunk_params
 from .types import (
@@ -27,6 +42,11 @@ from .types import (
     NetworkSpec,
     TransferParams,
 )
+
+_OPS = numpy_ops()
+
+#: ctype -> position in the MC round-robin service order
+_RR_RANK = {ct: i for i, ct in enumerate(MC_ROUND_ROBIN_ORDER)}
 
 # --------------------------------------------------------------------------
 # Controller protocol
@@ -85,6 +105,17 @@ class ChunkView:
 ChunkViews = Sequence[ChunkView]
 
 
+def _view_arrays(view: ChunkViews):
+    """ChunkViews -> the (K,) NumPy rows the decision kernels consume."""
+    bytes_rem = np.array([v.bytes_remaining for v in view], dtype=np.float64)
+    thr = np.array([v.throughput for v in view], dtype=np.float64)
+    pred = np.array([v.predicted_rate for v in view], dtype=np.float64)
+    done = np.array([v.done for v in view], dtype=bool)
+    n_ch = np.array([v.n_channels for v in view], dtype=np.int64)
+    eta = _ctrl.chunk_eta(_OPS, bytes_rem, thr, pred, done)
+    return bytes_rem, thr, n_ch, done, eta
+
+
 class Scheduler:
     """Base controller. Subclasses implement the three paper algorithms."""
 
@@ -129,20 +160,16 @@ class Scheduler:
         estimated completion times, one at a time, discounting a chunk's ETA
         as it receives channels (Sec. 3.3: "channels of the finished chunk are
         given to a chunk whose estimated completion time is the largest")."""
-        live = [v for v in view if not v.done and v.index != src and v.bytes_remaining > 0]
-        if not live:
+        bytes_rem, _thr, n_ch, done, eta = _view_arrays(view)
+        idx = np.arange(len(view))
+        live = ~done & (idx != src) & (bytes_rem > 0)
+        if not live.any() or n_channels <= 0:
             return []
-        etas = {v.index: v.eta for v in live}
-        owners = {v.index: v.n_channels for v in live}
-        moves: Dict[int, int] = {}
-        for _ in range(n_channels):
-            dst = max(etas, key=lambda i: etas[i])
-            moves[dst] = moves.get(dst, 0) + 1
-            # adding a channel scales the chunk's rate ~ (n+1)/n
-            n = owners[dst] + moves[dst]
-            if math.isfinite(etas[dst]) and n > 0:
-                etas[dst] *= (n - 1) / n if n > 1 else 0.5
-        return [Move(src=src, dst=d, n=k) for d, k in moves.items()]
+        grants, first = _ctrl.laggard_grants(
+            _OPS, eta, n_ch, live, np.int64(n_channels), n_channels
+        )
+        order = sorted(np.flatnonzero(grants > 0), key=lambda d: first[d])
+        return [Move(src=src, dst=int(d), n=int(grants[d])) for d in order]
 
 
 # --------------------------------------------------------------------------
@@ -162,10 +189,10 @@ class SingleChunkScheduler(Scheduler):
 
     def __init__(self, chunks, network, max_cc):
         super().__init__(chunks, network, max_cc)
-        self._order = sorted(
-            range(len(self.chunks)),
-            key=lambda i: -int(self.chunks[i].ctype),
-        )
+        ctypes = np.array([int(c.ctype) for c in self.chunks], dtype=np.int64)
+        self._order = [
+            int(i) for i in _ctrl.sc_chunk_order(_OPS, ctypes)
+        ] if len(self.chunks) else []
         self._cursor = 0
 
     def _open_current(self) -> List[Action]:
@@ -198,21 +225,15 @@ def round_robin_distribution(
     chunks: Sequence[Chunk], max_cc: int
 ) -> Dict[int, int]:
     """Alg. 2 lines 8-12: distribute maxCC channels round-robin over the
-    chunk set ordered {Huge, Small, Large, Medium}."""
-    order = [
-        i
-        for ct in MC_ROUND_ROBIN_ORDER
-        for i, c in enumerate(chunks)
-        if c.ctype == ct and len(c) > 0
-    ]
-    alloc = {i: 0 for i in order}
-    if not order:
-        return alloc
-    k = 0
-    for _ in range(max_cc):
-        alloc[order[k % len(order)]] += 1
-        k += 1
-    return alloc
+    chunk set ordered {Huge, Small, Large, Medium}. Keys iterate in that
+    service order (the order channels open)."""
+    if not chunks:
+        return {}
+    rank = np.array([_RR_RANK[c.ctype] for c in chunks], dtype=np.int64)
+    nonempty = np.array([len(c) > 0 for c in chunks], dtype=bool)
+    alloc = _ctrl.round_robin_alloc(_OPS, rank, nonempty, max_cc)
+    order = sorted(np.flatnonzero(nonempty), key=lambda i: (rank[i], i))
+    return {int(i): int(alloc[i]) for i in order}
 
 
 class MultiChunkScheduler(Scheduler):
@@ -249,30 +270,16 @@ def weighted_distribution(
         part, never exceeding maxCC total.
     """
     delta = delta or PROMC_DELTA
-    live = [i for i, c in enumerate(chunks) if len(c) > 0]
-    if not live:
+    nonempty = np.array([len(c) > 0 for c in chunks], dtype=bool)
+    if not nonempty.any():
         return {}
-    weights = {i: delta[chunks[i].ctype] * chunks[i].total_bytes for i in live}
-    total = sum(weights.values()) or 1.0
-    shares = {i: weights[i] / total * max_cc for i in live}
-    alloc = {i: int(math.floor(shares[i])) for i in live}
-    # guarantee progress for every chunk
-    for i in live:
-        if alloc[i] == 0:
-            alloc[i] = 1
-    # trim/grant to hit exactly min(max_cc, ...) >= len(live) channels
-    budget = max(max_cc, len(live))
-    while sum(alloc.values()) > budget:
-        i = max(alloc, key=lambda j: (alloc[j], -shares[j]))
-        if alloc[i] <= 1:
-            break
-        alloc[i] -= 1
-    frac = sorted(live, key=lambda i: shares[i] - math.floor(shares[i]), reverse=True)
-    k = 0
-    while sum(alloc.values()) < budget and frac:
-        alloc[frac[k % len(frac)]] += 1
-        k += 1
-    return alloc
+    weights = np.array(
+        [delta[c.ctype] * c.total_bytes for c in chunks], dtype=np.float64
+    )
+    alloc = _ctrl.weighted_alloc(
+        _OPS, weights, nonempty, max_cc, trim_iters=len(chunks)
+    )
+    return {int(i): int(alloc[i]) for i in np.flatnonzero(nonempty)}
 
 
 class ProActiveMultiChunkScheduler(Scheduler):
@@ -308,31 +315,37 @@ class ProActiveMultiChunkScheduler(Scheduler):
         return [Open(chunk=i, n=n) for i, n in alloc.items() if n > 0]
 
     def on_tick(self, view: ChunkViews) -> List[Action]:
-        live = [v for v in self._live(view) if v.n_channels > 0]
-        if len(live) < 2:
-            self._streak, self._streak_pair = 0, None
-            return []
-        fast = min(live, key=lambda v: v.eta)
-        slow = max(live, key=lambda v: v.eta)
-        if not math.isfinite(slow.eta) and slow.throughput == 0:
-            # slow chunk has produced no data yet; wait for a measurement
-            return []
-        imbalanced = (
-            slow.eta >= self.ratio * fast.eta
-            and fast.index != slow.index
-            and fast.n_channels > 1  # never strand the fast chunk
+        # scalar short-circuit, bit-equivalent to the kernel's "fewer than
+        # two contenders" reset branch: skips the array round-trip for
+        # single-chunk scenarios and endgame phases (the common tick)
+        n_live = sum(
+            1
+            for v in view
+            if not v.done and v.bytes_remaining > 0 and v.n_channels > 0
         )
-        pair = (fast.index, slow.index)
-        if imbalanced and pair == self._streak_pair:
-            self._streak += 1
-        elif imbalanced:
-            self._streak, self._streak_pair = 1, pair
-        else:
+        if n_live < 2:
             self._streak, self._streak_pair = 0, None
             return []
-        if self._streak >= self.patience:
-            self._streak, self._streak_pair = 0, None
-            return [Move(src=fast.index, dst=slow.index, n=1)]
+        bytes_rem, thr, n_ch, done, eta = _view_arrays(view)
+        pf, ps = self._streak_pair if self._streak_pair else (-1, -1)
+        streak, pf, ps, move, src, dst = _ctrl.promc_tick(
+            _OPS,
+            eta,
+            thr,
+            n_ch,
+            ~done & (bytes_rem > 0),
+            np.int64(self._streak),
+            np.int64(pf),
+            np.int64(ps),
+            self.ratio,
+            np.int64(self.patience),
+        )
+        self._streak = int(streak)
+        self._streak_pair = (
+            (int(pf), int(ps)) if int(pf) >= 0 else None
+        )
+        if move:
+            return [Move(src=int(src), dst=int(dst), n=1)]
         return []
 
     def on_chunk_complete(self, view: ChunkViews, chunk: int) -> List[Action]:

@@ -114,6 +114,13 @@ class Simulation:
         self.n_events = 0
         self.n_moves = 0
         self._started = False
+        #: building a ChunkViews snapshot per tick is the costliest part of
+        #: a tick; skip it entirely for schedulers that inherit the no-op
+        #: ``on_tick`` (their empty action list makes the post-tick apply
+        #: and re-feed no-ops too, so the event sequence is unchanged)
+        self._nontrivial_tick = (
+            type(scheduler).on_tick is not Scheduler.on_tick
+        )
 
     # ------------------------------------------------------------------ #
     # controller plumbing
@@ -268,13 +275,19 @@ class Simulation:
             self.network,
             [ch.params.parallelism for ch in open_chs],
             [ch.transferring for ch in open_chs],
+            bandwidth=self.network.bandwidth_at(self.t),
         )
         if self.record_timeline:
             self.timeline.append((self.t, sum(rates)))
 
         busy = [ch for ch in open_chs if ch.busy]
+        # a bandwidth-profile step is an event: rates must be recomputed
+        # there, so it caps the horizon exactly like the controller tick
         dt = next_event_dt(
-            self._next_tick - self.t,
+            min(
+                self._next_tick - self.t,
+                self.network.next_profile_change(self.t) - self.t,
+            ),
             [ch.dead for ch in busy],
             [ch.file_remaining for ch in busy],
             [r for ch, r in zip(open_chs, rates) if ch.busy],
@@ -319,8 +332,9 @@ class Simulation:
                 st.rate_estimate = tick_rate_update(
                     st.rate_estimate, delta, self.tick_period
                 )
-            self._apply(self.scheduler.on_tick(self._view()))
-            self._feed_channels()
+            if self._nontrivial_tick:
+                self._apply(self.scheduler.on_tick(self._view()))
+                self._feed_channels()
             self._next_tick += self.tick_period
 
     def result(self) -> SimResult:

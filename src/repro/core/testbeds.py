@@ -33,6 +33,8 @@ def impaired_variant(
     loss_rate: float = 0.0,
     jitter: float = 0.0,
     control_rtt: float | None = None,
+    bandwidth_steps: tuple | None = None,
+    bandwidth_ramp: tuple | None = None,
 ) -> NetworkSpec:
     """Derive a pathologically impaired path from a clean testbed preset.
 
@@ -48,6 +50,19 @@ def impaired_variant(
                   it differs from the data path (satellite uplink, congested
                   reverse path). Inflates per-file dead time only; omit to
                   keep the base path's (a)symmetry.
+    bandwidth_steps
+                  time-varying capacity ("network conditions vary over
+                  time"): ``((t, mult), ...)`` piecewise-constant capacity
+                  multipliers; a leading ``(0.0, 1.0)`` step is prepended
+                  if missing. Tuning (Algorithm 1) and rate predictions
+                  keep using the nominal bandwidth — the realized rates
+                  deviating from the plan is precisely what the adaptive
+                  controllers must react to.
+    bandwidth_ramp
+                  ``(t0, t1, end_scale, n_steps)``: a linear capacity drift
+                  from 1.0 at ``t0`` to ``end_scale`` at ``t1``, rendered
+                  as a dense step ladder (fluid integration stays exact on
+                  piecewise-constant rates on every backend).
     """
     rtt = base.rtt + 2.0 * jitter
     buffer_size = base.buffer_size
@@ -66,6 +81,19 @@ def impaired_variant(
     )
     if control_rtt is not None:  # else inherit the base's control path
         fields["control_rtt"] = control_rtt
+    if bandwidth_steps is not None and bandwidth_ramp is not None:
+        raise ValueError("pass bandwidth_steps or bandwidth_ramp, not both")
+    if bandwidth_ramp is not None:
+        t0, t1, end_scale, n_steps = bandwidth_ramp
+        bandwidth_steps = tuple(
+            (t0 + i * (t1 - t0) / n_steps, 1.0 + (end_scale - 1.0) * i / n_steps)
+            for i in range(1, n_steps + 1)
+        )
+    if bandwidth_steps is not None:
+        prof = tuple((float(t), float(m)) for t, m in bandwidth_steps)
+        if not prof or prof[0][0] > 0.0:
+            prof = ((0.0, 1.0),) + prof
+        fields["bandwidth_profile"] = prof
     return dataclasses.replace(base, **fields)
 
 # ---------------------------------------------------------------------------
@@ -207,6 +235,30 @@ ASYM_CONTROL_PATH = impaired_variant(
 )
 
 # ---------------------------------------------------------------------------
+# Time-varying capacity variants ("network conditions vary over time"):
+# cross traffic steps the shared backbone down and partially back; an
+# evening drain ramps the path away under the transfer. Step times sit
+# inside the matrix's typical transfer spans (median ~35 s, p75 ~75 s) so
+# the capacity actually moves mid-transfer, not before or after it.
+# ---------------------------------------------------------------------------
+
+#: backbone sharing a burst of cross traffic: drops to 45% twelve seconds
+#: in, partially recovers, then settles degraded.
+STEPPY_BACKBONE = impaired_variant(
+    STAMPEDE_COMET,
+    "steppy-backbone",
+    bandwidth_steps=((12.0, 0.45), (45.0, 0.8), (120.0, 0.6)),
+)
+
+#: evening-congestion drain: capacity ramps linearly to 40% between
+#: t=8 s and t=88 s (an 8-step ladder), then stays there.
+RAMPY_EVENING = impaired_variant(
+    LONI,
+    "rampy-evening",
+    bandwidth_ramp=(8.0, 88.0, 0.4, 8),
+)
+
+# ---------------------------------------------------------------------------
 # TPU-fabric adaptation presets (DESIGN.md Sec. 2)
 # ---------------------------------------------------------------------------
 
@@ -258,6 +310,8 @@ TESTBEDS = {
         LOSSY_TRANSATLANTIC,
         JITTERY_OVERLAY,
         ASYM_CONTROL_PATH,
+        STEPPY_BACKBONE,
+        RAMPY_EVENING,
         DCN,
         CKPT_STORE,
     )

@@ -169,6 +169,48 @@ class NetworkSpec:
     #: paths). None means symmetric — the data RTT governs the per-file
     #: command/ack gap too.
     control_rtt: Optional[float] = None
+    #: time-varying capacity: piecewise-constant multiplier steps
+    #: ``((t0, m0), (t1, m1), ...)`` sorted by time with ``t0 == 0`` —
+    #: the link carries ``bandwidth * m_i`` from ``t_i`` until the next
+    #: step ("network conditions vary over time", the regime the paper's
+    #: adaptive controllers exist for). None means a static path. Ramps
+    #: are expressed as dense step ladders (``testbeds.impaired_variant``
+    #: builds them); Algorithm-1 tuning and rate *predictions* use the
+    #: nominal ``bandwidth`` — only realized transfer rates follow the
+    #: profile, exactly the mismatch the controllers must absorb.
+    bandwidth_profile: Optional[tuple] = None
+
+    def __post_init__(self):
+        if self.bandwidth_profile is not None:
+            prof = tuple(self.bandwidth_profile)
+            if not prof or prof[0][0] != 0.0:
+                raise ValueError(
+                    "bandwidth_profile must start with a (0.0, mult) step"
+                )
+            if list(prof) != sorted(prof, key=lambda p: p[0]):
+                raise ValueError("bandwidth_profile steps must be sorted")
+
+    def bandwidth_at(self, t: float) -> float:
+        """Link capacity at simulation time ``t`` (nominal when static)."""
+        if self.bandwidth_profile is None:
+            return self.bandwidth
+        mult = self.bandwidth_profile[0][1]
+        for step_t, step_m in self.bandwidth_profile:
+            if step_t <= t:
+                mult = step_m
+            else:
+                break
+        return self.bandwidth * mult
+
+    def next_profile_change(self, t: float) -> float:
+        """Time of the first profile step strictly after ``t`` (inf when
+        none remain / static) — an event horizon for the simulators."""
+        if self.bandwidth_profile is None:
+            return float("inf")
+        for step_t, _ in self.bandwidth_profile:
+            if step_t > t:
+                return step_t
+        return float("inf")
 
     @property
     def bdp(self) -> float:

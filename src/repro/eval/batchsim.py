@@ -1,15 +1,29 @@
-"""Compatibility shim: the vectorized fluid fast-path moved to
+"""DEPRECATED compatibility shim: the vectorized fluid fast-path moved to
 :mod:`repro.eval.fabric`.
 
 ``BatchSimulation`` is the NumPy instantiation of the backend-neutral
 fabric driver (:class:`repro.eval.fabric.driver.FabricSimulation`); the
-JAX instantiation lives in :mod:`repro.eval.fabric.jax_backend`. The
-fidelity contract that used to live here is now the
+JAX instantiation lives in :mod:`repro.eval.fabric.jax_backend` and the
+array-native controller layer in :mod:`repro.eval.fabric.controllers`.
+The fidelity contract that used to live here is now the
 :mod:`repro.eval.fabric` package docstring.
+
+Importing this module emits a :class:`DeprecationWarning`; it is slated
+for removal in the next PR — import from ``repro.eval.fabric`` instead.
 """
 from __future__ import annotations
 
-from .fabric.driver import FabricSimulation as BatchSimulation
-from .fabric.driver import _ScenarioRuntime  # noqa: F401  (test hooks)
+import warnings
+
+warnings.warn(
+    "repro.eval.batchsim is deprecated and will be removed in the next "
+    "PR; import BatchSimulation from repro.eval.fabric "
+    "(FabricSimulation) instead",
+    DeprecationWarning,
+    stacklevel=2,
+)
+
+from .fabric.driver import FabricSimulation as BatchSimulation  # noqa: E402
+from .fabric.driver import _ScenarioRuntime  # noqa: E402,F401  (test hooks)
 
 __all__ = ["BatchSimulation"]

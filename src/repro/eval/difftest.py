@@ -145,10 +145,26 @@ def main(argv: Optional[List[str]] = None) -> int:
     )
     ap.add_argument("--rtol", type=float, default=DEFAULT_RTOL)
     ap.add_argument("--chunk-size", type=int, default=None)
+    ap.add_argument(
+        "--sample", type=int, default=None, metavar="N",
+        help="run a deterministic N-scenario subsample of the matrix "
+        "(seeded shuffle; CI uses this for a fast full-matrix slice)",
+    )
+    ap.add_argument(
+        "--sample-seed", type=int, default=0,
+        help="seed for --sample (vary to cover different slices)",
+    )
     args = ap.parse_args(argv)
 
     matrix = "smoke" if args.smoke else args.matrix
     scenarios = build_matrix(matrix)
+    if args.sample is not None and args.sample < len(scenarios):
+        import random
+
+        scenarios = random.Random(args.sample_seed).sample(
+            scenarios, args.sample
+        )
+        matrix = f"{matrix}[sample {args.sample}]"
     backends = ("numpy", "jax") if args.backend == "all" else (
         "numpy" if args.backend == "batch" else args.backend,
     )

@@ -1,0 +1,67 @@
+"""Array-native controller layer: the paper's decision algorithms as
+backend-neutral kernels.
+
+The transfer *controllers* — SC / MC / ProMC chunk scheduling (Algorithms
+1-3) — were the last layer of the stack still written in scalar Python:
+every batched scenario had to park at each controller decision and
+round-trip through the host. This package re-expresses the full decision
+layer against the same :class:`repro.eval.fabric.shim.ArrayOps` namespace
+the fluid kernels use, so one definition serves three consumers:
+
+  * the scalar facade in :mod:`repro.core.schedulers` /
+    :mod:`repro.core.params` (single-scenario instantiation, preserving
+    the event-simulator API and golden snapshots),
+  * the batched NumPy driver (:meth:`FabricSimulation._post` dispatches
+    whole rows of decisions at once),
+  * the JAX device loop, which fuses controller ticks and chunk-completion
+    handling into its ``lax.while_loop`` body so steady-state scenarios
+    never leave the device.
+
+Module map (all kernels take ``ops`` first, chunk (K) / channel (C)
+structure on the trailing axes, and broadcast over any leading batch):
+
+  * :mod:`tuning`      — Algorithm 1 (``find_optimal_parameters``) as pure
+    table math + the SC largest-class-first chunk ordering;
+  * :mod:`alloc`       — Alg. 2 round-robin and Alg. 3 delta-weighted
+    channel distributions as batched allocation kernels;
+  * :mod:`decide`      — chunk ETA / predicted-rate views, the ProMC
+    streak state machine (Sec. 3.4) and the laggard-ETA-discounting
+    grant loop (Sec. 3.3);
+  * :mod:`transitions` — masked channel ``Open``/``Close``/``Move`` state
+    updates over per-scenario ``(channel, chunk)`` arrays, including the
+    LIFO resume-file push when a busy channel is closed mid-transfer.
+
+Like :mod:`repro.eval.fabric.kernels`, nothing here may import from
+``repro.core`` — the core schedulers import *this* package, and numeric
+tables (delta weights, round-robin ranks) are passed in as arrays.
+The scalar semantics these kernels must reproduce bit-for-bit are pinned
+by ``tests/test_controller_kernels.py`` against standalone references.
+"""
+from __future__ import annotations
+
+from .alloc import round_robin_alloc, weighted_alloc
+from .decide import chunk_eta, laggard_grants, predicted_chunk_rate, promc_tick
+from .transitions import (
+    apply_grants,
+    close_chunk,
+    move_channel,
+    open_ranked,
+    sc_advance_cursor,
+)
+from .tuning import optimal_params, sc_chunk_order
+
+__all__ = [
+    "apply_grants",
+    "chunk_eta",
+    "close_chunk",
+    "laggard_grants",
+    "move_channel",
+    "open_ranked",
+    "optimal_params",
+    "predicted_chunk_rate",
+    "promc_tick",
+    "round_robin_alloc",
+    "sc_advance_cursor",
+    "sc_chunk_order",
+    "weighted_alloc",
+]

@@ -1,0 +1,96 @@
+"""Initial channel-allocation kernels: Alg. 2 round-robin and Alg. 3
+delta-weighted distribution.
+
+Scalar references: ``repro.core.schedulers.round_robin_distribution`` and
+``weighted_distribution`` (now facades over these kernels). Both operate
+on the trailing chunk axis (K) and broadcast over any batch shape;
+``max_cc`` may itself be an array (the matrix sweeps vary it per
+scenario).
+"""
+from __future__ import annotations
+
+from ..shim import ArrayOps
+
+
+def round_robin_alloc(ops: ArrayOps, order_rank, nonempty, max_cc):
+    """Alg. 2 lines 8-12: maxCC channels round-robin over the live chunks
+    ordered {Huge, Small, Large, Medium}.
+
+    ``order_rank`` (..., K): each chunk's position of its ctype in the
+    round-robin ordering (lower = served earlier); ``nonempty`` (..., K)
+    bool. Closed form of the round-robin loop: the chunk at position ``p``
+    of the (rank, index) order receives ``maxCC // n_live`` channels plus
+    one if ``p < maxCC % n_live``. Returns (..., K) int64 allocations
+    (0 for empty chunks).
+    """
+    xp = ops.xp
+    rank = xp.asarray(order_rank, dtype=xp.int64)
+    K = rank.shape[-1]
+    key = rank * K + xp.arange(K)
+    pos = xp.sum(
+        (key[..., :, None] > key[..., None, :]) & nonempty[..., None, :],
+        axis=-1,
+    )
+    n_live = xp.maximum(xp.sum(nonempty, axis=-1), 1)[..., None]
+    mc = xp.broadcast_to(
+        xp.asarray(max_cc, dtype=xp.int64)[..., None], pos.shape
+    )
+    alloc = mc // n_live + (pos < mc % n_live)
+    return xp.where(nonempty, alloc, 0)
+
+
+def weighted_alloc(ops: ArrayOps, weights, nonempty, max_cc, trim_iters: int):
+    """Alg. 3 lines 5-12: ``concurrency_i = floor(weight_i/total * maxCC)``
+    with the two working-system deviations of the scalar reference:
+
+      * every non-empty chunk gets at least one channel;
+      * flooring leftovers are granted round-robin by descending
+        fractional share (stable by index), and over-allocation from the
+        min-1 floor is trimmed from the largest allocations (ties broken
+        toward the smallest share, then lowest index), never below 1.
+
+    ``weights`` (..., K) = delta_i * size_i (anything on empty slots is
+    ignored); ``trim_iters`` must be >= K (the excess over budget is at
+    most one per zero-floored chunk). Returns (..., K) int64 allocations
+    summing to ``max(maxCC, n_live)`` wherever any chunk is live.
+    """
+    xp = ops.xp
+    w = xp.where(nonempty, xp.asarray(weights, dtype=xp.float64), 0.0)
+    total = xp.sum(w, axis=-1, keepdims=True)
+    total = xp.where(total == 0.0, 1.0, total)  # scalar's ``sum(...) or 1.0``
+    mc = xp.asarray(max_cc, dtype=xp.float64)[..., None]
+    shares = w / total * mc
+    floors = xp.floor(shares)
+    alloc = xp.where(nonempty, xp.maximum(floors, 1.0), 0.0).astype(xp.int64)
+
+    n_live = xp.sum(nonempty, axis=-1)
+    budget = xp.maximum(xp.asarray(max_cc, dtype=xp.int64), n_live)
+    K = alloc.shape[-1]
+
+    # trim: repeatedly decrement the lexicographic-max (alloc, -share)
+    # holder while over budget; stop when it is already down to 1 channel
+    for _ in range(trim_iters):
+        over = xp.sum(alloc, axis=-1) > budget
+        a_max = xp.max(xp.where(nonempty, alloc, -1), axis=-1)
+        m1 = nonempty & (alloc == a_max[..., None])
+        s_min = xp.min(xp.where(m1, shares, xp.inf), axis=-1)
+        m2 = m1 & (shares == s_min[..., None])
+        sel = xp.argmax(m2, axis=-1)
+        can = over & (
+            xp.take_along_axis(alloc, sel[..., None], axis=-1)[..., 0] > 1
+        )
+        alloc = alloc - (
+            can[..., None] & (xp.arange(K) == sel[..., None])
+        ).astype(xp.int64)
+
+    # grant: leftovers round-robin by descending fractional part (stable)
+    frac = shares - floors
+    ahead = (frac[..., None, :] > frac[..., :, None]) | (
+        (frac[..., None, :] == frac[..., :, None])
+        & (xp.arange(K)[..., None, :] < xp.arange(K)[..., :, None])
+    )
+    pos = xp.sum(ahead & nonempty[..., None, :], axis=-1)
+    deficit = xp.maximum(budget - xp.sum(alloc, axis=-1), 0)[..., None]
+    nl = xp.maximum(n_live, 1)[..., None]
+    add = deficit // nl + (pos < deficit % nl)
+    return xp.where(nonempty, alloc + add, 0)

@@ -1,0 +1,170 @@
+"""Decision kernels: chunk ETA views, the ProMC streak state machine, and
+the laggard-ETA-discounting grant loop.
+
+Scalar references: ``ChunkView.eta``, ``netmodel.predict_chunk_rate``,
+``ProActiveMultiChunkScheduler.on_tick`` and
+``Scheduler.distribute_to_laggards`` in ``repro.core`` — every arithmetic
+step here mirrors the scalar operation order so the batched decisions are
+bit-identical to the Python controllers they replace.
+
+Tie-breaking note: the scalar code picks minima/maxima with Python's
+``min``/``max`` over index-ordered sequences (first winner on ties). The
+kernels reproduce that with mask-and-argmax — ``argmax`` of a boolean
+"equals the extremum" mask returns the first (lowest-index) hit on both
+NumPy and JAX, including when the extremum is ``inf``.
+"""
+from __future__ import annotations
+
+from ..shim import ArrayOps
+
+
+def _gather(xp, table, idx):
+    """``table[..., idx]`` for per-row indices: (..., K) x (...,) -> (...,)."""
+    return xp.take_along_axis(table, xp.expand_dims(idx, -1), axis=-1)[..., 0]
+
+
+def chunk_eta(ops: ArrayOps, bytes_remaining, throughput, predicted, done):
+    """Estimated completion time per chunk (Sec. 3.3), ``ChunkView.eta``:
+    remaining bytes over the measured rate, falling back to the model
+    prediction before data flows; 0 for finished chunks, inf when no rate
+    information exists at all. All args (..., K)."""
+    xp = ops.xp
+    rate = xp.where(throughput > 0.0, throughput, predicted)
+    eta = xp.where(
+        rate > 0.0,
+        bytes_remaining / xp.where(rate > 0.0, rate, 1.0),
+        xp.inf,
+    )
+    return xp.where(done | (bytes_remaining <= 0.0), 0.0, eta)
+
+
+def predicted_chunk_rate(
+    ops: ArrayOps,
+    avg_file_size,
+    cap,
+    dead_time,
+    n_channels,
+    total_open,
+    bandwidth,
+    disk_rate,
+    saturation_cc,
+    contention,
+):
+    """Batched ``netmodel.predict_chunk_rate``: closed-form steady-state
+    throughput estimate for cold ETAs.
+
+    ``avg_file_size``/``cap``/``dead_time``/``n_channels`` are (..., K)
+    per-chunk tables (``cap`` the per-channel rate ceiling for the chunk's
+    parallelism, ``dead_time`` its per-file serial overhead); the network
+    scalars are (...,). Callers pass ``n_channels``/``total_open`` already
+    floored at 1, as the scalar call sites do.
+    """
+    xp = ops.xp
+    n = xp.maximum(n_channels, 1)
+    total = xp.maximum(total_open, 1)[..., None]
+    over = xp.maximum(0, total - saturation_cc[..., None])
+    penalty = 1.0 / (1.0 + contention[..., None] * over)
+    agg = disk_rate[..., None] * penalty
+    pool = xp.minimum(bandwidth[..., None], agg)
+    rate = xp.minimum(cap, pool / total)
+    t_file = dead_time + avg_file_size / xp.maximum(rate, 1e-9)
+    return n * avg_file_size / t_file
+
+
+def promc_tick(
+    ops: ArrayOps,
+    eta,
+    throughput,
+    n_channels,
+    live,
+    streak,
+    pair_fast,
+    pair_slow,
+    ratio,
+    patience,
+):
+    """One ProMC periodic check (Sec. 3.4, Alg. 3) as a masked state-machine
+    update.
+
+    ``eta``/``throughput``/``n_channels``/``live`` are (..., K) views
+    (``live`` = not done and bytes remaining); ``streak``/``pair_fast``/
+    ``pair_slow`` the (...,) persistent streak state (-1 = no pair);
+    ``ratio``/``patience`` the scheduler constants, broadcastable (...,).
+
+    Returns ``(streak, pair_fast, pair_slow, move, src, dst)`` — ``move``
+    is True where a channel moves from ``src`` (fast) to ``dst`` (slow)
+    this tick. State-transition semantics mirror the scalar ``on_tick``:
+    fewer than two contenders resets the streak; an unmeasured
+    infinite-ETA laggard freezes it (wait for data); an imbalanced pair
+    extends or restarts it; ``patience`` consecutive imbalanced periods
+    fire the move and reset.
+    """
+    xp = ops.xp
+    lv = live & (n_channels > 0)
+    few = xp.sum(lv, axis=-1) < 2
+
+    min_eta = xp.min(xp.where(lv, eta, xp.inf), axis=-1)
+    max_eta = xp.max(xp.where(lv, eta, -xp.inf), axis=-1)
+    fast = xp.argmax(lv & (eta == min_eta[..., None]), axis=-1)
+    slow = xp.argmax(lv & (eta == max_eta[..., None]), axis=-1)
+    eta_f = _gather(xp, eta, fast)
+    eta_s = _gather(xp, eta, slow)
+    wait_meas = (
+        ~few
+        & ~xp.isfinite(eta_s)
+        & (_gather(xp, throughput, slow) == 0.0)
+    )
+
+    imb = (
+        (eta_s >= ratio * eta_f)
+        & (fast != slow)
+        & (_gather(xp, n_channels, fast) > 1)
+    )
+    same = (fast == pair_fast) & (slow == pair_slow)
+    streak_upd = xp.where(imb & same, streak + 1, xp.where(imb, 1, 0))
+    fire = ~few & ~wait_meas & imb & (streak_upd >= patience)
+
+    hold = wait_meas  # unmeasured laggard: state untouched, no decision
+    reset = few | fire
+    streak_out = xp.where(
+        hold, streak, xp.where(reset, 0, streak_upd)
+    )
+    pair_ok = ~hold & ~reset & imb
+    pf_out = xp.where(hold, pair_fast, xp.where(pair_ok, fast, -1))
+    ps_out = xp.where(hold, pair_slow, xp.where(pair_ok, slow, -1))
+    return streak_out, pf_out, ps_out, fire, fast, slow
+
+
+def laggard_grants(ops: ArrayOps, eta, owners, live, n_grants, max_iters: int):
+    """``Scheduler.distribute_to_laggards``'s grant loop (Sec. 3.3): hand
+    ``n_grants`` freed channels to the largest-ETA chunks one at a time,
+    discounting a receiver's ETA by ``n/(n+1)`` as it gains channels.
+
+    ``eta`` (..., K) absolute ETAs (inf allowed — an unmeasured chunk
+    keeps absorbing, the scalar reference's documented greedy behaviour);
+    ``owners`` (..., K) current channel counts; ``live`` (..., K) the
+    eligible receivers (not done, bytes remaining, not the source chunk);
+    ``n_grants`` (...,) int; ``max_iters`` a static bound >= max grants.
+
+    Returns ``(grants, first_rank)``: per-chunk grant counts and the step
+    index of each chunk's first grant (``max_iters`` if never granted) —
+    the order in which the scalar reference emits its ``Move`` actions,
+    which fixes the channel-slot assignment downstream.
+    """
+    xp = ops.xp
+    K = eta.shape[-1]
+    e = xp.asarray(eta, dtype=xp.float64)
+    grants = xp.zeros_like(xp.asarray(owners, dtype=xp.int64))
+    first = xp.full(grants.shape, max_iters, dtype=xp.int64)
+    any_live = xp.any(live, axis=-1)
+    for i in range(max_iters):
+        active = (i < n_grants) & any_live
+        cur = xp.max(xp.where(live, e, -xp.inf), axis=-1)
+        dst = xp.argmax(live & (e == cur[..., None]), axis=-1)
+        hit = (xp.arange(K) == dst[..., None]) & active[..., None]
+        grants = grants + hit
+        first = xp.where(hit & (first == max_iters), i, first)
+        n = _gather(xp, owners + grants, dst)
+        factor = xp.where(n > 1, (n - 1.0) / xp.maximum(n, 1), 0.5)
+        e = xp.where(hit & xp.isfinite(e), e * factor[..., None], e)
+    return grants, first

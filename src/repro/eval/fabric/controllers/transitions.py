@@ -1,0 +1,239 @@
+"""Channel Open/Close/Move transitions as masked array updates.
+
+These kernels re-express ``Simulation._apply`` / the fabric driver's
+``_open_channel``/``_close_channels`` bookkeeping without per-channel
+Python: channel slots live on the trailing C axis, chunk tables on the
+trailing K axis, and a ``trig`` (...,) mask gates which rows transition.
+Slot-assignment rules mirror the scalar code exactly — closes take a
+chunk's channels idle-first in column order, opens take the lowest free
+column — because future feed/close decisions key on column order.
+
+``prepend_sizes``/``prepend_n`` implement the LIFO resume-file stack: a
+busy channel closed mid-transfer re-queues its in-flight remainder
+(conservative restart, matching GridFTP), consumed before the FIFO queue
+cursor moves. Callers guarantee stack capacity (the drivers grow it on
+the host; the device loop parks a row on prospective overflow).
+"""
+from __future__ import annotations
+
+from ..shim import NO_CHUNK, ArrayOps
+
+
+def _gather(xp, table, idx):
+    return xp.take_along_axis(table, xp.expand_dims(idx, -1), axis=-1)[..., 0]
+
+
+def close_chunk(ops: ArrayOps, trig, k, chunk_of, busy, dead, rem, cap):
+    """Close every channel of chunk ``k`` (all idle — the chunk just
+    completed) on ``trig`` rows. ``k`` may be a Python int or a (...,)
+    array. Returns the updated channel arrays."""
+    xp = ops.xp
+    k = xp.expand_dims(xp.asarray(k), -1)
+    sel = xp.expand_dims(trig, -1) & (chunk_of == k)
+    return (
+        xp.where(sel, NO_CHUNK, chunk_of),
+        xp.where(sel, False, busy),
+        xp.where(sel, 0.0, dead),
+        xp.where(sel, 0.0, rem),
+        xp.where(sel, 0.0, cap),
+    )
+
+
+def open_ranked(
+    ops: ArrayOps, n_open, target, chunk_of, dead, cap, setup_cost, cap_k
+):
+    """Open ``n_open`` (...,) fresh channels for chunk ``target`` (...,) at
+    the lowest free columns (full setup cost: ``prev=None`` opens).
+    Callers guarantee enough free slots. Returns (chunk_of, dead, cap)."""
+    xp = ops.xp
+    free = chunk_of == NO_CHUNK
+    rank = xp.cumsum(free, axis=-1) - 1
+    sel = free & (rank < xp.expand_dims(n_open, -1))
+    tgt = xp.expand_dims(target, -1)
+    return (
+        xp.where(sel, tgt, chunk_of),
+        xp.where(sel, xp.expand_dims(setup_cost, -1), dead),
+        xp.where(sel, xp.expand_dims(_gather(xp, cap_k, target), -1), cap),
+    )
+
+
+def sc_advance_cursor(ops: ArrayOps, trig, cursor, order, nfiles, n_chunks):
+    """SC cursor step after a chunk completion: advance one position, then
+    skip empty size classes (``SingleChunkScheduler._open_current``'s
+    walk). ``order`` (..., K) is the largest-class-first permutation;
+    ``n_chunks`` (...,) the real (unpadded) chunk count."""
+    xp = ops.xp
+    K = order.shape[-1]
+    cursor = xp.where(trig, cursor + 1, cursor)
+    for _ in range(K):
+        idx = _gather(xp, order, xp.clip(cursor, 0, K - 1))
+        adv = trig & (cursor < n_chunks) & (_gather(xp, nfiles, idx) == 0)
+        cursor = xp.where(adv, cursor + 1, cursor)
+    return cursor
+
+
+def move_channel(
+    ops: ArrayOps,
+    trig,
+    src,
+    dst,
+    chunk_of,
+    busy,
+    dead,
+    rem,
+    cap,
+    queue_bytes,
+    prepend_sizes,
+    prepend_n,
+    n_moves,
+    par,
+    cap_k,
+    setup_cost,
+):
+    """Move one channel from chunk ``src`` to chunk ``dst`` (...,) on
+    ``trig`` rows — the ProMC tick re-allocation.
+
+    Mirrors ``Move(src, dst, n=1)`` through ``_apply``: the source's
+    idle-first lowest column closes (a busy victim re-queues its
+    remainder on the LIFO resume stack), then the lowest free column
+    opens for ``dst`` — at a quarter of the setup cost when the two
+    chunks share a parallelism level (cached data channels, Sec. 3.2).
+    """
+    xp = ops.xp
+    C = chunk_of.shape[-1]
+    K = queue_bytes.shape[-1]
+    P = prepend_sizes.shape[-1]
+    cols = xp.arange(C)
+
+    is_src = chunk_of == xp.expand_dims(src, -1)
+    idle_key = xp.where(is_src & ~busy, cols, 2 * C)
+    busy_key = xp.where(is_src & busy, cols, 2 * C)
+    have_idle = xp.min(idle_key, axis=-1) < 2 * C
+    chosen = xp.where(
+        have_idle,
+        xp.argmin(idle_key, axis=-1),
+        xp.argmin(busy_key, axis=-1),
+    )
+    oh = (cols == xp.expand_dims(chosen, -1)) & xp.expand_dims(trig, -1)
+
+    # resume push: a busy victim's in-flight remainder restarts later
+    rem_c = xp.sum(xp.where(oh, rem, 0.0), axis=-1)
+    push = trig & xp.any(oh & busy, axis=-1) & (rem_c > 0.0)
+    size = xp.ceil(rem_c)
+    koh = (xp.arange(K) == xp.expand_dims(src, -1)) & xp.expand_dims(push, -1)
+    queue_bytes = queue_bytes + xp.where(koh, xp.expand_dims(size, -1), 0.0)
+    pn_src = _gather(xp, prepend_n, src)
+    shape = prepend_sizes.shape[:-2] + (K * P,)
+    ps_flat = xp.reshape(prepend_sizes, shape)
+    slot = src * P + xp.clip(pn_src, 0, P - 1)
+    ps_flat = xp.where(
+        (xp.arange(K * P) == xp.expand_dims(slot, -1))
+        & xp.expand_dims(push, -1),
+        xp.expand_dims(size, -1),
+        ps_flat,
+    )
+    prepend_sizes = xp.reshape(ps_flat, prepend_sizes.shape)
+    prepend_n = prepend_n + xp.where(koh, 1, 0)
+
+    # close the chosen column, then open the lowest free one for dst
+    chunk_of = xp.where(oh, NO_CHUNK, chunk_of)
+    busy = xp.where(oh, False, busy)
+    dead = xp.where(oh, 0.0, dead)
+    rem = xp.where(oh, 0.0, rem)
+    cap = xp.where(oh, 0.0, cap)
+
+    free = chunk_of == NO_CHUNK
+    fcol = xp.argmax(free, axis=-1)  # first free; the close guarantees one
+    oh2 = (cols == xp.expand_dims(fcol, -1)) & xp.expand_dims(trig, -1)
+    cost = xp.where(
+        _gather(xp, par, src) == _gather(xp, par, dst),
+        0.25 * setup_cost,
+        setup_cost,
+    )
+    chunk_of = xp.where(oh2, xp.expand_dims(dst, -1), chunk_of)
+    dead = xp.where(oh2, xp.expand_dims(cost, -1), dead)
+    cap = xp.where(oh2, xp.expand_dims(_gather(xp, cap_k, dst), -1), cap)
+    n_moves = n_moves + xp.where(trig, 1, 0)
+    return (
+        chunk_of, busy, dead, rem, cap, queue_bytes, prepend_sizes,
+        prepend_n, n_moves,
+    )
+
+
+def apply_grants(
+    ops: ArrayOps,
+    trig,
+    src,
+    grants,
+    first_rank,
+    chunk_of,
+    busy,
+    dead,
+    rem,
+    cap,
+    n_moves,
+    par,
+    cap_k,
+    setup_cost,
+):
+    """Re-target the freed (idle) channels of completed chunk ``src`` to
+    the laggard chunks chosen by :func:`decide.laggard_grants`.
+
+    Equivalent to the scalar ``[Move(src, d, n=k_d) ...]`` action list in
+    first-grant order: the source's columns free up lowest-first, and the
+    flattened grant sequence claims the lowest free columns in order —
+    the same final slot assignment as the per-Move close/open batches,
+    because closes always release the lowest remaining source columns
+    before the corresponding opens run. ``src`` may be a Python int or a
+    (...,) array.
+    """
+    xp = ops.xp
+    K = grants.shape[-1]
+    C = chunk_of.shape[-1]
+    total = xp.sum(grants, axis=-1)
+    src = xp.broadcast_to(xp.asarray(src), total.shape)
+
+    sel = xp.expand_dims(trig, -1) & (chunk_of == xp.expand_dims(src, -1))
+    busy = xp.where(sel, False, busy)
+    dead = xp.where(sel, 0.0, dead)
+    rem = xp.where(sel, 0.0, rem)
+    cap0 = xp.where(sel, 0.0, cap)
+    closed = xp.where(sel, NO_CHUNK, chunk_of)
+
+    # offsets of each destination's slice in the flattened grant sequence
+    big = C * K + 1
+    fr = xp.where(grants > 0, first_rank, big)
+    earlier = fr[..., None, :] < fr[..., :, None]
+    off = xp.sum(xp.where(earlier, grants[..., None, :], 0), axis=-1)
+
+    free = closed == NO_CHUNK
+    frank = xp.cumsum(free, axis=-1) - 1
+    assign = (
+        free
+        & (frank < xp.expand_dims(total, -1))
+        & xp.expand_dims(trig, -1)
+    )
+    # (..., K, C) membership of each column's sequence slot in dst d's slice
+    fr_c = frank[..., None, :]
+    ind = (
+        (fr_c >= off[..., :, None])
+        & (fr_c < (off + grants)[..., :, None])
+        & (grants > 0)[..., :, None]
+        & assign[..., None, :]
+    )
+    dst_col = xp.sum(xp.arange(K)[..., :, None] * ind, axis=-2)
+    hit = xp.any(ind, axis=-2)
+    par_dst = xp.take_along_axis(par, xp.clip(dst_col, 0, K - 1), axis=-1)
+    cost = xp.where(
+        par_dst == xp.expand_dims(_gather(xp, par, src), -1),
+        0.25 * xp.expand_dims(setup_cost, -1),
+        xp.expand_dims(setup_cost, -1),
+    )
+    chunk_of = xp.where(hit, dst_col, closed)
+    dead = xp.where(hit, cost, dead)
+    cap = xp.where(
+        hit, xp.take_along_axis(cap_k, xp.clip(dst_col, 0, K - 1), axis=-1),
+        cap0,
+    )
+    n_moves = n_moves + xp.where(trig, total, 0)
+    return chunk_of, busy, dead, rem, cap, n_moves

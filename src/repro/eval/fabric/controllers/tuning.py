@@ -1,0 +1,67 @@
+"""Algorithm 1 (protocol-parameter estimation) and SC chunk ordering as
+array kernels.
+
+The scalar reference is ``repro.core.params.find_optimal_parameters``;
+``core.params`` is a thin facade over :func:`optimal_params` and the two
+must stay bit-identical (integer outputs, f64 intermediate math in the
+same operation order).
+"""
+from __future__ import annotations
+
+from ..shim import ArrayOps
+
+
+def optimal_params(
+    ops: ArrayOps,
+    avg_file_size,
+    bdp,
+    buffer_size,
+    max_cc,
+    num_files,
+    max_pipelining: int,
+):
+    """Algorithm 1, elementwise over any batch shape.
+
+    ``avg_file_size``/``bdp``/``buffer_size``/``max_cc``/``num_files`` are
+    broadcast-compatible float/int arrays; ``num_files <= 0`` means "no
+    file-count cap" (the scalar API's ``num_files=None``). Returns int64
+    ``(pipelining, parallelism, concurrency)`` arrays.
+    """
+    xp = ops.xp
+    avg = xp.asarray(avg_file_size, dtype=xp.float64)
+    bdp = xp.asarray(bdp, dtype=xp.float64)
+    buf = xp.asarray(buffer_size, dtype=xp.float64)
+    mc = xp.asarray(max_cc, dtype=xp.float64)
+    nf = xp.asarray(num_files, dtype=xp.int64)
+
+    # line 2: pipelining = BDP / avgFileSize, clamped to a practical depth
+    pp = xp.clip(xp.ceil(bdp / avg), 0.0, float(max_pipelining))
+    pp = pp.astype(xp.int64)
+
+    # line 3: parallelism = Min(ceil(BDP/buffer), ceil(avgFileSize/buffer))
+    par = xp.minimum(xp.ceil(bdp / buf), xp.ceil(avg / buf))
+    par = xp.maximum(par, 1.0).astype(xp.int64)
+
+    # line 4: concurrency = Min(Max(BDP/avgFileSize, 2), maxCC)
+    cc = xp.minimum(xp.maximum(bdp / avg, 2.0), mc)
+    cc = xp.maximum(xp.floor(cc), 1.0).astype(xp.int64)
+
+    capped = nf > 0
+    pp = xp.where(capped, xp.minimum(pp, xp.maximum(nf - 1, 0)), pp)
+    cc = xp.where(capped, xp.minimum(cc, nf), cc)
+    return pp, par, cc
+
+
+def sc_chunk_order(ops: ArrayOps, ctypes):
+    """SC transfer order: largest size class first, stable by index.
+
+    ``ctypes`` (..., K) integer chunk types. Returns the (..., K) index
+    permutation matching ``sorted(range(K), key=lambda i: -ctype[i])``
+    (Python's stable sort), via a unique composite integer key.
+    """
+    xp = ops.xp
+    ct = xp.asarray(ctypes, dtype=xp.int64)
+    K = ct.shape[-1]
+    hi = xp.max(ct, axis=-1, keepdims=True) if K else ct
+    key = (hi - ct) * K + xp.arange(K)  # unique => any sort is stable
+    return xp.argsort(key, axis=-1)

@@ -10,16 +10,21 @@ all array math goes through :mod:`repro.eval.fabric.kernels` against an
 advances every live scenario to its own next event simultaneously;
 scenarios are independent, so their clocks drift apart freely.
 
-Python only runs where the controller genuinely needs it: scheduler
-callbacks (``on_tick`` of ProMC, ``on_chunk_complete`` of SC/MC/ProMC) and
-the rare re-queue of an interrupted file after a channel closure. Baseline
-schedulers inherit the no-op callbacks, so their scenarios complete without
-leaving the vectorized path at all.
+The controller decision layer is batched too: SC / MC / ProMC rows run
+their tick and chunk-completion logic through the array kernels of
+:mod:`repro.eval.fabric.controllers` — the ProMC streak state machine,
+laggard-ETA discounting, and channel Open/Close/Move transitions are
+masked (S,)-row updates, with resume files held on a device-friendly
+LIFO stack ``(S, K, P)`` instead of host lists. Python remains only for
+*custom* scheduler subclasses (anything that is not exactly one of the
+three paper controllers or a no-op baseline), which still go through the
+scalar callback protocol.
 
 A sweep is split into :meth:`FabricSimulation._advance` (rates, horizon,
 fluid byte movement) and :meth:`FabricSimulation._post` (feed, completions,
-tick, scenario-done detection); the JAX backend reuses ``_post`` verbatim
-for scenarios its on-device loop parks at a Python decision point.
+tick, scenario-done detection); the JAX backend fuses both halves into its
+on-device loop and reuses ``_post`` only for rows it parks (timeline
+recording, custom controllers, capacity-guard edges).
 
 The fidelity contract against ``Simulation.step`` lives in the package
 docstring (:mod:`repro.eval.fabric`); ``eval.difftest`` enforces it on
@@ -34,48 +39,74 @@ from typing import List, Optional, Sequence
 import numpy as np
 
 from repro.core import netmodel
-from repro.core.schedulers import Close, ChunkView, Move, Open, Scheduler
+from repro.core.schedulers import (
+    Close,
+    ChunkView,
+    Move,
+    MultiChunkScheduler,
+    Open,
+    ProActiveMultiChunkScheduler,
+    Scheduler,
+    SingleChunkScheduler,
+)
 from repro.core.simulator import SimResult, Simulation
 from repro.core.types import TransferParams
 
-from . import kernels
+from . import controllers, kernels
 from .reference import resume_file
 from .shim import NO_CHUNK, ArrayOps, numpy_ops
 
 _EPS = 1e-12
 _NO_CHUNK = NO_CHUNK
 
+#: controller kinds the vectorized decision layer understands; anything
+#: else (KIND_CUSTOM) drives the scalar callback protocol on the host
+KIND_CUSTOM, KIND_TRIVIAL, KIND_SC, KIND_MC, KIND_PROMC = -1, 0, 1, 2, 3
+
+
+def _scheduler_kind(scheduler: Scheduler) -> int:
+    cls = type(scheduler)
+    if cls is SingleChunkScheduler:
+        return KIND_SC
+    if cls is MultiChunkScheduler:
+        return KIND_MC
+    if cls is ProActiveMultiChunkScheduler:
+        return KIND_PROMC
+    if (
+        cls.on_tick is Scheduler.on_tick
+        and cls.on_chunk_complete is Scheduler.on_chunk_complete
+    ):
+        return KIND_TRIVIAL
+    return KIND_CUSTOM
+
 
 class _ScenarioRuntime:
-    """Python-side (non-vectorizable) per-scenario state: the controller,
-    chunk metadata, and re-queued (resume) files."""
+    """Python-side (non-vectorizable) per-scenario state: the controller
+    object (for custom schedulers), chunk metadata, and timeline samples."""
 
     __slots__ = (
         "index", "name", "network", "scheduler", "chunks", "params",
-        "prepend", "trivial_tick", "trivial_complete", "tick_period",
-        "n_moves", "total_bytes", "avg_fs", "predict_cache", "timeline",
-        "archive",
+        "trivial_tick", "trivial_complete", "tick_period",
+        "total_bytes", "avg_fs", "predict_cache", "timeline", "archive",
     )
 
     def __init__(self, index: int, name: str, sim: Simulation):
         self.index = index
         #: final metrics snapshot taken when the scenario's row is retired
-        #: by compaction: (finish_t, n_events, completed_at, delivered)
+        #: by compaction: (finish_t, n_events, completed_at, delivered,
+        #: n_moves)
         self.archive = None
         self.name = name
         self.network = sim.network
         self.scheduler = sim.scheduler
         self.chunks = [st.chunk for st in sim.states]
         self.params: List[TransferParams] = [c.params for c in self.chunks]
-        #: re-queued resume files per chunk, LIFO (deque.appendleft mirror)
-        self.prepend: List[List[float]] = [[] for _ in self.chunks]
         cls = type(sim.scheduler)
         self.trivial_tick = cls.on_tick is Scheduler.on_tick
         self.trivial_complete = (
             cls.on_chunk_complete is Scheduler.on_chunk_complete
         )
         self.tick_period = sim.tick_period
-        self.n_moves = 0
         self.total_bytes = float(sum(st.queue_bytes for st in sim.states))
         self.avg_fs = [max(c.avg_file_size, 1.0) for c in self.chunks]
         self.timeline: List[tuple] = []
@@ -85,14 +116,18 @@ class _ScenarioRuntime:
 
 
 #: every per-scenario row array of the driver state, for compaction and
-#: device upload; (S,) scalars and (S, C)/(S, K) tables alike
+#: device upload; (S,) scalars and (S, C)/(S, K)/(S, K, P) tables alike
 _ROW_ARRAYS = (
     "t", "done", "next_tick", "tick_period", "n_events", "finish_t",
-    "fin_any", "max_time", "record_timeline", "has_prepend",
+    "fin_any", "max_time", "record_timeline",
     "trivial_tick", "trivial_complete", "bw", "disk_rate", "sat_cc",
     "contention", "n_chunks", "chunk_of", "dead", "rem", "busy", "cap",
     "chunk_done", "completed_at", "delivered", "delivered_at_tick",
     "rate_est", "queue_bytes", "fsdt", "qoff", "qlen", "qptr", "prepend_n",
+    "prepend_sizes", "kind", "streak", "pair_fast", "pair_slow",
+    "promc_ratio", "promc_patience", "sc_cursor", "sc_order", "conc",
+    "par", "cap_k", "avg_fs_k", "nfiles", "setup_cost", "n_moves",
+    "prof_t", "prof_mult",
 )
 
 
@@ -136,6 +171,7 @@ class FabricSimulation:
         S = len(self.rt)
         self.S = S
         self.C = 4  # channel capacity; grows on demand
+        self.P = 4  # resume-stack capacity; grows on demand
         K = max((len(r.chunks) for r in self.rt), default=1)
         self.K = K
 
@@ -153,7 +189,6 @@ class FabricSimulation:
         self.record_timeline = np.array(
             [sim.record_timeline for sim in sims], dtype=bool
         )
-        self.has_prepend = np.zeros(S, dtype=bool)
         self.trivial_tick = np.array([r.trivial_tick for r in self.rt])
         self.trivial_complete = np.array(
             [r.trivial_complete for r in self.rt]
@@ -169,6 +204,21 @@ class FabricSimulation:
         self.contention = np.array(
             [r.network.disk.contention for r in self.rt]
         )
+        # time-varying bandwidth profiles: piecewise-constant multiplier
+        # steps, padded to the widest profile in the batch ((0, 1.0) rows
+        # for static paths — the common case costs one gather per sweep)
+        profiles = [
+            getattr(r.network, "bandwidth_profile", None) or ((0.0, 1.0),)
+            for r in self.rt
+        ]
+        B = max((len(p) for p in profiles), default=1)
+        self.prof_t = np.full((S, B), np.inf)
+        self.prof_mult = np.ones((S, B))
+        for r, prof in zip(self.rt, profiles):
+            for j, (pt, pm) in enumerate(prof):
+                self.prof_t[r.index, j] = pt
+                self.prof_mult[r.index, j] = pm
+            self.prof_mult[r.index, len(prof):] = prof[-1][1]
 
         # channel state, padded to capacity C
         self.chunk_of = np.full((S, self.C), _NO_CHUNK, dtype=np.int64)
@@ -191,16 +241,48 @@ class FabricSimulation:
         #: serial per-file dead time per chunk (params are fixed per chunk)
         self.fsdt = np.zeros((S, K))
 
+        # controller state: kind dispatch, ProMC streak machine, SC cursor,
+        # per-chunk decision tables (caps, parallelism, concurrency, sizes)
+        self.kind = np.array(
+            [_scheduler_kind(r.scheduler) for r in self.rt], dtype=np.int64
+        )
+        self.streak = np.zeros(S, dtype=np.int64)
+        self.pair_fast = np.full(S, -1, dtype=np.int64)
+        self.pair_slow = np.full(S, -1, dtype=np.int64)
+        self.promc_ratio = np.array(
+            [getattr(r.scheduler, "ratio", 2.0) for r in self.rt]
+        )
+        self.promc_patience = np.array(
+            [getattr(r.scheduler, "patience", 3) for r in self.rt],
+            dtype=np.int64,
+        )
+        self.sc_cursor = np.zeros(S, dtype=np.int64)
+        self.sc_order = np.zeros((S, K), dtype=np.int64)
+        self.conc = np.zeros((S, K), dtype=np.int64)
+        self.par = np.ones((S, K), dtype=np.int64)
+        self.cap_k = np.zeros((S, K))
+        self.avg_fs_k = np.ones((S, K))
+        self.nfiles = np.zeros((S, K), dtype=np.int64)
+        self.setup_cost = np.array(
+            [r.network.channel_setup_cost for r in self.rt]
+        )
+        self.n_moves = np.zeros(S, dtype=np.int64)
+
         # FIFO queues: one flat size buffer + (offset, length, cursor) per
-        # (scenario, chunk). Resume files go to rt.prepend (LIFO), consumed
-        # before the cursor moves — exactly deque.appendleft/popleft order.
+        # (scenario, chunk). Resume files go to the (S, K, P) LIFO stack,
+        # consumed before the cursor moves — exactly deque.appendleft/
+        # popleft order.
         sizes: List[float] = []
         self.qoff = np.zeros((S, K), dtype=np.int64)
         self.qlen = np.zeros((S, K), dtype=np.int64)
         self.qptr = np.zeros((S, K), dtype=np.int64)
         #: count of re-queued resume files per (scenario, chunk)
         self.prepend_n = np.zeros((S, K), dtype=np.int64)
+        self.prepend_sizes = np.zeros((S, K, self.P))
         for r in self.rt:
+            if isinstance(r.scheduler, SingleChunkScheduler):
+                order = list(r.scheduler._order)
+                self.sc_order[r.index, : len(order)] = order
             for k, chunk in enumerate(r.chunks):
                 self.qoff[r.index, k] = len(sizes)
                 self.qlen[r.index, k] = len(chunk.files)
@@ -209,6 +291,13 @@ class FabricSimulation:
                 self.fsdt[r.index, k] = netmodel.file_start_dead_time(
                     r.network, r.params[k]
                 )
+                self.conc[r.index, k] = r.params[k].concurrency
+                self.par[r.index, k] = r.params[k].parallelism
+                self.cap_k[r.index, k] = netmodel.channel_rate_cap(
+                    r.network, r.params[k].parallelism
+                )
+                self.avg_fs_k[r.index, k] = r.avg_fs[k]
+                self.nfiles[r.index, k] = len(chunk.files)
         self.qsizes = np.asarray(sizes, dtype=np.float64)
         self._started = False
 
@@ -242,6 +331,20 @@ class FabricSimulation:
         self.busy = z(self.busy, False)
         self.cap = z(self.cap, 0.0)
 
+    def _grow_prepend(self) -> None:
+        pad = self.P
+        self.P *= 2
+        self.prepend_sizes = np.concatenate(
+            [self.prepend_sizes, np.zeros((self.S, self.K, pad))], axis=2
+        )
+
+    def _push_resume(self, s: int, chunk: int, size: float) -> None:
+        if self.prepend_n[s, chunk] >= self.P:
+            self._grow_prepend()
+        self.prepend_sizes[s, chunk, self.prepend_n[s, chunk]] = size
+        self.prepend_n[s, chunk] += 1
+        self.queue_bytes[s, chunk] += size
+
     def _open_channel(
         self, r: _ScenarioRuntime, chunk: int, prev: Optional[TransferParams]
     ) -> None:
@@ -269,10 +372,7 @@ class FabricSimulation:
         for c in cols[:n]:
             if self.busy[s, c] and self.rem[s, c] > 0:
                 f = resume_file(self.rem[s, c])
-                r.prepend[chunk].append(float(f.size))
-                self.queue_bytes[s, chunk] += f.size
-                self.prepend_n[s, chunk] += 1
-                self.has_prepend[s] = True
+                self._push_resume(s, chunk, float(f.size))
             self.chunk_of[s, c] = _NO_CHUNK
             self.busy[s, c] = False
             self.dead[s, c] = 0.0
@@ -292,27 +392,27 @@ class FabricSimulation:
                 moved = self._close_channels(r, act.src, act.n)
                 for prev in moved:
                     self._open_channel(r, act.dst, prev=prev)
-                r.n_moves += len(moved)
+                self.n_moves[r.index] += len(moved)
 
     # ------------------------------------------------------------------ #
     # queue feeding
     # ------------------------------------------------------------------ #
 
     def _files_left(self, s: int, k: int) -> int:
-        return int(self.qlen[s, k] - self.qptr[s, k]) + len(
-            self.rt[s].prepend[k]
+        return int(
+            self.qlen[s, k] - self.qptr[s, k] + self.prepend_n[s, k]
         )
 
     def _feed_py(self, r: _ScenarioRuntime) -> None:
-        """Scalar feed for one scenario (resume files present / after
-        scheduler actions). Mirrors Simulation._feed_channels."""
+        """Scalar feed for one scenario (after custom-scheduler actions).
+        Mirrors Simulation._feed_channels."""
         s = r.index
         idle = np.flatnonzero((self.chunk_of[s] != _NO_CHUNK) & ~self.busy[s])
         for c in idle:
             k = int(self.chunk_of[s, c])
-            if r.prepend[k]:
-                size = r.prepend[k].pop()
+            if self.prepend_n[s, k] > 0:
                 self.prepend_n[s, k] -= 1
+                size = self.prepend_sizes[s, k, self.prepend_n[s, k]]
             elif self.qptr[s, k] < self.qlen[s, k]:
                 size = self.qsizes[self.qoff[s, k] + self.qptr[s, k]]
                 self.qptr[s, k] += 1
@@ -322,17 +422,18 @@ class FabricSimulation:
             self.busy[s, c] = True
             self.rem[s, c] = size
             self.dead[s, c] += self.fsdt[s, k]
-        self.has_prepend[s] = bool(self.prepend_n[s].any())
 
     def _feed_vec(self, rows: np.ndarray) -> None:
-        """Batched feed for scenarios without resume files (the
-        ``kernels.feed_queues`` fabric kernel)."""
-        self.busy, self.dead, self.rem, self.qptr, self.queue_bytes = (
-            kernels.feed_queues(
-                self.ops, rows, self.chunk_of, self.busy, self.dead,
-                self.rem, self.qsizes, self.qoff, self.qlen, self.qptr,
-                self.queue_bytes, self.fsdt,
-            )
+        """Batched feed (the ``kernels.feed_queues`` fabric kernel, LIFO
+        resume stack included — skipped while no resume files exist)."""
+        ps = self.prepend_sizes if self.prepend_n.any() else None
+        (
+            self.busy, self.dead, self.rem, self.qptr, self.queue_bytes,
+            self.prepend_n,
+        ) = kernels.feed_queues(
+            self.ops, rows, self.chunk_of, self.busy, self.dead,
+            self.rem, self.qsizes, self.qoff, self.qlen, self.qptr,
+            self.queue_bytes, self.fsdt, ps, self.prepend_n,
         )
 
     # ------------------------------------------------------------------ #
@@ -385,6 +486,27 @@ class FabricSimulation:
             )
         return views
 
+    def _view_arrays(self):
+        """Batched ChunkViews: the (S, K) decision inputs (ETA, measured
+        and predicted rates, channel counts) for the controller kernels."""
+        open_mask = self.chunk_of != _NO_CHUNK
+        n_ch = self.ops.count_by_chunk(self.chunk_of, open_mask, self.K)
+        n_open = open_mask.sum(axis=-1)
+        inflight = self.ops.chunk_scatter_add(
+            np.zeros_like(self.queue_bytes), self.chunk_of, self.rem,
+            open_mask & self.busy,
+        )
+        bytes_rem = self.queue_bytes + inflight
+        pred = controllers.predicted_chunk_rate(
+            self.ops, self.avg_fs_k, self.cap_k, self.fsdt,
+            n_ch, n_open, self.bw, self.disk_rate, self.sat_cc,
+            self.contention,
+        )
+        eta = controllers.chunk_eta(
+            self.ops, bytes_rem, self.rate_est, pred, self.chunk_done
+        )
+        return bytes_rem, n_ch, eta
+
     def _check_completions_py(self, r: _ScenarioRuntime) -> List[int]:
         s = r.index
         completed = []
@@ -411,6 +533,13 @@ class FabricSimulation:
         for r in self.rt:
             self._apply(r, r.scheduler.initial_actions(self._view(r)))
             self._feed_py(r)
+            # mirror post-initial controller state into the row arrays
+            if isinstance(r.scheduler, SingleChunkScheduler):
+                self.sc_cursor[r.index] = r.scheduler._cursor
+            if isinstance(r.scheduler, ProActiveMultiChunkScheduler):
+                self.streak[r.index] = r.scheduler._streak
+                pair = r.scheduler._streak_pair or (-1, -1)
+                self.pair_fast[r.index], self.pair_slow[r.index] = pair
 
     def step(self, rows: Optional[np.ndarray] = None) -> None:
         """One synchronized sweep over ``rows`` (default: all scenarios):
@@ -421,6 +550,22 @@ class FabricSimulation:
             return
         self._advance(act)
         self._post(act)
+
+    def _bandwidth_now(self):
+        """Effective per-row bandwidth under the profile at time ``t`` and
+        the time of each row's next profile step (inf when static)."""
+        if self.prof_t.shape[1] == 1:  # all-static batch: one (0, 1.0) step
+            return self.bw, np.full(self.S, np.inf)
+        at = np.sum(self.prof_t <= self.t[:, None], axis=1) - 1
+        mult = np.take_along_axis(
+            self.prof_mult, np.maximum(at, 0)[:, None], axis=1
+        )[:, 0]
+        eff_bw = self.bw * np.where(at >= 0, mult, 1.0)
+        nxt = np.min(
+            np.where(self.prof_t > self.t[:, None], self.prof_t, np.inf),
+            axis=1,
+        )
+        return eff_bw, nxt
 
     def _advance(self, act: np.ndarray) -> None:
         """Physics half of a sweep: rates, horizon, fluid byte movement.
@@ -439,8 +584,9 @@ class FabricSimulation:
 
         transferring = self.busy & (self.dead <= _EPS)
         n_t = transferring.sum(axis=1)
+        eff_bw, next_prof = self._bandwidth_now()
         pool = kernels.disk_pool(
-            self.ops, n_t, self.bw, self.disk_rate, self.sat_cc,
+            self.ops, n_t, eff_bw, self.disk_rate, self.sat_cc,
             self.contention,
         )
         # water-fill only live rows: the sort inside is the costliest
@@ -458,8 +604,9 @@ class FabricSimulation:
                 self.rt[s].timeline.append((float(self.t[s]), float(agg[s])))
 
         dt = kernels.event_horizon(
-            self.ops, self.next_tick - self.t, self.busy, self.dead,
-            transferring, self.rem, rates,
+            self.ops,
+            np.minimum(self.next_tick - self.t, next_prof - self.t),
+            self.busy, self.dead, transferring, self.rem, rates,
         )
         dt = np.where(act, dt, 0.0)
 
@@ -492,18 +639,17 @@ class FabricSimulation:
         """Transition half of a sweep: feed -> completions -> tick -> done.
 
         The order is the fidelity contract's feed/complete/tick ordering;
-        the JAX backend calls this directly for scenarios it parked at a
-        Python decision point (their ``_advance`` ran on-device).
+        the JAX backend fuses the same sequence on-device and calls this
+        only for rows it parked (timeline / custom-controller / guard
+        edges — their ``_advance`` ran on-device).
         """
-        # ---- feed (vector fast path; scalar where resume files exist) ----
-        self._feed_vec(act & ~self.has_prepend)
-        for s in np.flatnonzero(act & self.has_prepend):
-            self._feed_py(self.rt[s])
+        # ---- feed (batched, resume-stack aware) ----
+        self._feed_vec(act)
 
         # ---- chunk completions ----
         # a chunk can only complete in an iteration where one of its
-        # channels finished a file (or lost its channels to an action, which
-        # is handled inside the python branches below)
+        # channels finished a file (or lost its channels to an action,
+        # which the controller branches below handle)
         busy_per_chunk = self.ops.count_by_chunk(
             self.chunk_of, self.busy, self.K
         )
@@ -516,15 +662,20 @@ class FabricSimulation:
         )
         comp_rows = completed.any(axis=1)
         # trivial controllers (baselines): pure vector bookkeeping
-        vec_rows = comp_rows & self.trivial_complete & ~self.has_prepend
+        vec_rows = comp_rows & self.trivial_complete
         if vec_rows.any():
             m = completed & vec_rows[:, None]
             self.chunk_done |= m
             self.queue_bytes[m] = 0.0
             rs, ks = np.nonzero(m)
             self.completed_at[rs, ks] = self.t[rs]
-        # real controllers: event-ordered python (detect -> callback -> feed)
-        for s in np.flatnonzero(comp_rows & ~vec_rows):
+        # SC / MC / ProMC: batched controller kernels
+        ctrl_rows = comp_rows & (self.kind >= KIND_SC)
+        if ctrl_rows.any():
+            self._complete_ctrl(completed & ctrl_rows[:, None])
+        # custom controllers: event-ordered python
+        py_rows = comp_rows & ~self.trivial_complete & (self.kind == KIND_CUSTOM)
+        for s in np.flatnonzero(py_rows):
             r = self.rt[s]
             for k in self._check_completions_py(r):
                 actions = r.scheduler.on_chunk_complete(self._view(r), k)
@@ -542,7 +693,12 @@ class FabricSimulation:
             rows = tick_hit[:, None]
             np.copyto(self.rate_est, ema, where=rows)
             np.copyto(self.delivered_at_tick, self.delivered, where=rows)
-            for s in np.flatnonzero(tick_hit & ~self.trivial_tick):
+            promc_rows = tick_hit & (self.kind == KIND_PROMC)
+            if promc_rows.any():
+                self._tick_ctrl(promc_rows)
+            for s in np.flatnonzero(
+                tick_hit & ~self.trivial_tick & (self.kind == KIND_CUSTOM)
+            ):
                 r = self.rt[s]
                 actions = r.scheduler.on_tick(self._view(r))
                 if actions:
@@ -554,6 +710,140 @@ class FabricSimulation:
         newly = act & self.chunk_done.all(axis=1) & (self.fin_any | comp_rows)
         self.finish_t = np.where(newly, self.t, self.finish_t)
         self.done |= newly
+
+    # ------------------------------------------------------------------ #
+    # batched controller dispatch (SC / MC / ProMC rows)
+    # ------------------------------------------------------------------ #
+
+    def _complete_ctrl(self, m: np.ndarray) -> None:
+        """Chunk completions on controller rows: mark all completed chunks
+        first (as the scalar ``_check_completions`` does), then run each
+        chunk's completion handler in index order with a re-feed after
+        every one — the exact event order of the scalar callback loop."""
+        rows = m.any(axis=1)
+        self.chunk_done |= m
+        self.queue_bytes[m] = 0.0
+        rs, ks = np.nonzero(m)
+        self.completed_at[rs, ks] = self.t[rs]
+        # ProMC drops accumulated streak evidence on any completion
+        pr = rows & (self.kind == KIND_PROMC)
+        self.streak[pr] = 0
+        self.pair_fast[pr] = -1
+        self.pair_slow[pr] = -1
+        for k in range(self.K):
+            trig = m[:, k]
+            if not trig.any():
+                continue
+            fed = np.zeros(self.S, dtype=bool)
+            sc_t = trig & (self.kind == KIND_SC)
+            if sc_t.any():
+                self._sc_complete(sc_t, k)
+                fed |= sc_t  # SC always emits a Close => always re-feeds
+            mc_t = trig & (
+                (self.kind == KIND_MC) | (self.kind == KIND_PROMC)
+            )
+            if mc_t.any():
+                fed |= self._laggard_complete(mc_t, k)
+            if fed.any():
+                self._feed_vec(fed)
+
+    def _sc_complete(self, trig: np.ndarray, k: int) -> None:
+        """SC's on_chunk_complete: close the finished chunk's channels,
+        advance the cursor past empty size classes, open the next chunk at
+        its own concurrency."""
+        (
+            self.chunk_of, self.busy, self.dead, self.rem, self.cap,
+        ) = controllers.close_chunk(
+            self.ops, trig, k, self.chunk_of, self.busy, self.dead,
+            self.rem, self.cap,
+        )
+        self.sc_cursor = controllers.sc_advance_cursor(
+            self.ops, trig, self.sc_cursor, self.sc_order, self.nfiles,
+            self.n_chunks,
+        )
+        open_ok = trig & (self.sc_cursor < self.n_chunks)
+        nxt = np.take_along_axis(
+            self.sc_order, np.clip(self.sc_cursor, 0, self.K - 1)[:, None],
+            axis=1,
+        )[:, 0]
+        n_open = np.where(
+            open_ok,
+            np.take_along_axis(self.conc, nxt[:, None], axis=1)[:, 0],
+            0,
+        )
+        # host-side capacity: grow the channel axis until every row fits
+        while True:
+            free = (self.chunk_of == _NO_CHUNK).sum(axis=1)
+            if (free >= n_open).all():
+                break
+            self._grow()
+        self.chunk_of, self.dead, self.cap = controllers.open_ranked(
+            self.ops, n_open, nxt, self.chunk_of, self.dead, self.cap,
+            self.setup_cost, self.cap_k,
+        )
+
+    def _laggard_complete(self, trig: np.ndarray, k: int) -> np.ndarray:
+        """MC/ProMC's on_chunk_complete: re-target the freed channels to
+        the largest-ETA chunks (with per-grant discounting). Returns the
+        rows that received actions (and therefore re-feed)."""
+        bytes_rem, n_ch, eta = self._view_arrays()
+        idx = np.arange(self.K)[None, :]
+        live = (
+            ~self.chunk_done & (idx != k) & (bytes_rem > 0)
+        )
+        freed = np.where(trig, n_ch[:, k], 0)
+        max_iters = int(freed.max())
+        if max_iters == 0:
+            return np.zeros(self.S, dtype=bool)
+        grants, first = controllers.laggard_grants(
+            self.ops, eta, n_ch, live, freed, max_iters
+        )
+        # no grants (no live receivers) => the scalar reference emits no
+        # actions at all, leaving the source's idle channels open
+        acted = trig & (grants.sum(axis=1) > 0)
+        (
+            self.chunk_of, self.busy, self.dead, self.rem, self.cap,
+            self.n_moves,
+        ) = controllers.apply_grants(
+            self.ops, acted, k, grants, first, self.chunk_of, self.busy,
+            self.dead, self.rem, self.cap, self.n_moves, self.par,
+            self.cap_k, self.setup_cost,
+        )
+        return acted
+
+    def _tick_ctrl(self, rows: np.ndarray) -> None:
+        """ProMC periodic re-allocation check on ``rows``: streak update
+        plus (on patience expiry) one fast->slow channel move, with the
+        LIFO resume push when the move victims a busy channel."""
+        bytes_rem, n_ch, eta = self._view_arrays()
+        live = ~self.chunk_done & (bytes_rem > 0)
+        streak, pf, ps, move, src, dst = controllers.promc_tick(
+            self.ops, eta, self.rate_est, n_ch, live, self.streak,
+            self.pair_fast, self.pair_slow, self.promc_ratio,
+            self.promc_patience,
+        )
+        self.streak = np.where(rows, streak, self.streak)
+        self.pair_fast = np.where(rows, pf, self.pair_fast)
+        self.pair_slow = np.where(rows, ps, self.pair_slow)
+        # grow the resume stack whenever it is full, even on no-move ticks:
+        # the JAX backend parks a row on prospective overflow, and replaying
+        # its tick must leave headroom or the row would re-park every tick
+        while (self.prepend_n >= self.P).any():
+            self._grow_prepend()
+        moving = rows & move
+        if not moving.any():
+            return
+        (
+            self.chunk_of, self.busy, self.dead, self.rem, self.cap,
+            self.queue_bytes, self.prepend_sizes, self.prepend_n,
+            self.n_moves,
+        ) = controllers.move_channel(
+            self.ops, moving, src, dst, self.chunk_of, self.busy,
+            self.dead, self.rem, self.cap, self.queue_bytes,
+            self.prepend_sizes, self.prepend_n, self.n_moves, self.par,
+            self.cap_k, self.setup_cost,
+        )
+        self._feed_vec(moving)
 
     # ------------------------------------------------------------------ #
     # live-row compaction
@@ -580,6 +870,7 @@ class FabricSimulation:
                     int(self.n_events[s]),
                     self.completed_at[s].copy(),
                     self.delivered[s].copy(),
+                    int(self.n_moves[s]),
                 )
         for name in self._row_arrays():
             setattr(self, name, getattr(self, name)[alive])
@@ -612,13 +903,14 @@ class FabricSimulation:
 
     def _result(self, r: _ScenarioRuntime) -> SimResult:
         if r.archive is not None:
-            finish_t, n_events, completed_at, delivered = r.archive
+            finish_t, n_events, completed_at, delivered, n_moves = r.archive
         else:
             s = r.index
             finish_t = float(self.finish_t[s])
             n_events = int(self.n_events[s])
             completed_at = self.completed_at[s]
             delivered = self.delivered[s]
+            n_moves = int(self.n_moves[s])
         total_time = max(finish_t, _EPS)
         return SimResult(
             network=r.network.name,
@@ -636,5 +928,5 @@ class FabricSimulation:
             },
             timeline=r.timeline,
             n_events=n_events,
-            n_moves=r.n_moves,
+            n_moves=n_moves,
         )

@@ -1,27 +1,37 @@
 """JAX instantiation of the fabric kernels: jit + vmap at matrix scale.
 
-The inter-decision advance loop runs entirely on-device: a per-scenario
-sweep function (the same :mod:`repro.eval.fabric.kernels` the NumPy driver
-uses, on ``(C,)``/``(K,)`` rows) is ``vmap``-mapped over the scenario axis
-and iterated inside a ``jit``-compiled ``lax.while_loop``. Scenarios whose
-next transition needs Python — a non-trivial controller tick or chunk
-completion, or queued resume files whose LIFO order lives in host lists —
-*park* (``stall``) at that decision point while the rest keep sweeping;
-the loop exits when every live scenario is parked. The host then replays
-exactly the NumPy driver's Python half (:meth:`FabricSimulation._post` /
-``step``) for the parked rows and re-enters the device loop, so each
-host round-trip amortizes over every scenario's full run-up to its next
-decision instead of costing one sync per event.
+The advance loop *and the controller decision layer* run on-device: a
+per-scenario sweep function — the same :mod:`repro.eval.fabric.kernels`
+fluid kernels plus the :mod:`repro.eval.fabric.controllers` decision
+kernels (ProMC streak machine, laggard-ETA grants, SC cursor walk,
+masked channel Open/Close/Move transitions, LIFO resume stack) — is
+``vmap``-mapped over the scenario axis and iterated inside a
+``jit``-compiled ``lax.while_loop``. Steady-state SC / MC / ProMC and
+baseline scenarios therefore never leave the device: the per-scenario
+host-sync count is O(1) instead of O(ticks).
 
-Scenarios are independent — their clocks may drift arbitrarily — so this
-interleaving produces the same per-scenario event sequence as the
-synchronized NumPy sweeps; ``eval.difftest`` holds all backends to the
-event simulator within the 2% bar.
+A scenario *parks* (``stall``) only when its next transition genuinely
+needs Python:
+
+  * timeline-recording rows (host-side (t, rate) sample appends) park
+    permanently and advance through the NumPy driver's ``step``;
+  * custom Scheduler subclasses (anything that is not exactly one of the
+    three paper controllers or a no-op baseline) park at their callback
+    events, exactly like the pre-fusion design;
+  * rare capacity-guard edges — an SC open wave that might not fit the
+    device's channel axis, or a ProMC move whose resume push might
+    overflow the on-device prepend stack — park for one sweep so the
+    host can grow the arrays.
+
+The host then replays exactly the NumPy driver's transition half
+(:meth:`FabricSimulation._post` / ``step``) for the parked rows and
+re-enters the device loop. Scenarios are independent — their clocks may
+drift arbitrarily — so this interleaving produces the same per-scenario
+event sequence as the synchronized NumPy sweeps; ``eval.difftest`` holds
+all backends to the event simulator within the 2% bar.
 
 Numerics run in float64 via the scoped ``jax.experimental.enable_x64``
 context (never the global flag: the rest of the repo traces in f32).
-Timeline-recording scenarios are permanently parked and advance through
-the host path, which appends their (t, rate) samples.
 """
 from __future__ import annotations
 
@@ -34,8 +44,15 @@ from jax import lax
 
 from repro.core.simulator import SimResult, Simulation
 
-from . import kernels
-from .driver import _EPS, _NO_CHUNK, FabricSimulation
+from . import controllers, kernels
+from .driver import (
+    _EPS,
+    _NO_CHUNK,
+    KIND_MC,
+    KIND_PROMC,
+    KIND_SC,
+    FabricSimulation,
+)
 from .shim import jax_ops
 
 _ERR_NONE, _ERR_MAXTIME, _ERR_STRANDED = 0, 1, 2
@@ -43,40 +60,82 @@ _STALL_NONE, _STALL_POST, _STALL_FULL = 0, 1, 2
 
 #: cap on device sweeps per while_loop entry: parked scenarios wait for
 #: the loop to exit before their Python decision runs, so unbounded entries
-#: let one long trivial stretch starve every parked controller. Bounded
-#: entries + the half-parked early exit keep rows rejoining promptly while
-#: still amortizing hundreds of events per host round-trip.
-_ROUND_CAP = 512
+#: let one long trivial stretch starve every parked controller. With the
+#: controller layer fused, parking is a rare edge — the half-cohort early
+#: exit still bounds any parked row's wait, and the cap mainly limits how
+#: long a straggler tail stays on-device between compaction checks.
+_ROUND_CAP = 2048
+
+#: floor on the padded device row count. Straggler tails run thousands of
+#: narrow sweeps whose cost is linear in the pad width, so a low floor is
+#: what makes the endgame cheap; each extra power-of-two bucket costs one
+#: more XLA trace at compile time. Once a round starts at the floor,
+#: draining below half the cohort cannot shrink the device shape, so the
+#: half-cohort early exit is skipped there (see ``_device_rounds``).
+_MIN_PAD = 8
+
+#: host-sync telemetry, accumulated across runs (reset with
+#: :func:`reset_sync_stats`); the eval-matrix bench derives its
+#: device-syncs-per-scenario figure from this.
+SYNC_STATS = {"rounds": 0, "post_row_replays": 0, "scenarios": 0, "runs": 0}
+
+
+def reset_sync_stats() -> None:
+    for k in SYNC_STATS:
+        SYNC_STATS[k] = 0
+
 
 #: state arrays the device sweep may mutate (host <-> device sync set)
 _MUTABLE = (
     "t", "done", "next_tick", "n_events", "dead", "rem", "busy",
     "chunk_done", "completed_at", "delivered", "delivered_at_tick",
     "rate_est", "queue_bytes", "qptr", "finish_t", "fin_any", "stall",
-    "err",
+    "err", "chunk_of", "cap", "prepend_n", "prepend_sizes", "streak",
+    "pair_fast", "pair_slow", "sc_cursor", "n_moves",
 )
-#: read-only inputs the Python half may rewrite between rounds
-#: (scheduler actions retarget channels; feeds consume resume files)
-_CONST_PY = ("has_prepend", "chunk_of", "cap", "prepend_n")
 #: read-only inputs fixed for a batch's lifetime — device-cached, rebuilt
 #: only when compaction changes the row set
 _CONST_STATIC = (
     "max_time", "tick_period", "bw", "disk_rate", "sat_cc", "contention",
-    "trivial_tick", "trivial_complete", "qoff", "qlen", "fsdt",
+    "trivial_tick", "trivial_complete", "qoff", "qlen", "fsdt", "kind",
+    "sc_order", "conc", "par", "cap_k", "avg_fs_k", "nfiles",
+    "setup_cost", "promc_ratio", "promc_patience", "prof_t", "prof_mult",
+    "n_chunks",
 )
-_CONST = _CONST_PY + _CONST_STATIC
 
 
-def _sweep_row(row: dict, qsizes):
-    """One event sweep of a single scenario (vmapped over the batch).
+def _views_row(ops, xp, row, chunk_of, busy, rem, queue_bytes, rate_est, K):
+    """Per-row ChunkView arrays: (K,) channel counts, ETA inputs."""
+    open_mask = chunk_of != _NO_CHUNK
+    n_ch = ops.count_by_chunk(chunk_of, open_mask, K)
+    n_open = xp.sum(open_mask)
+    inflight = ops.chunk_scatter_add(
+        xp.zeros_like(queue_bytes), chunk_of, rem, open_mask & busy
+    )
+    bytes_rem = queue_bytes + inflight
+    pred = controllers.predicted_chunk_rate(
+        ops, row["avg_fs_k"], row["cap_k"], row["fsdt"], n_ch, n_open,
+        row["bw"], row["disk_rate"], row["sat_cc"], row["contention"],
+    )
+    eta = controllers.chunk_eta(ops, bytes_rem, rate_est, pred, row["chunk_done"])
+    return bytes_rem, n_ch, eta
 
-    Mirrors ``FabricSimulation._advance`` + the vector branches of
-    ``_post``; rows whose transition needs Python set ``stall`` and keep
-    their post-advance state for the host to finish.
+
+#: per-sweep scratch passed between the phases of one device sweep
+#: (zero-initialized on upload so the while_loop carry keeps its shape)
+_SCRATCH = ("_completed", "_handler", "_tick", "_moving", "_msrc", "_mdst")
+
+
+def _phase_advance(row: dict, qsizes):
+    """Phase A of one sweep (always runs): physics advance, park
+    detection, queue feed, completion marking, tick EMA bookkeeping, and
+    scenario-done detection — everything except the (rarer) controller
+    handlers, which the batch-level driver gates behind ``lax.cond``.
     """
     ops = jax_ops()
     xp = ops.xp
     K = row["chunk_done"].shape[-1]
+    P = row["prepend_sizes"].shape[-1]
 
     runnable = (
         ~row["done"]
@@ -87,66 +146,116 @@ def _sweep_row(row: dict, qsizes):
         row["t"] > row["max_time"], _ERR_MAXTIME, _ERR_NONE
     )
 
-    # ---- advance (P1): rates, horizon, fluid byte movement ----
+    # ---- advance: rates, horizon, fluid byte movement ----
     transferring = row["busy"] & (row["dead"] <= _EPS)
+    oh = row["chunk_of"][..., :, None] == xp.arange(K)
+    n_ch_open = xp.sum(oh, axis=-2)
+    stranded = (~xp.any(row["busy"])) & xp.any(
+        ~row["chunk_done"] & (n_ch_open == 0)
+    )
+    err = xp.where((err == _ERR_NONE) & stranded, _ERR_STRANDED, err)
+    # rows that are parked/done, or errored *this* sweep, freeze at their
+    # pre-sweep state: zeroing dt and gating every transition mask below
+    # makes the whole sweep a natural no-op for them — no commit masking
+    alive = runnable & (err == _ERR_NONE)
+    if row["prof_t"].shape[-1] == 1:  # static path: the common case
+        eff_bw, next_prof = row["bw"], xp.inf
+    else:
+        prof_at = xp.sum(row["prof_t"] <= row["t"]) - 1
+        mult = row["prof_mult"][xp.maximum(prof_at, 0)]
+        eff_bw = row["bw"] * xp.where(prof_at >= 0, mult, 1.0)
+        next_prof = xp.min(
+            xp.where(row["prof_t"] > row["t"], row["prof_t"], xp.inf)
+        )
     pool = kernels.disk_pool(
-        ops, xp.sum(transferring), row["bw"], row["disk_rate"],
+        ops, xp.sum(transferring), eff_bw, row["disk_rate"],
         row["sat_cc"], row["contention"],
     )
     rates = kernels.waterfill(
         ops, xp.where(transferring, row["cap"], 0.0), pool
     )
-    held = ops.count_by_chunk(
-        row["chunk_of"], row["chunk_of"] != _NO_CHUNK, K
-    ) > 0
-    stranded = (~xp.any(row["busy"])) & xp.any(~row["chunk_done"] & ~held)
-    err = xp.where((err == _ERR_NONE) & stranded, _ERR_STRANDED, err)
-
     dt = kernels.event_horizon(
-        ops, row["next_tick"] - row["t"], row["busy"], row["dead"],
-        transferring, row["rem"], rates,
+        ops,
+        xp.minimum(row["next_tick"] - row["t"], next_prof - row["t"]),
+        row["busy"], row["dead"], transferring, row["rem"], rates,
     )
+    dt = xp.where(alive, dt, 0.0)
     t2 = row["t"] + dt
     busy2, dead2, rem2, moved, finished = kernels.advance_channels(
-        ops, xp.asarray(True), dt, row["busy"], row["dead"], transferring,
+        ops, alive, dt, row["busy"], row["dead"], transferring,
         row["rem"], rates,
     )
-    delivered2 = ops.chunk_scatter_add(
-        row["delivered"], row["chunk_of"], moved, moved != 0.0
+    delivered2 = row["delivered"] + xp.sum(
+        xp.where(oh & (moved != 0.0)[..., :, None], moved[..., :, None], 0.0),
+        axis=-2,
     )
-    fin_any = xp.any(finished)
+    fin_any = xp.where(alive, xp.any(finished), row["fin_any"])
 
     # ---- decision-point detection (pre-feed completion == post-feed:
     # feeding swaps queue files for busy channels, never zeroes both) ----
     files_left = row["qlen"] - row["qptr"] + row["prepend_n"]
-    busy_pc = ops.count_by_chunk(row["chunk_of"], busy2, K)
+    busy_pc = xp.sum(oh & busy2[..., :, None], axis=-2)
     comp_pre = ~row["chunk_done"] & (files_left == 0) & (busy_pc == 0)
+    comp_any_pre = xp.any(comp_pre)
     tick_hit = t2 >= row["next_tick"] - _EPS
-    needs_py = (
-        row["has_prepend"]
-        | (xp.any(comp_pre) & ~row["trivial_complete"])
-        | (tick_hit & ~row["trivial_tick"])
+    kind = row["kind"]
+    known = kind >= KIND_SC  # SC / MC / ProMC: fused on-device
+
+    # capacity / rarity guards: park one sweep so the host handles the
+    # edge. The fused path covers the overwhelmingly common single-chunk
+    # completion; simultaneous multi-chunk completions (empty size
+    # classes at t=0, exact ties) replay through the host — O(1) per
+    # scenario. SC completion opens one concurrency wave (needs free
+    # columns); a ProMC move's resume push needs one free stack slot.
+    n_free = xp.sum(row["chunk_of"] == _NO_CHUNK)
+    freed_cols = xp.sum(xp.where(comp_pre, n_ch_open, 0))
+    multi_comp = xp.sum(comp_pre) > 1
+    sc_short = (
+        (kind == KIND_SC)
+        & comp_any_pre
+        & (n_free + freed_cols < xp.max(row["conc"]))
+    )
+    pp_full = (
+        (kind == KIND_PROMC) & tick_hit & xp.any(row["prepend_n"] >= P)
+    )
+    needs_py = alive & (
+        (comp_any_pre & ~row["trivial_complete"] & ~known)
+        | (tick_hit & ~row["trivial_tick"] & (kind != KIND_PROMC))
+        | (comp_any_pre & multi_comp & ~row["trivial_complete"])
+        | sc_short
+        | pp_full
+    )
+    ok = alive & ~needs_py
+
+    # ---- feed (LIFO resume stack first, then FIFO queue) ----
+    busy3, dead3, rem3, qptr3, qb3, pn3 = kernels.feed_queues(
+        ops, ok, row["chunk_of"], busy2, dead2, rem2, qsizes,
+        row["qoff"], row["qlen"], row["qptr"], row["queue_bytes"],
+        row["fsdt"], row["prepend_sizes"], row["prepend_n"],
     )
 
-    # ---- post (P2-P5), fully vectorizable rows only ----
-    busy3, dead3, rem3, qptr3, qb3 = kernels.feed_queues(
-        ops, ~needs_py, row["chunk_of"], busy2, dead2, rem2, qsizes,
-        row["qoff"], row["qlen"], row["qptr"], row["queue_bytes"],
-        row["fsdt"],
-    )
-    busy_pc3 = ops.count_by_chunk(row["chunk_of"], busy3, K)
+    # ---- chunk completions: mark (handlers run in phase B) ----
+    # post-feed busy count derives from the feed deltas (a fed channel is
+    # exactly a queue/stack pop): no second per-chunk count needed
+    busy_pc3 = busy_pc + (qptr3 - row["qptr"]) + (row["prepend_n"] - pn3)
     completed = (
         ~row["chunk_done"]
-        & ((row["qlen"] - qptr3 + row["prepend_n"]) == 0)
+        & ((row["qlen"] - qptr3 + pn3) == 0)
         & (busy_pc3 == 0)
-        & ~needs_py
+        & ok
     )
     chunk_done2 = row["chunk_done"] | completed
     qb4 = xp.where(completed, 0.0, qb3)
     completed_at2 = xp.where(completed, t2, row["completed_at"])
     comp_any = xp.any(completed)
 
-    do_tick = tick_hit & ~needs_py
+    is_promc = kind == KIND_PROMC
+    streak2 = xp.where(comp_any & is_promc, 0, row["streak"])
+    pf2 = xp.where(comp_any & is_promc, -1, row["pair_fast"])
+    ps2 = xp.where(comp_any & is_promc, -1, row["pair_slow"])
+
+    # ---- tick EMA bookkeeping (the ProMC decision is phase C) ----
+    do_tick = tick_hit & ok
     ema = kernels.tick_ema(
         ops, row["rate_est"], delivered2, row["delivered_at_tick"],
         row["tick_period"],
@@ -157,44 +266,182 @@ def _sweep_row(row: dict, qsizes):
         do_tick, row["tick_period"], 0.0
     )
 
-    done2 = ~needs_py & xp.all(chunk_done2) & (fin_any | comp_any)
+    # ---- scenario completion ----
+    done2 = ok & xp.all(chunk_done2) & (fin_any | comp_any)
     finish_t2 = xp.where(done2, t2, row["finish_t"])
 
-    # ---- commit: skip parked/done rows, freeze errored rows pre-sweep ----
-    upd = runnable & (err == _ERR_NONE)
-
-    def sel(new, old):
-        return xp.where(upd, new, old)
-
+    # ---- commit ----
+    # frozen rows (parked/done/errored) took dt=0 with every transition
+    # mask gated on ``alive``/``ok``, so their arrays pass through
+    # unchanged by construction — no per-array commit masking needed
     out = dict(row)
     out["err"] = xp.where(runnable, err, row["err"])
-    out["t"] = sel(t2, row["t"])
-    out["n_events"] = row["n_events"] + xp.where(upd, 1, 0)
-    out["busy"] = sel(busy3, row["busy"])
-    out["dead"] = sel(dead3, row["dead"])
-    out["rem"] = sel(rem3, row["rem"])
-    out["delivered"] = sel(delivered2, row["delivered"])
-    out["fin_any"] = sel(fin_any, row["fin_any"])
-    out["qptr"] = sel(qptr3, row["qptr"])
-    out["queue_bytes"] = sel(qb4, row["queue_bytes"])
-    out["chunk_done"] = sel(chunk_done2, row["chunk_done"])
-    out["completed_at"] = sel(completed_at2, row["completed_at"])
-    out["rate_est"] = sel(rate_est2, row["rate_est"])
-    out["delivered_at_tick"] = sel(dat2, row["delivered_at_tick"])
-    out["next_tick"] = sel(next_tick2, row["next_tick"])
-    out["finish_t"] = sel(finish_t2, row["finish_t"])
-    out["done"] = row["done"] | (upd & done2)
-    out["stall"] = xp.where(
-        upd & needs_py, _STALL_POST, row["stall"]
-    )
+    out["t"] = t2
+    out["n_events"] = row["n_events"] + xp.where(alive, 1, 0)
+    out["busy"] = busy3
+    out["dead"] = dead3
+    out["rem"] = rem3
+    out["delivered"] = delivered2
+    out["fin_any"] = fin_any
+    out["qptr"] = qptr3
+    out["queue_bytes"] = qb4
+    out["prepend_n"] = pn3
+    out["chunk_done"] = chunk_done2
+    out["completed_at"] = completed_at2
+    out["rate_est"] = rate_est2
+    out["delivered_at_tick"] = dat2
+    out["next_tick"] = next_tick2
+    out["streak"] = streak2
+    out["pair_fast"] = pf2
+    out["pair_slow"] = ps2
+    out["finish_t"] = finish_t2
+    out["done"] = row["done"] | done2
+    out["stall"] = xp.where(needs_py, _STALL_POST, row["stall"])
+    # scratch for phases B-D (zeroed wherever this sweep didn't act)
+    out["_completed"] = completed
+    out["_handler"] = comp_any & known
+    out["_tick"] = do_tick & is_promc
+    out["_moving"] = xp.zeros_like(alive)
     return out
+
+
+def _phase_complete(row: dict, qsizes):
+    """Phase B (runs only on sweeps where some row completed a chunk on a
+    fused controller): the single-completion handler with a dynamic chunk
+    index — SC close/cursor/open or MC/ProMC laggard grants — plus the
+    post-action feed."""
+    ops = jax_ops()
+    xp = ops.xp
+    K = row["chunk_done"].shape[-1]
+    C = row["chunk_of"].shape[-1]
+    kind = row["kind"]
+    completed = row["_completed"]
+    comp_k = xp.argmax(completed)
+    trig = row["_handler"]
+
+    chunk_of_c, busy_c, dead_c, rem_c, cap_c = (
+        row["chunk_of"], row["busy"], row["dead"], row["rem"], row["cap"],
+    )
+    qb_c, qptr_c, pn_c = (
+        row["queue_bytes"], row["qptr"], row["prepend_n"],
+    )
+    cursor_c, nmoves_c = row["sc_cursor"], row["n_moves"]
+
+    # SC: close the finished chunk, cursor past empties, open the next
+    sc_t = trig & (kind == KIND_SC)
+    chunk_of_c, busy_c, dead_c, rem_c, cap_c = controllers.close_chunk(
+        ops, sc_t, comp_k, chunk_of_c, busy_c, dead_c, rem_c, cap_c
+    )
+    cursor_c = controllers.sc_advance_cursor(
+        ops, sc_t, cursor_c, row["sc_order"], row["nfiles"],
+        row["n_chunks"],
+    )
+    open_ok = sc_t & (cursor_c < row["n_chunks"])
+    nxt = row["sc_order"][xp.clip(cursor_c, 0, K - 1)]
+    n_open = xp.where(open_ok, row["conc"][nxt], 0)
+    chunk_of_c, dead_c, cap_c = controllers.open_ranked(
+        ops, n_open, nxt, chunk_of_c, dead_c, cap_c,
+        row["setup_cost"], row["cap_k"],
+    )
+    # MC / ProMC: freed channels to the largest-ETA laggards
+    mc_t = trig & ((kind == KIND_MC) | (kind == KIND_PROMC))
+    bytes_rem, n_ch, eta = _views_row(
+        ops, xp, row, chunk_of_c, busy_c, rem_c, qb_c,
+        row["rate_est"], K,
+    )
+    live = ~row["chunk_done"] & (xp.arange(K) != comp_k) & (bytes_rem > 0)
+    freed = xp.where(mc_t, n_ch[comp_k], 0)
+    grants, first = controllers.laggard_grants(
+        ops, eta, n_ch, live, freed, C
+    )
+    acted = mc_t & (xp.sum(grants) > 0)
+    (
+        chunk_of_c, busy_c, dead_c, rem_c, cap_c, nmoves_c,
+    ) = controllers.apply_grants(
+        ops, acted, comp_k, grants, first, chunk_of_c, busy_c, dead_c,
+        rem_c, cap_c, nmoves_c, row["par"], row["cap_k"],
+        row["setup_cost"],
+    )
+    busy_c, dead_c, rem_c, qptr_c, qb_c, pn_c = kernels.feed_queues(
+        ops, sc_t | acted, chunk_of_c, busy_c, dead_c, rem_c, qsizes,
+        row["qoff"], row["qlen"], qptr_c, qb_c, row["fsdt"],
+        row["prepend_sizes"], pn_c,
+    )
+    return dict(
+        row, chunk_of=chunk_of_c, busy=busy_c, dead=dead_c, rem=rem_c,
+        cap=cap_c, queue_bytes=qb_c, qptr=qptr_c, prepend_n=pn_c,
+        sc_cursor=cursor_c, n_moves=nmoves_c,
+    )
+
+
+def _phase_tick(row: dict):
+    """Phase C (runs only on sweeps where some ProMC row ticked): the
+    streak state machine over the post-handler views; a firing row sets
+    ``_moving`` for phase D."""
+    ops = jax_ops()
+    xp = ops.xp
+    K = row["chunk_done"].shape[-1]
+    pt = row["_tick"]
+    bytes_rem, n_ch, eta = _views_row(
+        ops, xp, row, row["chunk_of"], row["busy"], row["rem"],
+        row["queue_bytes"], row["rate_est"], K,
+    )
+    live = ~row["chunk_done"] & (bytes_rem > 0)
+    streak3, pf3, ps3, move, msrc, mdst = controllers.promc_tick(
+        ops, eta, row["rate_est"], n_ch, live, row["streak"],
+        row["pair_fast"], row["pair_slow"], row["promc_ratio"],
+        row["promc_patience"],
+    )
+    return dict(
+        row,
+        streak=xp.where(pt, streak3, row["streak"]),
+        pair_fast=xp.where(pt, pf3, row["pair_fast"]),
+        pair_slow=xp.where(pt, ps3, row["pair_slow"]),
+        _moving=pt & move,
+        _msrc=xp.where(pt, msrc, 0),
+        _mdst=xp.where(pt, mdst, 0),
+    )
+
+
+def _phase_move(row: dict, qsizes):
+    """Phase D (runs only on sweeps where some ProMC row fired a move):
+    one fast->slow channel move with the LIFO resume push, then feed."""
+    ops = jax_ops()
+    xp = ops.xp
+    moving = row["_moving"]
+    (
+        chunk_of_c, busy_c, dead_c, rem_c, cap_c, qb_c, ps_sizes_c, pn_c,
+        nmoves_c,
+    ) = controllers.move_channel(
+        ops, moving, row["_msrc"], row["_mdst"], row["chunk_of"],
+        row["busy"], row["dead"], row["rem"], row["cap"],
+        row["queue_bytes"], row["prepend_sizes"], row["prepend_n"],
+        row["n_moves"], row["par"], row["cap_k"], row["setup_cost"],
+    )
+    busy_c, dead_c, rem_c, qptr_c, qb_c, pn_c = kernels.feed_queues(
+        ops, moving, chunk_of_c, busy_c, dead_c, rem_c, qsizes,
+        row["qoff"], row["qlen"], row["qptr"], qb_c, row["fsdt"],
+        ps_sizes_c, pn_c,
+    )
+    return dict(
+        row, chunk_of=chunk_of_c, busy=busy_c, dead=dead_c, rem=rem_c,
+        cap=cap_c, queue_bytes=qb_c, qptr=qptr_c, prepend_n=pn_c,
+        prepend_sizes=ps_sizes_c, n_moves=nmoves_c,
+    )
 
 
 @jax.jit
 def _device_rounds(state: dict, qsizes):
     """Advance every runnable scenario to its own next Python decision
-    point (or completion): vmapped sweeps inside lax.while_loop."""
-    sweep = jax.vmap(_sweep_row, in_axes=(0, None))
+    point (or completion): vmapped sweeps inside lax.while_loop. Each
+    sweep is phase A (always) plus controller phases B/C/D gated by
+    batch-level ``lax.cond`` — completions, ProMC ticks, and fired moves
+    are sparse across sweeps, so most iterations pay phase A alone.
+    """
+    phase_a = jax.vmap(_phase_advance, in_axes=(0, None))
+    phase_b = jax.vmap(_phase_complete, in_axes=(0, None))
+    phase_c = jax.vmap(_phase_tick)
+    phase_d = jax.vmap(_phase_move, in_axes=(0, None))
 
     def runnable(st):
         return (
@@ -209,12 +456,30 @@ def _device_rounds(state: dict, qsizes):
         st, it = carry
         n = jnp.sum(runnable(st))
         # run while anything is runnable, under the sweep cap, until half
-        # the round's starting cohort has parked at a Python decision
-        return (n > 0) & (it < _ROUND_CAP) & (2 * n > start_count)
+        # the round's starting cohort has parked at a Python decision or
+        # finished — unless the cohort is already at the minimum pad,
+        # where exiting early cannot shrink the device shape
+        return (
+            (n > 0)
+            & (it < _ROUND_CAP)
+            & ((2 * n > start_count) | (start_count <= _MIN_PAD))
+        )
 
     def body(carry):
         st, it = carry
-        return sweep(st, qsizes), it + 1
+        st = phase_a(st, qsizes)
+        st = lax.cond(
+            jnp.any(st["_handler"]), lambda s: phase_b(s, qsizes),
+            lambda s: s, st,
+        )
+        st = lax.cond(
+            jnp.any(st["_tick"]), phase_c, lambda s: s, st
+        )
+        st = lax.cond(
+            jnp.any(st["_moving"]), lambda s: phase_d(s, qsizes),
+            lambda s: s, st,
+        )
+        return st, it + 1
 
     state, iters = lax.while_loop(cond, body, (state, 0))
     return state, iters
@@ -225,9 +490,9 @@ class JaxFabricSimulation(FabricSimulation):
 
     Host state (the parent's NumPy arrays) stays canonical; each round
     uploads it, lets the device run every scenario to its next decision
-    point, downloads, and replays the parent's Python half for parked
-    rows. Python-side bookkeeping (schedulers, resume queues, views) is
-    inherited unchanged.
+    point (usually: completion), downloads, and replays the parent's
+    Python half for parked rows. Custom-scheduler bookkeeping (callback
+    objects, views) is inherited unchanged.
     """
 
     def __init__(
@@ -245,9 +510,10 @@ class JaxFabricSimulation(FabricSimulation):
 
     def _pad_rows(self) -> int:
         """Row count uploaded to the device: next power of two >= live rows
-        (min 32). Padded rows are born ``done`` and never sweep; bucketing
-        bounds the number of XLA shapes traced as compaction shrinks S."""
-        n = max(32, self.S)
+        (min ``_MIN_PAD``). Padded rows are born ``done`` and never sweep;
+        bucketing bounds the number of XLA shapes traced as compaction
+        shrinks S."""
+        n = max(_MIN_PAD, self.S)
         return 1 << (n - 1).bit_length()
 
     def _padded(self, key: str, arr: np.ndarray, pad: int):
@@ -260,8 +526,9 @@ class JaxFabricSimulation(FabricSimulation):
 
     def _upload(self) -> dict:
         pad = self._pad_rows() - self.S
+        rows = self.S + pad
         state = {}
-        for key in _MUTABLE + _CONST_PY:
+        for key in _MUTABLE:
             if key == "stall":
                 arr = self._stall
             elif key == "err":
@@ -269,9 +536,15 @@ class JaxFabricSimulation(FabricSimulation):
             else:
                 arr = getattr(self, key)
             state[key] = self._padded(key, arr, pad)
+        # per-sweep scratch threaded between the device phases
+        state["_completed"] = jnp.zeros((rows, self.K), dtype=bool)
+        for key in ("_handler", "_tick", "_moving"):
+            state[key] = jnp.zeros(rows, dtype=bool)
+        for key in ("_msrc", "_mdst"):
+            state[key] = jnp.zeros(rows, dtype=jnp.int64)
         # statics are immutable for a given row set: cache on device and
         # rebuild only when compaction (or channel growth) reshapes rows
-        cache_key = (self.S, self.C, pad)
+        cache_key = (self.S, self.C, self.P, pad)
         if getattr(self, "_static_cache_key", None) != cache_key:
             self._static_cache = {
                 key: self._padded(key, getattr(self, key), pad)
@@ -311,6 +584,18 @@ class JaxFabricSimulation(FabricSimulation):
 
         all_rt = list(self.rt)
         self.start()
+        # pre-size the channel axis: moves conserve channels and SC waves
+        # are bounded by maxCC, so this removes mid-run growth stalls for
+        # everything but the rare SC co-scheduling edge (guarded on-device)
+        need = max(
+            (
+                max(getattr(r.scheduler, "max_cc", 1), len(r.chunks))
+                for r in self.rt
+            ),
+            default=1,
+        )
+        while self.C < need:
+            self._grow()
         with enable_x64():
             self._drive()
         return [self._result(r) for r in all_rt]
@@ -321,6 +606,8 @@ class JaxFabricSimulation(FabricSimulation):
         self._stall = np.where(
             self.record_timeline, _STALL_FULL, _STALL_NONE
         ).astype(np.int64)
+        SYNC_STATS["runs"] += 1
+        SYNC_STATS["scenarios"] += self.S
         qsizes_dev = jnp.asarray(self.qsizes)
         while not self.done.all():
             progressed = False
@@ -328,10 +615,12 @@ class JaxFabricSimulation(FabricSimulation):
             if runnable.any():
                 state, iters = _device_rounds(self._upload(), qsizes_dev)
                 self._download(state)
+                SYNC_STATS["rounds"] += 1
                 progressed = int(iters) > 0
             post_rows = ~self.done & (self._stall == _STALL_POST)
             full_rows = ~self.done & (self._stall == _STALL_FULL)
             if post_rows.any():
+                SYNC_STATS["post_row_replays"] += int(post_rows.sum())
                 self._post(post_rows)
                 self._stall[post_rows] = _STALL_NONE
                 progressed = True

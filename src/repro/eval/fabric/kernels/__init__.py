@@ -50,7 +50,7 @@ def waterfill(ops: ArrayOps, caps, pool):
     # last; argmax picks the first valid k
     k = xp.argmax(valid, axis=-1)
     no_valid = ~xp.any(valid, axis=-1)
-    lam = xp.take_along_axis(lam_k, k[..., None], axis=-1)[..., 0]
+    lam = ops.table_lookup(lam_k, k[..., None])[..., 0]
     lam = xp.where(no_valid, caps_sorted[..., -1], lam)
     return xp.minimum(caps, lam[..., None])
 
@@ -154,23 +154,29 @@ def tick_ema(ops: ArrayOps, rate_est, delivered, delivered_at_tick, period):
 
 def feed_queues(
     ops: ArrayOps, enabled, chunk_of, busy, dead, rem, qsizes, qoff, qlen,
-    qptr, queue_bytes, fsdt,
+    qptr, queue_bytes, fsdt, prepend_sizes=None, prepend_n=None,
 ):
-    """Idle open channels pull the next FIFO file of their chunk.
+    """Idle open channels pull the next file of their chunk: resume files
+    off the LIFO prepend stack first, then the FIFO queue.
 
-    Channels of one chunk are interchangeable (same params), and each idle
-    channel takes the file at ``qptr + rank`` where ``rank`` is its order
-    among the chunk's idle channels — byte-for-byte the assignment the
-    scalar feed loop produces. ``enabled`` (...,) gates whole scenarios
-    (rows with queued resume files must feed through the Python path to
-    preserve LIFO resume order).
+    Channels of one chunk are interchangeable (same params). Ranking the
+    chunk's idle channels in column order, the channel of rank ``r`` takes
+    the resume file at stack depth ``prepend_n - 1 - r`` while ``r <
+    prepend_n`` (deque.appendleft/popleft order), and the queued file at
+    ``qptr + r - prepend_n`` afterwards — byte-for-byte the assignment the
+    scalar feed loop produces. ``enabled`` (...,) gates whole scenarios.
+    ``prepend_sizes`` (..., K, P) / ``prepend_n`` (..., K) may be omitted
+    when no resume files can exist (pure-FIFO callers/tests).
 
-    Returns ``(busy, dead, rem, qptr, queue_bytes)``.
+    Returns ``(busy, dead, rem, qptr, queue_bytes, prepend_n)``.
     """
     xp = ops.xp
     K = qptr.shape[-1]
-    if qsizes.shape[0] == 0:  # no files anywhere: nothing can feed
-        return busy, dead, rem, qptr, queue_bytes
+    if prepend_n is None:
+        prepend_n = xp.zeros(qptr.shape, dtype=qptr.dtype)
+    if qsizes.shape[0] == 0 and prepend_sizes is None:
+        # no files anywhere: nothing can feed
+        return busy, dead, rem, qptr, queue_bytes, prepend_n
     open_oh = chunk_of[..., :, None] == xp.arange(K)  # NO_CHUNK matches none
     idle = (chunk_of >= 0) & ~busy & xp.expand_dims(enabled, -1)
     incl = open_oh & idle[..., :, None]
@@ -182,17 +188,46 @@ def feed_queues(
     # chunk-indexed gathers; junk values on unassigned channels are
     # harmless because ``valid`` requires ``idle`` (=> assigned)
     ch_clip = xp.clip(chunk_of, 0, K - 1)
-    qptr_c = xp.take_along_axis(qptr, ch_clip, axis=-1)
-    qlen_c = xp.take_along_axis(qlen, ch_clip, axis=-1)
-    qoff_c = xp.take_along_axis(qoff, ch_clip, axis=-1)
-    fsdt_c = xp.take_along_axis(fsdt, ch_clip, axis=-1)
-    fidx = qptr_c + rank
-    valid = idle & (rank >= 0) & (fidx < qlen_c)
-    flat = xp.clip(qoff_c + fidx, 0, qsizes.shape[0] - 1)
-    sizes = xp.where(valid, xp.take(qsizes, flat), 0.0)
+    qptr_c = ops.table_lookup(qptr, ch_clip)
+    qlen_c = ops.table_lookup(qlen, ch_clip)
+    qoff_c = ops.table_lookup(qoff, ch_clip)
+    fsdt_c = ops.table_lookup(fsdt, ch_clip)
+
+    if prepend_sizes is not None:
+        pn_c = ops.table_lookup(prepend_n, ch_clip)
+        use_pre = idle & (rank >= 0) & (rank < pn_c)
+        P = prepend_sizes.shape[-1]
+        ps_flat = xp.reshape(
+            prepend_sizes, prepend_sizes.shape[:-2] + (K * P,)
+        )
+        pidx = ch_clip * P + xp.clip(pn_c - 1 - rank, 0, P - 1)
+        pre_sz = ops.table_lookup(ps_flat, pidx)
+    else:
+        # pure-FIFO fast path: callers pass None exactly when no resume
+        # files exist anywhere, so skip the stack bookkeeping entirely
+        pn_c = xp.zeros(rank.shape, dtype=qptr.dtype)
+        use_pre = xp.zeros(rank.shape, dtype=bool)
+        pre_sz = xp.zeros(rank.shape, dtype=xp.float64)
+
+    fidx = qptr_c + rank - pn_c
+    valid_fifo = idle & (rank >= pn_c) & (fidx < qlen_c)
+    if qsizes.shape[0] == 0:
+        valid_fifo = valid_fifo & False
+        fifo_sz = xp.zeros(rank.shape, dtype=xp.float64)
+    else:
+        flat = xp.clip(qoff_c + fidx, 0, qsizes.shape[0] - 1)
+        fifo_sz = xp.take(qsizes, flat)
+    valid = use_pre | valid_fifo
+    sizes = xp.where(use_pre, pre_sz, xp.where(valid_fifo, fifo_sz, 0.0))
     busy2 = busy | valid
     rem2 = xp.where(valid, sizes, rem)
     dead2 = dead + xp.where(valid, fsdt_c, 0.0)
-    qptr2 = qptr + ops.count_by_chunk(chunk_of, valid, K)
-    qb2 = ops.chunk_scatter_add(queue_bytes, chunk_of, -sizes, valid)
-    return busy2, dead2, rem2, qptr2, qb2
+    # per-chunk counts/sums reuse the one-hot built for ranking; sizes are
+    # integer-valued doubles, so the summation order is exact either way
+    qptr2 = qptr + xp.sum(open_oh & valid_fifo[..., :, None], axis=-2)
+    pn2 = prepend_n - xp.sum(open_oh & use_pre[..., :, None], axis=-2)
+    qb2 = queue_bytes - xp.sum(
+        xp.where(open_oh & valid[..., :, None], sizes[..., :, None], 0.0),
+        axis=-2,
+    )
+    return busy2, dead2, rem2, qptr2, qb2, pn2

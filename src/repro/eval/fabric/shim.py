@@ -58,6 +58,17 @@ class ArrayOps:
         """
         raise NotImplementedError
 
+    def table_lookup(self, table, idx):
+        """``out[..., c] = table[..., idx[..., c]]`` for small trailing
+        tables; ``idx`` entries must already be clipped to range.
+
+        NumPy uses ``take_along_axis`` (fast native gathers); JAX
+        contracts against a one-hot — XLA's CPU gather lowers to scalar
+        loads and dominates hot-loop profiles, while the one-hot fuses
+        into a vectorized select/reduce.
+        """
+        raise NotImplementedError
+
 
 class NumpyOps(ArrayOps):
     name = "numpy"
@@ -73,6 +84,9 @@ class NumpyOps(ArrayOps):
             # same (scenario, channel) order as the scalar event loop
             np.add.at(out, idx[:-1] + (chunk_idx[idx],), values[idx])
         return out
+
+    def table_lookup(self, table, idx):
+        return np.take_along_axis(table, idx, axis=-1)
 
 
 class JaxOps(ArrayOps):
@@ -93,6 +107,15 @@ class JaxOps(ArrayOps):
             xp.where(onehot, values[..., :, None], 0.0), axis=-2
         )
         return target + delta
+
+    def table_lookup(self, table, idx):
+        xp = self.xp
+        n = table.shape[-1]
+        onehot = idx[..., :, None] == xp.arange(n)
+        return xp.sum(
+            xp.where(onehot, table[..., None, :], table.dtype.type(0)),
+            axis=-1,
+        )
 
 
 def numpy_ops() -> NumpyOps:

@@ -67,6 +67,15 @@ EXTENDED_NETWORKS: Sequence[str] = NETWORKS + (
     testbeds.ASYM_CONTROL_PATH.name,
 )
 
+#: time-varying-capacity variants (step / ramp bandwidth profiles);
+#: crossed with a focused dataset/scheduler slice in ``full_matrix`` —
+#: "network conditions vary over time" is exactly the regime the paper's
+#: adaptive controllers (and their ETA estimates) must absorb.
+TIME_VARYING_NETWORKS: Sequence[str] = (
+    testbeds.STEPPY_BACKBONE.name,
+    testbeds.RAMPY_EVENING.name,
+)
+
 #: datasets of the golden-pinned default/smoke matrices. Pinned for the
 #: same reason as NETWORKS: new generators join ``full_matrix`` via
 #: DATASET_BUILDERS without silently reshaping the snapshotted grids.
@@ -177,8 +186,10 @@ def full_matrix(seed: int = 0) -> List[Scenario]:
     variants) x 8 datasets (core + heavy-tail + small-file swarm) x 5
     schedulers x 2 dataset seeds = 720 scenarios. On top: a maxCC sweep
     {1, 2, 4, 16} of the adaptive schedulers on three contrasting datasets
-    (216) and a chunk-count sweep {1, 2, 3} (vs the default 4) of the tuned
-    schedulers on the new shapes (162), for 1098 total.
+    (216), a chunk-count sweep {1, 2, 3} (vs the default 4) of the tuned
+    schedulers on the new shapes (162), and a time-varying-bandwidth slice
+    (step/ramp capacity profiles x 3 datasets x the tuned schedulers, 18),
+    for 1116 total.
     """
     out: List[Scenario] = []
     for s in (seed, seed + 1):
@@ -208,6 +219,12 @@ def full_matrix(seed: int = 0) -> List[Scenario]:
                             num_chunks=k, seed=seed,
                         )
                     )
+    for net in TIME_VARYING_NETWORKS:
+        for ds in ("mixed", "heavy_tail", "uniform_huge"):
+            for algo in ("sc", "mc", "promc"):
+                out.append(
+                    Scenario(network=net, dataset=ds, algorithm=algo, seed=seed)
+                )
     return out
 
 

@@ -11,8 +11,27 @@ from repro.core.baselines import _StaticOneChunkScheduler
 from repro.core.chunking import partition_files
 from repro.core.simulator import Simulation
 from repro.data.filesets import uniform_files
-from repro.eval.batchsim import BatchSimulation
+from repro.eval.fabric import FabricSimulation as BatchSimulation
 from repro.eval.scenarios import Scenario, build_simulation
+
+
+def test_batchsim_module_is_a_deprecation_shim():
+    """`repro.eval.batchsim` warns on import and still exposes the driver
+    (removal slated for the next PR)."""
+    import importlib
+    import sys
+    import warnings
+
+    sys.modules.pop("repro.eval.batchsim", None)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        mod = importlib.import_module("repro.eval.batchsim")
+    assert any(
+        issubclass(w.category, DeprecationWarning)
+        and "repro.eval.fabric" in str(w.message)
+        for w in caught
+    )
+    assert mod.BatchSimulation is BatchSimulation
 
 # ------------------------------------------------------------------ #
 # waterfill_batch == waterfill (the scalar reference)

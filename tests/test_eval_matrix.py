@@ -19,7 +19,7 @@ from repro.core.schedulers import (
 )
 from repro.core.types import Chunk, ChunkType, FileSpec
 from repro.eval import Scenario, run_matrix
-from repro.eval.batchsim import BatchSimulation
+from repro.eval.fabric import FabricSimulation as BatchSimulation
 from repro.eval.scenarios import build_simulation
 
 
@@ -215,6 +215,62 @@ def test_matrix_run_with_missing_size_classes(algorithm):
         )
         assert ev.total_bytes > 0
         assert ba.throughput == pytest.approx(ev.throughput, rel=1e-9)
+
+
+def test_bandwidth_profile_lookup_and_horizon():
+    """Piecewise-constant capacity: bandwidth_at steps at the breakpoints
+    and next_profile_change exposes the following one (inf at the end)."""
+    net = testbeds.impaired_variant(
+        testbeds.STAMPEDE_COMET, "step-test",
+        bandwidth_steps=((10.0, 0.5), (20.0, 0.8)),
+    )
+    bw = net.bandwidth
+    assert net.bandwidth_at(0.0) == bw
+    assert net.bandwidth_at(9.999) == bw
+    assert net.bandwidth_at(10.0) == 0.5 * bw
+    assert net.bandwidth_at(25.0) == 0.8 * bw
+    assert net.next_profile_change(0.0) == 10.0
+    assert net.next_profile_change(10.0) == 20.0
+    assert net.next_profile_change(20.0) == math.inf
+    # static paths: nominal capacity, no horizon
+    assert testbeds.STAMPEDE_COMET.bandwidth_at(1e9) == bw
+    assert testbeds.STAMPEDE_COMET.next_profile_change(0.0) == math.inf
+
+
+def test_bandwidth_ramp_builds_monotone_step_ladder():
+    net = testbeds.impaired_variant(
+        testbeds.LONI, "ramp-test", bandwidth_ramp=(5.0, 25.0, 0.5, 4)
+    )
+    prof = net.bandwidth_profile
+    assert prof[0] == (0.0, 1.0)
+    assert len(prof) == 5
+    assert prof[-1] == (25.0, 0.5)
+    mults = [m for _, m in prof]
+    assert mults == sorted(mults, reverse=True)
+
+
+@pytest.mark.parametrize("algorithm", ["promc", "mc", "untuned"])
+def test_time_varying_bandwidth_scenarios_agree_across_backends(algorithm):
+    """Step/ramp capacity profiles run through the profile-aware horizon
+    on every backend; multi-channel schedulers (which actually reach the
+    link capacity) lose throughput relative to the static base, while a
+    single window-limited untuned stream is unaffected by design."""
+    sc = Scenario(
+        network=testbeds.STEPPY_BACKBONE.name, dataset="mixed",
+        algorithm=algorithm,
+    )
+    base = Scenario(
+        network=testbeds.STAMPEDE_COMET.name, dataset="mixed",
+        algorithm=algorithm,
+    )
+    ev = run_matrix([sc], backend="event")[0]
+    ba = run_matrix([sc], backend="batch")[0]
+    assert ba.throughput == pytest.approx(ev.throughput, rel=1e-9)
+    ev_base = run_matrix([base], backend="event")[0]
+    if algorithm == "untuned":
+        assert ev.throughput == pytest.approx(ev_base.throughput, rel=1e-6)
+    else:
+        assert ev.throughput < ev_base.throughput
 
 
 def test_matrix_promc_starved_concurrency():

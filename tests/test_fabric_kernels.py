@@ -228,7 +228,7 @@ def test_feed_kernel_matches_scalar_fifo(layout, lens, ptrs):
     qoff = np.array([0, qlen[0], qlen[0] + qlen[1]], dtype=np.int64)
     qsizes = np.arange(1.0, float(qlen.sum()) + 1.0) * 1e6
     C = len(layout)
-    busy2, dead2, rem2, qptr2, qb2 = kernels.feed_queues(
+    busy2, dead2, rem2, qptr2, qb2, _pn2 = kernels.feed_queues(
         _NP, np.array([True]), chunk_of[None], busy[None],
         np.zeros((1, C)), np.zeros((1, C)), qsizes, qoff[None], qlen[None],
         qptr[None], np.zeros((1, K)), np.full((1, K), 0.25),
@@ -248,7 +248,7 @@ def test_feed_kernel_numpy_and_jax_agree():
     from jax.experimental import enable_x64
 
     rng = np.random.RandomState(2)
-    S, C, K = 16, 6, 3
+    S, C, K, P = 16, 6, 3, 4
     chunk_of = rng.randint(-1, K, size=(S, C)).astype(np.int64)
     busy = rng.uniform(size=(S, C)) < 0.4
     qlen = rng.randint(0, 5, size=(S, K)).astype(np.int64)
@@ -260,10 +260,12 @@ def test_feed_kernel_numpy_and_jax_agree():
     qb = rng.uniform(0, 1e10, size=(S, K))
     fsdt = rng.uniform(0, 1, size=(S, K))
     enabled = rng.uniform(size=S) < 0.8
+    pn = rng.randint(0, P + 1, size=(S, K)).astype(np.int64)
+    ps = rng.uniform(1e5, 1e8, size=(S, K, P))
 
     ref = kernels.feed_queues(
         _NP, enabled, chunk_of, busy, dead, rem, qsizes, qoff, qlen, qptr,
-        qb, fsdt,
+        qb, fsdt, ps, pn,
     )
     with enable_x64():
         import jax.numpy as jnp
@@ -273,9 +275,34 @@ def test_feed_kernel_numpy_and_jax_agree():
             jnp.asarray(busy), jnp.asarray(dead), jnp.asarray(rem),
             jnp.asarray(qsizes), jnp.asarray(qoff), jnp.asarray(qlen),
             jnp.asarray(qptr), jnp.asarray(qb), jnp.asarray(fsdt),
+            jnp.asarray(ps), jnp.asarray(pn),
         )
     for r, o in zip(ref, out):
         np.testing.assert_allclose(np.asarray(o), r, rtol=1e-12, atol=0)
+
+
+def test_feed_kernel_lifo_resume_stack_before_fifo():
+    """Idle channels consume resume files newest-first, then fall back to
+    the FIFO queue — deque.appendleft/popleft order."""
+    chunk_of = np.array([[0, 0, 0, -1]], dtype=np.int64)
+    busy = np.zeros((1, 4), dtype=bool)
+    qsizes = np.array([111.0, 222.0])
+    qoff = np.array([[0]], dtype=np.int64)
+    qlen = np.array([[2]], dtype=np.int64)
+    qptr = np.array([[0]], dtype=np.int64)
+    qb = np.array([[999.0]])
+    fsdt = np.array([[0.5]])
+    ps = np.array([[[7.0, 9.0, 0.0, 0.0]]])  # stack: bottom 7, top 9
+    pn = np.array([[2]], dtype=np.int64)
+    busy2, dead2, rem2, qptr2, qb2, pn2 = kernels.feed_queues(
+        _NP, np.array([True]), chunk_of, busy, np.zeros((1, 4)),
+        np.zeros((1, 4)), qsizes, qoff, qlen, qptr, qb, fsdt, ps, pn,
+    )
+    # col0 pops the top (9), col1 the next (7), col2 takes FIFO head (111)
+    np.testing.assert_array_equal(rem2[0, :3], [9.0, 7.0, 111.0])
+    assert busy2[0, :3].all() and not busy2[0, 3]
+    assert pn2[0, 0] == 0 and qptr2[0, 0] == 1
+    np.testing.assert_allclose(qb2[0, 0], 999.0 - 9.0 - 7.0 - 111.0)
 
 
 # ------------------------------------------------------------------ #
