@@ -71,9 +71,15 @@ def find_optimal_parameters(
 def assign_chunk_params(
     chunk: Chunk, network: NetworkSpec, max_cc: int
 ) -> Chunk:
-    """Fill ``chunk.params`` from Algorithm 1 for this network."""
+    """Fill ``chunk.params`` from Algorithm 1 for this network.
+
+    A non-empty chunk can still carry zero bytes (metadata-only /
+    zero-size files, pure dead-time transfers); Algorithm 1 is undefined
+    there, so the average is floored at one byte — the same clamp the
+    simulators' chunk views apply.
+    """
     chunk.params = find_optimal_parameters(
-        avg_file_size=chunk.avg_file_size,
+        avg_file_size=max(chunk.avg_file_size, 1.0),
         bdp=network.bdp,
         buffer_size=network.buffer_size,
         max_cc=max_cc,

@@ -259,7 +259,8 @@ class Simulation:
         from scratch (pure ``netmodel.allocate_rates``), the event horizon
         comes from ``next_event_dt``, and every post-advance transition
         (feed / completion callbacks / tick bookkeeping) happens in a fixed
-        order. Keep the order in sync with eval.batchsim.BatchSimulation.
+        order. Keep the order in sync with
+        ``eval.fabric.driver.FabricSimulation``.
         """
         if not self._started:
             raise RuntimeError("Simulation.step() before start()")

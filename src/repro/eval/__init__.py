@@ -11,7 +11,6 @@ breadth into an executable object:
   - :mod:`fabric`     backend-neutral fluid kernels + the batched drivers
                       (NumPy fast path; JAX jit/vmap device loop; optional
                       Pallas water-fill)
-  - :mod:`batchsim`   compatibility alias for the NumPy driver
   - :mod:`runner`     matrix runner over any backend (event/numpy/jax)
                       with chunked execution + golden JSON snapshots
   - :mod:`difftest`   differential harness asserting backend agreement
@@ -27,7 +26,6 @@ from __future__ import annotations
 import importlib
 
 _EXPORTS = {
-    "BatchSimulation": ".batchsim",
     "FabricSimulation": ".fabric.driver",
     "JaxFabricSimulation": ".fabric.jax_backend",
     "DiffReport": ".difftest",
@@ -38,6 +36,7 @@ _EXPORTS = {
     "default_matrix": ".scenarios",
     "full_matrix": ".scenarios",
     "smoke_matrix": ".scenarios",
+    "timeline_matrix": ".scenarios",
     "run_matrix": ".runner",
     "run_scenario": ".runner",
     "run_simulations": ".runner",

@@ -154,6 +154,12 @@ def main(argv: Optional[List[str]] = None) -> int:
         "--sample-seed", type=int, default=0,
         help="seed for --sample (vary to cover different slices)",
     )
+    ap.add_argument(
+        "--expect-zero-replays", action="store_true",
+        help="after a jax run, fail unless SYNC_STATS shows zero parked-"
+        "row replays (the zero-host-round invariant for built-in "
+        "schedulers; CI gates the fused-jit leg on this)",
+    )
     args = ap.parse_args(argv)
 
     matrix = "smoke" if args.smoke else args.matrix
@@ -168,6 +174,15 @@ def main(argv: Optional[List[str]] = None) -> int:
     backends = ("numpy", "jax") if args.backend == "all" else (
         "numpy" if args.backend == "batch" else args.backend,
     )
+    if args.expect_zero_replays and "jax" not in backends:
+        ap.error(
+            "--expect-zero-replays checks the jax backend's SYNC_STATS; "
+            "run with --backend jax or --backend all"
+        )
+    if args.expect_zero_replays:
+        from .fabric import jax_backend
+
+        jax_backend.reset_sync_stats()
     cache: dict = {}
     for backend in backends:
         reports = diff_backend(
@@ -178,6 +193,20 @@ def main(argv: Optional[List[str]] = None) -> int:
         print(
             f"difftest OK: backend={backend} matrix={matrix} "
             f"({len(scenarios)} scenarios, worst rel_err {worst:.3e})"
+        )
+    if args.expect_zero_replays:
+        stats = jax_backend.SYNC_STATS
+        if stats["post_row_replays"] or stats["replay_rounds"]:
+            print(
+                "FAIL: expected zero parked-row replays, got "
+                f"{stats['post_row_replays']} parked rows across "
+                f"{stats['replay_rounds']} replay rounds"
+            )
+            return 1
+        print(
+            "SYNC_STATS OK: 0 host rounds/scenario "
+            f"(0 parked-row replays across {stats['runs']} runs, "
+            f"{stats['scenarios']} scenario-runs)"
         )
     return 0
 

@@ -11,8 +11,16 @@ column — because future feed/close decisions key on column order.
 ``prepend_sizes``/``prepend_n`` implement the LIFO resume-file stack: a
 busy channel closed mid-transfer re-queues its in-flight remainder
 (conservative restart, matching GridFTP), consumed before the FIFO queue
-cursor moves. Callers guarantee stack capacity (the drivers grow it on
-the host; the device loop parks a row on prospective overflow).
+cursor moves. Callers guarantee stack capacity (the drivers pre-size it
+from the closed-form worst-case bound; the device loop parks a row on
+prospective overflow as an assertion-guarded fallback).
+
+Every close here ends with :func:`repro.eval.fabric.kernels.\
+compact_channels`: the scalar simulator keeps channels in a Python list
+(closes *remove*, opens *append*), and idle-victim selection plus the
+feed ranking key on that order — left-packing the channel axis after a
+close keeps column order equal to list order, so recycled columns can
+never resolve an idle-channel tie differently from the event reference.
 """
 from __future__ import annotations
 
@@ -25,12 +33,17 @@ def _gather(xp, table, idx):
 
 def close_chunk(ops: ArrayOps, trig, k, chunk_of, busy, dead, rem, cap):
     """Close every channel of chunk ``k`` (all idle — the chunk just
-    completed) on ``trig`` rows. ``k`` may be a Python int or a (...,)
-    array. Returns the updated channel arrays."""
+    completed) on ``trig`` rows, then left-pack the survivors. ``k`` may
+    be a Python int or a (...,) array. Returns the updated channel
+    arrays."""
+    from .. import kernels
+
     xp = ops.xp
     k = xp.expand_dims(xp.asarray(k), -1)
     sel = xp.expand_dims(trig, -1) & (chunk_of == k)
-    return (
+    return kernels.compact_channels(
+        ops,
+        trig,
         xp.where(sel, NO_CHUNK, chunk_of),
         xp.where(sel, False, busy),
         xp.where(sel, 0.0, dead),
@@ -135,12 +148,20 @@ def move_channel(
     prepend_sizes = xp.reshape(ps_flat, prepend_sizes.shape)
     prepend_n = prepend_n + xp.where(koh, 1, 0)
 
-    # close the chosen column, then open the lowest free one for dst
-    chunk_of = xp.where(oh, NO_CHUNK, chunk_of)
-    busy = xp.where(oh, False, busy)
-    dead = xp.where(oh, 0.0, dead)
-    rem = xp.where(oh, 0.0, rem)
-    cap = xp.where(oh, 0.0, cap)
+    # close the chosen column (left-packing the survivors, so the open
+    # below appends at the end of the channel list like the scalar loop),
+    # then open the first free column for dst
+    from .. import kernels
+
+    chunk_of, busy, dead, rem, cap = kernels.compact_channels(
+        ops,
+        trig,
+        xp.where(oh, NO_CHUNK, chunk_of),
+        xp.where(oh, False, busy),
+        xp.where(oh, 0.0, dead),
+        xp.where(oh, 0.0, rem),
+        xp.where(oh, 0.0, cap),
+    )
 
     free = chunk_of == NO_CHUNK
     fcol = xp.argmax(free, axis=-1)  # first free; the close guarantees one
@@ -193,12 +214,18 @@ def apply_grants(
     total = xp.sum(grants, axis=-1)
     src = xp.broadcast_to(xp.asarray(src), total.shape)
 
+    from .. import kernels
+
     sel = xp.expand_dims(trig, -1) & (chunk_of == xp.expand_dims(src, -1))
-    busy = xp.where(sel, False, busy)
-    dead = xp.where(sel, 0.0, dead)
-    rem = xp.where(sel, 0.0, rem)
-    cap0 = xp.where(sel, 0.0, cap)
-    closed = xp.where(sel, NO_CHUNK, chunk_of)
+    closed, busy, dead, rem, cap0 = kernels.compact_channels(
+        ops,
+        trig,
+        xp.where(sel, NO_CHUNK, chunk_of),
+        xp.where(sel, False, busy),
+        xp.where(sel, 0.0, dead),
+        xp.where(sel, 0.0, rem),
+        xp.where(sel, 0.0, cap),
+    )
 
     # offsets of each destination's slice in the flattened grant sequence
     big = C * K + 1

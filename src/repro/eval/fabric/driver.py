@@ -23,8 +23,11 @@ scalar callback protocol.
 A sweep is split into :meth:`FabricSimulation._advance` (rates, horizon,
 fluid byte movement) and :meth:`FabricSimulation._post` (feed, completions,
 tick, scenario-done detection); the JAX backend fuses both halves into its
-on-device loop and reuses ``_post`` only for rows it parks (timeline
-recording, custom controllers, capacity-guard edges).
+on-device loop — timeline recording included, via the shared
+``kernels.timeline_push`` ring buffer — and reuses ``_post`` only for
+rows it parks (custom controllers; capacity-guard edges survive as an
+assertion-guarded fallback that the pre-sized axes from
+:meth:`capacity_need` make unreachable for built-in schedulers).
 
 The fidelity contract against ``Simulation.step`` lives in the package
 docstring (:mod:`repro.eval.fabric`); ``eval.difftest`` enforces it on
@@ -82,12 +85,12 @@ def _scheduler_kind(scheduler: Scheduler) -> int:
 
 class _ScenarioRuntime:
     """Python-side (non-vectorizable) per-scenario state: the controller
-    object (for custom schedulers), chunk metadata, and timeline samples."""
+    object (for custom schedulers) and chunk metadata."""
 
     __slots__ = (
         "index", "name", "network", "scheduler", "chunks", "params",
         "trivial_tick", "trivial_complete", "tick_period",
-        "total_bytes", "avg_fs", "predict_cache", "timeline", "archive",
+        "total_bytes", "avg_fs", "predict_cache", "archive",
     )
 
     def __init__(self, index: int, name: str, sim: Simulation):
@@ -109,7 +112,6 @@ class _ScenarioRuntime:
         self.tick_period = sim.tick_period
         self.total_bytes = float(sum(st.queue_bytes for st in sim.states))
         self.avg_fs = [max(c.avg_file_size, 1.0) for c in self.chunks]
-        self.timeline: List[tuple] = []
         #: (chunk, n_channels, total_channels) -> predicted rate; the model
         #: is pure, and allocations revisit the same few tuples constantly
         self.predict_cache: dict = {}
@@ -127,8 +129,16 @@ _ROW_ARRAYS = (
     "prepend_sizes", "kind", "streak", "pair_fast", "pair_slow",
     "promc_ratio", "promc_patience", "sc_cursor", "sc_order", "conc",
     "par", "cap_k", "avg_fs_k", "nfiles", "setup_cost", "n_moves",
-    "prof_t", "prof_mult",
+    "prof_t", "prof_mult", "cap_need",
+    "tl_t", "tl_rate", "tl_len", "tl_stride", "tl_seen", "tl_last_t",
+    "tl_last_rate",
 )
+
+#: default on-device timeline sample budget per scenario (override with
+#: ``timeline_budget=`` or ``REPRO_FABRIC_TIMELINE_BUDGET``). Recording
+#: rows decimate by uniform stride past this, so memory stays fixed no
+#: matter how many events a scenario runs.
+DEFAULT_TIMELINE_BUDGET = 512
 
 
 class FabricSimulation:
@@ -152,10 +162,20 @@ class FabricSimulation:
         *,
         ops: Optional[ArrayOps] = None,
         waterfill_impl: Optional[str] = None,
+        timeline_budget: Optional[int] = None,
     ):
         if names is None:
             names = [f"scenario{i}" for i in range(len(sims))]
         self.ops = ops or numpy_ops()
+        self.timeline_budget = int(
+            timeline_budget
+            if timeline_budget is not None
+            else os.environ.get(
+                "REPRO_FABRIC_TIMELINE_BUDGET", DEFAULT_TIMELINE_BUDGET
+            )
+        )
+        if self.timeline_budget < 2:
+            raise ValueError("timeline_budget must be >= 2")
         impl = waterfill_impl or os.environ.get(
             "REPRO_FABRIC_WATERFILL", "closed"
         )
@@ -299,7 +319,71 @@ class FabricSimulation:
                 self.avg_fs_k[r.index, k] = r.avg_fs[k]
                 self.nfiles[r.index, k] = len(chunk.files)
         self.qsizes = np.asarray(sizes, dtype=np.float64)
+
+        # on-device timeline ring buffer (uniform-stride decimation past
+        # the budget); all-static width 1 when no row records, so batches
+        # without timelines pay one no-op column at most
+        T = self.timeline_budget if self.record_timeline.any() else 1
+        self.tl_t = np.zeros((S, T))
+        self.tl_rate = np.zeros((S, T))
+        self.tl_len = np.zeros(S, dtype=np.int64)
+        self.tl_stride = np.ones(S, dtype=np.int64)
+        self.tl_seen = np.zeros(S, dtype=np.int64)
+        self.tl_last_t = np.zeros(S)
+        self.tl_last_rate = np.zeros(S)
+
+        #: closed-form per-scenario worst case of simultaneously open
+        #: channels (see :meth:`capacity_need`); the JAX backend pre-sizes
+        #: its channel/resume axes from it so capacity-guard parks never
+        #: fire for built-in schedulers
+        self.cap_need = np.array(
+            [self._worst_case_channels(r) for r in self.rt], dtype=np.int64
+        )
         self._started = False
+
+    @staticmethod
+    def _worst_case_channels(r: _ScenarioRuntime) -> int:
+        """Closed-form bound on channels a scenario can hold at once.
+
+        * SC holds one chunk's wave at a time, except when empty-chunk (or
+          exactly tied) completions advance the cursor while earlier waves
+          still run — each such completion co-schedules at most one more
+          chunk, so the bound is the sum of the ``1 + n_empty`` largest
+          per-chunk concurrencies.
+        * MC / ProMC open ``max(maxCC, n_nonempty)`` channels up front
+          (every non-empty chunk gets at least one) and every later
+          transition (laggard grants, ProMC moves) conserves the count.
+        * Trivial baselines only act at t=0 (bounded by the per-chunk
+          concurrency sum); custom schedulers keep the host-growth path.
+        """
+        kind = _scheduler_kind(r.scheduler)
+        conc = sorted(
+            (int(c.params.concurrency) for c in r.chunks if len(c.files)),
+            reverse=True,
+        )
+        n_empty = len(r.chunks) - len(conc)
+        max_cc = int(getattr(r.scheduler, "max_cc", 1))
+        if kind == KIND_SC:
+            return max(1, sum(conc[: 1 + n_empty]))
+        if kind in (KIND_MC, KIND_PROMC):
+            return max(1, max_cc, len(conc))
+        return max(1, sum(conc))
+
+    def capacity_need(self) -> tuple:
+        """Batch-wide worst-case ``(channels, resume-stack)`` capacities.
+
+        Valid once :meth:`start` ran (initial actions may already hold
+        the per-row bound's worth of channels; custom schedulers can
+        exceed the closed form, so the observed open count joins the
+        max). A chunk's resume-stack depth never exceeds its channel
+        count — a push closes a busy channel and a regained channel pops
+        the stack before the queue — so the stack bound is the channel
+        bound plus one slot of headroom for the device loop's
+        prospective-overflow guard.
+        """
+        open_now = (self.chunk_of != _NO_CHUNK).sum(axis=1)
+        need_c = int(np.maximum(self.cap_need, open_now).max(initial=1))
+        return need_c, need_c + 1
 
     # ------------------------------------------------------------------ #
     # water-fill dispatch
@@ -379,7 +463,17 @@ class FabricSimulation:
             self.rem[s, c] = 0.0
             self.cap[s, c] = 0.0
             closed.append(r.params[chunk])
+        if closed:
+            self._pack_row(s)
         return closed
+
+    def _pack_row(self, s: int) -> None:
+        """Left-pack row ``s``'s channel axis after a close, keeping column
+        order equal to the event simulator's channel-list order (closes
+        remove, opens append) — see ``kernels.compact_channels``."""
+        order = np.argsort(self.chunk_of[s] == _NO_CHUNK, kind="stable")
+        for arr in (self.chunk_of, self.busy, self.dead, self.rem, self.cap):
+            arr[s] = arr[s][order]
 
     def _apply(self, r: _ScenarioRuntime, actions) -> None:
         for act in actions:
@@ -599,9 +693,16 @@ class FabricSimulation:
         )
         rec = act & self.record_timeline
         if rec.any():
-            agg = rates.sum(axis=1)
-            for s in np.flatnonzero(rec):
-                self.rt[s].timeline.append((float(self.t[s]), float(agg[s])))
+            # on-device-shaped ring buffer: the same kernel the JAX loop
+            # runs, so numpy and jax record bit-identically
+            (
+                self.tl_t, self.tl_rate, self.tl_len, self.tl_stride,
+                self.tl_seen, self.tl_last_t, self.tl_last_rate,
+            ) = kernels.timeline_push(
+                self.ops, rec, self.t, rates.sum(axis=1), self.tl_t,
+                self.tl_rate, self.tl_len, self.tl_stride, self.tl_seen,
+                self.tl_last_t, self.tl_last_rate,
+            )
 
         dt = kernels.event_horizon(
             self.ops,
@@ -871,6 +972,7 @@ class FabricSimulation:
                     self.completed_at[s].copy(),
                     self.delivered[s].copy(),
                     int(self.n_moves[s]),
+                    self._timeline(s),
                 )
         for name in self._row_arrays():
             setattr(self, name, getattr(self, name)[alive])
@@ -901,9 +1003,21 @@ class FabricSimulation:
             self._maybe_compact()
         return [self._result(r) for r in all_rt]
 
+    def _timeline(self, s: int) -> List[tuple]:
+        """Finalized (t, rate) samples of row ``s`` (empty when the
+        scenario does not record)."""
+        return kernels.timeline_samples(
+            self.tl_t[s], self.tl_rate[s], self.tl_len[s],
+            self.tl_stride[s], self.tl_seen[s], self.tl_last_t[s],
+            self.tl_last_rate[s],
+        )
+
     def _result(self, r: _ScenarioRuntime) -> SimResult:
         if r.archive is not None:
-            finish_t, n_events, completed_at, delivered, n_moves = r.archive
+            (
+                finish_t, n_events, completed_at, delivered, n_moves,
+                timeline,
+            ) = r.archive
         else:
             s = r.index
             finish_t = float(self.finish_t[s])
@@ -911,6 +1025,7 @@ class FabricSimulation:
             completed_at = self.completed_at[s]
             delivered = self.delivered[s]
             n_moves = int(self.n_moves[s])
+            timeline = self._timeline(s)
         total_time = max(finish_t, _EPS)
         return SimResult(
             network=r.network.name,
@@ -926,7 +1041,7 @@ class FabricSimulation:
                 c.name: float(delivered[k])
                 for k, c in enumerate(r.chunks)
             },
-            timeline=r.timeline,
+            timeline=timeline,
             n_events=n_events,
             n_moves=n_moves,
         )

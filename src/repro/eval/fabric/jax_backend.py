@@ -10,25 +10,32 @@ masked channel Open/Close/Move transitions, LIFO resume stack) — is
 baseline scenarios therefore never leave the device: the per-scenario
 host-sync count is O(1) instead of O(ticks).
 
-A scenario *parks* (``stall``) only when its next transition genuinely
-needs Python:
+For every *built-in* scheduler the loop is zero-host-round: timeline
+recording streams into an on-device ring buffer (the
+``kernels.timeline_push`` uniform-stride decimator, bit-identical to the
+NumPy driver's), simultaneous multi-chunk completions drain through an
+unrolled on-device handler loop, and the channel / resume-stack axes are
+pre-sized from the driver's closed-form worst-case bound
+(:meth:`FabricSimulation.capacity_need`), so the old capacity-guard park
+classes cannot fire. A scenario *parks* (``stall``) only when its next
+transition genuinely needs Python:
 
-  * timeline-recording rows (host-side (t, rate) sample appends) park
-    permanently and advance through the NumPy driver's ``step``;
   * custom Scheduler subclasses (anything that is not exactly one of the
     three paper controllers or a no-op baseline) park at their callback
     events, exactly like the pre-fusion design;
-  * rare capacity-guard edges — an SC open wave that might not fit the
-    device's channel axis, or a ProMC move whose resume push might
-    overflow the on-device prepend stack — park for one sweep so the
-    host can grow the arrays.
+  * the capacity guards (an SC open wave exceeding the pre-sized channel
+    axis, a resume push into a full prepend stack) remain compiled in as
+    an assertion-guarded fallback — unreachable for built-in schedulers,
+    but a custom subclass that defeats the closed-form bound degrades to
+    a one-sweep host replay instead of corrupting device state.
 
 The host then replays exactly the NumPy driver's transition half
-(:meth:`FabricSimulation._post` / ``step``) for the parked rows and
-re-enters the device loop. Scenarios are independent — their clocks may
-drift arbitrarily — so this interleaving produces the same per-scenario
-event sequence as the synchronized NumPy sweeps; ``eval.difftest`` holds
-all backends to the event simulator within the 2% bar.
+(:meth:`FabricSimulation._post`) for the parked rows and re-enters the
+device loop. Scenarios are independent — their clocks may drift
+arbitrarily — so this interleaving produces the same per-scenario event
+sequence as the synchronized NumPy sweeps; ``eval.difftest`` holds all
+backends to the event simulator within the 2% bar, and ``SYNC_STATS``
+proves the zero-replay property on every run.
 
 Numerics run in float64 via the scoped ``jax.experimental.enable_x64``
 context (never the global flag: the rest of the repo traces in f32).
@@ -56,7 +63,7 @@ from .driver import (
 from .shim import jax_ops
 
 _ERR_NONE, _ERR_MAXTIME, _ERR_STRANDED = 0, 1, 2
-_STALL_NONE, _STALL_POST, _STALL_FULL = 0, 1, 2
+_STALL_NONE, _STALL_POST = 0, 1
 
 #: cap on device sweeps per while_loop entry: parked scenarios wait for
 #: the loop to exit before their Python decision runs, so unbounded entries
@@ -76,8 +83,19 @@ _MIN_PAD = 8
 
 #: host-sync telemetry, accumulated across runs (reset with
 #: :func:`reset_sync_stats`); the eval-matrix bench derives its
-#: device-syncs-per-scenario figure from this.
-SYNC_STATS = {"rounds": 0, "post_row_replays": 0, "scenarios": 0, "runs": 0}
+#: device-syncs-per-scenario figure from this. ``rounds`` counts device
+#: while_loop entries (compaction/straggler re-entries included);
+#: ``replay_rounds`` counts only rounds that ended with the host
+#: replaying ``_post`` for parked rows, and ``post_row_replays`` the
+#: parked rows themselves — both exactly 0 for built-in schedulers, the
+#: zero-host-round invariant CI gates on.
+SYNC_STATS = {
+    "rounds": 0,
+    "replay_rounds": 0,
+    "post_row_replays": 0,
+    "scenarios": 0,
+    "runs": 0,
+}
 
 
 def reset_sync_stats() -> None:
@@ -92,6 +110,8 @@ _MUTABLE = (
     "rate_est", "queue_bytes", "qptr", "finish_t", "fin_any", "stall",
     "err", "chunk_of", "cap", "prepend_n", "prepend_sizes", "streak",
     "pair_fast", "pair_slow", "sc_cursor", "n_moves",
+    "tl_t", "tl_rate", "tl_len", "tl_stride", "tl_seen", "tl_last_t",
+    "tl_last_rate",
 )
 #: read-only inputs fixed for a batch's lifetime — device-cached, rebuilt
 #: only when compaction changes the row set
@@ -100,7 +120,7 @@ _CONST_STATIC = (
     "trivial_tick", "trivial_complete", "qoff", "qlen", "fsdt", "kind",
     "sc_order", "conc", "par", "cap_k", "avg_fs_k", "nfiles",
     "setup_cost", "promc_ratio", "promc_patience", "prof_t", "prof_mult",
-    "n_chunks",
+    "n_chunks", "record_timeline", "cap_need",
 )
 
 
@@ -125,12 +145,23 @@ def _views_row(ops, xp, row, chunk_of, busy, rem, queue_bytes, rate_est, K):
 #: (zero-initialized on upload so the while_loop carry keeps its shape)
 _SCRATCH = ("_completed", "_handler", "_tick", "_moving", "_msrc", "_mdst")
 
+#: the on-device timeline ring-buffer state threaded through phase A
+_TIMELINE = (
+    "tl_t", "tl_rate", "tl_len", "tl_stride", "tl_seen", "tl_last_t",
+    "tl_last_rate",
+)
 
-def _phase_advance(row: dict, qsizes):
+
+def _phase_advance(row: dict, qsizes, with_stack: bool = True):
     """Phase A of one sweep (always runs): physics advance, park
     detection, queue feed, completion marking, tick EMA bookkeeping, and
     scenario-done detection — everything except the (rarer) controller
     handlers, which the batch-level driver gates behind ``lax.cond``.
+
+    ``with_stack=False`` is the pure-FIFO feed variant the driver picks
+    (batch-level ``lax.cond``) on sweeps where no resume file exists
+    anywhere — the common case — skipping the resume-stack gathers whose
+    cost scales with the pre-sized stack depth P.
     """
     ops = jax_ops()
     xp = ops.xp
@@ -174,6 +205,17 @@ def _phase_advance(row: dict, qsizes):
     rates = kernels.waterfill(
         ops, xp.where(transferring, row["cap"], 0.0), pool
     )
+    # ---- timeline ring buffer (pre-advance t, this sweep's rates) ----
+    tl = {k: row[k] for k in _TIMELINE}
+    if row["tl_t"].shape[-1] > 1:  # width-1 buffers mean "no row records"
+        (
+            tl["tl_t"], tl["tl_rate"], tl["tl_len"], tl["tl_stride"],
+            tl["tl_seen"], tl["tl_last_t"], tl["tl_last_rate"],
+        ) = kernels.timeline_push(
+            ops, alive & row["record_timeline"], row["t"], xp.sum(rates),
+            row["tl_t"], row["tl_rate"], row["tl_len"], row["tl_stride"],
+            row["tl_seen"], row["tl_last_t"], row["tl_last_rate"],
+        )
     dt = kernels.event_horizon(
         ops,
         xp.minimum(row["next_tick"] - row["t"], next_prof - row["t"]),
@@ -201,19 +243,29 @@ def _phase_advance(row: dict, qsizes):
     kind = row["kind"]
     known = kind >= KIND_SC  # SC / MC / ProMC: fused on-device
 
-    # capacity / rarity guards: park one sweep so the host handles the
-    # edge. The fused path covers the overwhelmingly common single-chunk
-    # completion; simultaneous multi-chunk completions (empty size
-    # classes at t=0, exact ties) replay through the host — O(1) per
-    # scenario. SC completion opens one concurrency wave (needs free
-    # columns); a ProMC move's resume push needs one free stack slot.
+    # Only *custom* scheduler subclasses still need Python: their
+    # callbacks run through the scalar protocol on the host. Built-in
+    # rows never park — multi-chunk same-sweep completions drain through
+    # the on-device phase-B loop, and the channel / resume-stack axes
+    # are pre-sized from the closed-form worst-case bound, so the
+    # capacity guards below can never fire for them (``SYNC_STATS``/CI
+    # gate on exactly that). The guards stay as defense in depth should
+    # the bound ever be wrong: ``sc_short`` checks the *actual* free
+    # columns against the next SC wave (single-wave conservative — the
+    # static ``cap_need`` term covers the multi-wave drain) and
+    # ``pp_full`` the *actual* stack depth, each degrading to a
+    # one-sweep host replay (with growth) instead of corrupting device
+    # state.
+    C = row["chunk_of"].shape[-1]
     n_free = xp.sum(row["chunk_of"] == _NO_CHUNK)
     freed_cols = xp.sum(xp.where(comp_pre, n_ch_open, 0))
-    multi_comp = xp.sum(comp_pre) > 1
     sc_short = (
         (kind == KIND_SC)
         & comp_any_pre
-        & (n_free + freed_cols < xp.max(row["conc"]))
+        & (
+            (row["cap_need"] > C)
+            | (n_free + freed_cols < xp.max(row["conc"]))
+        )
     )
     pp_full = (
         (kind == KIND_PROMC) & tick_hit & xp.any(row["prepend_n"] >= P)
@@ -221,7 +273,6 @@ def _phase_advance(row: dict, qsizes):
     needs_py = alive & (
         (comp_any_pre & ~row["trivial_complete"] & ~known)
         | (tick_hit & ~row["trivial_tick"] & (kind != KIND_PROMC))
-        | (comp_any_pre & multi_comp & ~row["trivial_complete"])
         | sc_short
         | pp_full
     )
@@ -231,7 +282,8 @@ def _phase_advance(row: dict, qsizes):
     busy3, dead3, rem3, qptr3, qb3, pn3 = kernels.feed_queues(
         ops, ok, row["chunk_of"], busy2, dead2, rem2, qsizes,
         row["qoff"], row["qlen"], row["qptr"], row["queue_bytes"],
-        row["fsdt"], row["prepend_sizes"], row["prepend_n"],
+        row["fsdt"], row["prepend_sizes"] if with_stack else None,
+        row["prepend_n"],
     )
 
     # ---- chunk completions: mark (handlers run in phase B) ----
@@ -297,6 +349,7 @@ def _phase_advance(row: dict, qsizes):
     out["finish_t"] = finish_t2
     out["done"] = row["done"] | done2
     out["stall"] = xp.where(needs_py, _STALL_POST, row["stall"])
+    out.update(tl)
     # scratch for phases B-D (zeroed wherever this sweep didn't act)
     out["_completed"] = completed
     out["_handler"] = comp_any & known
@@ -306,18 +359,26 @@ def _phase_advance(row: dict, qsizes):
 
 
 def _phase_complete(row: dict, qsizes):
-    """Phase B (runs only on sweeps where some row completed a chunk on a
-    fused controller): the single-completion handler with a dynamic chunk
-    index — SC close/cursor/open or MC/ProMC laggard grants — plus the
-    post-action feed."""
+    """Phase B, one drain step (runs only on sweeps where some row
+    completed a chunk on a fused controller): the completion handler —
+    SC close/cursor/open or MC/ProMC laggard grants — plus the
+    post-action feed, for the *lowest-index* unhandled completed chunk
+    of each row (``argmax`` of the remaining mask), which the handler
+    then clears. The batch driver iterates this step in a ``lax.
+    while_loop`` until every row's completions drain, mirroring the host
+    ``_complete_ctrl``'s ascending ``for k in range(K)`` per row — so
+    simultaneous multi-chunk completions (empty size classes at t=0,
+    exact ties) no longer need a host replay, the common
+    single-completion sweep pays one drain iteration, and only one
+    handler body is ever compiled."""
     ops = jax_ops()
     xp = ops.xp
     K = row["chunk_done"].shape[-1]
     C = row["chunk_of"].shape[-1]
     kind = row["kind"]
-    completed = row["_completed"]
-    comp_k = xp.argmax(completed)
-    trig = row["_handler"]
+    remaining = row["_completed"] & xp.expand_dims(row["_handler"], -1)
+    trig = xp.any(remaining, axis=-1)
+    k = xp.argmax(remaining, axis=-1)
 
     chunk_of_c, busy_c, dead_c, rem_c, cap_c = (
         row["chunk_of"], row["busy"], row["dead"], row["rem"], row["cap"],
@@ -325,15 +386,15 @@ def _phase_complete(row: dict, qsizes):
     qb_c, qptr_c, pn_c = (
         row["queue_bytes"], row["qptr"], row["prepend_n"],
     )
-    cursor_c, nmoves_c = row["sc_cursor"], row["n_moves"]
+    nmoves_c = row["n_moves"]
 
     # SC: close the finished chunk, cursor past empties, open the next
     sc_t = trig & (kind == KIND_SC)
     chunk_of_c, busy_c, dead_c, rem_c, cap_c = controllers.close_chunk(
-        ops, sc_t, comp_k, chunk_of_c, busy_c, dead_c, rem_c, cap_c
+        ops, sc_t, k, chunk_of_c, busy_c, dead_c, rem_c, cap_c
     )
     cursor_c = controllers.sc_advance_cursor(
-        ops, sc_t, cursor_c, row["sc_order"], row["nfiles"],
+        ops, sc_t, row["sc_cursor"], row["sc_order"], row["nfiles"],
         row["n_chunks"],
     )
     open_ok = sc_t & (cursor_c < row["n_chunks"])
@@ -349,8 +410,8 @@ def _phase_complete(row: dict, qsizes):
         ops, xp, row, chunk_of_c, busy_c, rem_c, qb_c,
         row["rate_est"], K,
     )
-    live = ~row["chunk_done"] & (xp.arange(K) != comp_k) & (bytes_rem > 0)
-    freed = xp.where(mc_t, n_ch[comp_k], 0)
+    live = ~row["chunk_done"] & (xp.arange(K) != k) & (bytes_rem > 0)
+    freed = xp.where(mc_t, n_ch[..., k], 0)
     grants, first = controllers.laggard_grants(
         ops, eta, n_ch, live, freed, C
     )
@@ -358,7 +419,7 @@ def _phase_complete(row: dict, qsizes):
     (
         chunk_of_c, busy_c, dead_c, rem_c, cap_c, nmoves_c,
     ) = controllers.apply_grants(
-        ops, acted, comp_k, grants, first, chunk_of_c, busy_c, dead_c,
+        ops, acted, k, grants, first, chunk_of_c, busy_c, dead_c,
         rem_c, cap_c, nmoves_c, row["par"], row["cap_k"],
         row["setup_cost"],
     )
@@ -367,10 +428,15 @@ def _phase_complete(row: dict, qsizes):
         row["qoff"], row["qlen"], qptr_c, qb_c, row["fsdt"],
         row["prepend_sizes"], pn_c,
     )
+    # the handled chunk leaves the remaining-completions mask, so the
+    # batch drain loop terminates after the deepest row's count
+    cleared = row["_completed"] & ~(
+        (xp.arange(K) == xp.expand_dims(k, -1)) & xp.expand_dims(trig, -1)
+    )
     return dict(
         row, chunk_of=chunk_of_c, busy=busy_c, dead=dead_c, rem=rem_c,
         cap=cap_c, queue_bytes=qb_c, qptr=qptr_c, prepend_n=pn_c,
-        sc_cursor=cursor_c, n_moves=nmoves_c,
+        sc_cursor=cursor_c, n_moves=nmoves_c, _completed=cleared,
     )
 
 
@@ -438,7 +504,13 @@ def _device_rounds(state: dict, qsizes):
     batch-level ``lax.cond`` — completions, ProMC ticks, and fired moves
     are sparse across sweeps, so most iterations pay phase A alone.
     """
+    import functools
+
     phase_a = jax.vmap(_phase_advance, in_axes=(0, None))
+    phase_a_fifo = jax.vmap(
+        functools.partial(_phase_advance, with_stack=False),
+        in_axes=(0, None),
+    )
     phase_b = jax.vmap(_phase_complete, in_axes=(0, None))
     phase_c = jax.vmap(_phase_tick)
     phase_d = jax.vmap(_phase_move, in_axes=(0, None))
@@ -467,10 +539,23 @@ def _device_rounds(state: dict, qsizes):
 
     def body(carry):
         st, it = carry
-        st = phase_a(st, qsizes)
+        # resume files are rare: feed through the pure-FIFO phase-A
+        # variant unless some row's stack holds one
         st = lax.cond(
-            jnp.any(st["_handler"]), lambda s: phase_b(s, qsizes),
-            lambda s: s, st,
+            jnp.any(st["prepend_n"] > 0),
+            lambda s: phase_a(s, qsizes),
+            lambda s: phase_a_fifo(s, qsizes),
+            st,
+        )
+        # drain completed chunks: each iteration handles every row's
+        # lowest-index remaining completion (ascending k per row, the
+        # host _complete_ctrl order) and clears it, so the loop runs
+        # exactly as deep as the worst row's completion count — zero
+        # iterations on the common no-completion sweep
+        st = lax.while_loop(
+            lambda s: jnp.any(s["_completed"] & s["_handler"][:, None]),
+            lambda s: phase_b(s, qsizes),
+            st,
         )
         st = lax.cond(
             jnp.any(st["_tick"]), phase_c, lambda s: s, st
@@ -584,28 +669,21 @@ class JaxFabricSimulation(FabricSimulation):
 
         all_rt = list(self.rt)
         self.start()
-        # pre-size the channel axis: moves conserve channels and SC waves
-        # are bounded by maxCC, so this removes mid-run growth stalls for
-        # everything but the rare SC co-scheduling edge (guarded on-device)
-        need = max(
-            (
-                max(getattr(r.scheduler, "max_cc", 1), len(r.chunks))
-                for r in self.rt
-            ),
-            default=1,
-        )
-        while self.C < need:
+        # pre-size the channel and resume-stack axes from the closed-form
+        # worst-case bound: every built-in scheduler then fits the device
+        # shape for its whole run, so the capacity-guard park classes
+        # (SC open waves, resume-stack overflow) can never fire
+        need_c, need_p = self.capacity_need()
+        while self.C < need_c:
             self._grow()
+        while self.P < need_p:
+            self._grow_prepend()
         with enable_x64():
             self._drive()
         return [self._result(r) for r in all_rt]
 
     def _drive(self) -> None:
-        # timeline-recording rows park permanently: their (t, rate) samples
-        # are host-side appends, so they advance through the NumPy path
-        self._stall = np.where(
-            self.record_timeline, _STALL_FULL, _STALL_NONE
-        ).astype(np.int64)
+        self._stall = np.zeros(self.S, dtype=np.int64)
         SYNC_STATS["runs"] += 1
         SYNC_STATS["scenarios"] += self.S
         qsizes_dev = jnp.asarray(self.qsizes)
@@ -618,14 +696,13 @@ class JaxFabricSimulation(FabricSimulation):
                 SYNC_STATS["rounds"] += 1
                 progressed = int(iters) > 0
             post_rows = ~self.done & (self._stall == _STALL_POST)
-            full_rows = ~self.done & (self._stall == _STALL_FULL)
             if post_rows.any():
+                # custom-scheduler callbacks (or a capacity guard a custom
+                # subclass defeated): replay the NumPy transition half
+                SYNC_STATS["replay_rounds"] += 1
                 SYNC_STATS["post_row_replays"] += int(post_rows.sum())
                 self._post(post_rows)
                 self._stall[post_rows] = _STALL_NONE
-                progressed = True
-            if full_rows.any():
-                self.step(full_rows)
                 progressed = True
             if not progressed:
                 raise RuntimeError(

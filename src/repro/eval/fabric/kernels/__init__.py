@@ -13,7 +13,7 @@ Nothing here may import from ``repro.core`` — ``core.netmodel`` re-exports
 """
 from __future__ import annotations
 
-from ..shim import ArrayOps, numpy_ops
+from ..shim import NO_CHUNK, ArrayOps, numpy_ops
 
 _EPS = 1e-12
 
@@ -152,6 +152,122 @@ def tick_ema(ops: ArrayOps, rate_est, delivered, delivered_at_tick, period):
     return xp.where(rate_est == 0.0, inst, 0.5 * rate_est + 0.5 * inst)
 
 
+def compact_channels(ops: ArrayOps, trig, chunk_of, busy, dead, rem, cap):
+    """Left-pack the channel axis: open channels shift to the lowest
+    columns *preserving their relative order*, freed columns collect at
+    the tail (empty state). Applied after every close so that column
+    order stays the event simulator's channel-*list* order — the scalar
+    loop removes closed channels from its list and appends opens at the
+    end, and both the feed ranking and idle-victim selection key on that
+    order. ``trig`` (...,) gates rows (others pass through untouched).
+
+    Returns ``(chunk_of, busy, dead, rem, cap)``.
+    """
+    xp = ops.xp
+    C = chunk_of.shape[-1]
+    is_open = chunk_of != NO_CHUNK
+    # destination of each open column = its rank among open columns
+    dest = xp.cumsum(is_open, axis=-1) - 1
+    # (..., C_src, C_dst) one-hot routing: source c lands at dest[c]
+    route = (
+        is_open[..., :, None]
+        & (dest[..., :, None] == xp.arange(C))
+        & xp.expand_dims(trig, -1)[..., :, None]
+    )
+
+    def pack(arr, empty):
+        if arr.dtype == bool:
+            out = xp.any(route & arr[..., :, None], axis=-2)
+        else:
+            packed = xp.sum(
+                xp.where(route, arr[..., :, None], arr.dtype.type(0)),
+                axis=-2,
+            )
+            filled = xp.any(route, axis=-2)
+            out = xp.where(filled, packed, arr.dtype.type(empty))
+        return xp.where(xp.expand_dims(trig, -1), out, arr)
+
+    return (
+        pack(chunk_of, NO_CHUNK),
+        pack(busy, False),
+        pack(dead, 0.0),
+        pack(rem, 0.0),
+        pack(cap, 0.0),
+    )
+
+
+def timeline_push(
+    ops: ArrayOps, rec, t, rate, buf_t, buf_r, length, stride, seen,
+    last_t, last_r,
+):
+    """Streaming append into the on-device timeline ring buffer with
+    uniform-stride decimation.
+
+    The buffer holds every candidate sample whose index is a multiple of
+    ``stride`` (so it is always a uniform-stride decimation of the full
+    timeline, first sample included). When a store would overflow the
+    fixed budget ``T = buf_t.shape[-1]``, the buffer is compacted in
+    place — keep every other stored sample — and the stride doubles, so
+    the budget amortizes over arbitrarily long runs. ``rec`` (...,)
+    gates which rows record this sweep; ``seen`` counts candidates so
+    far; ``last_t``/``last_r`` always track the newest candidate (the
+    host finalize, :func:`timeline_samples`, re-attaches the final
+    sample when decimation dropped it).
+
+    Pure selects and integer bookkeeping — no float arithmetic — so the
+    NumPy and JAX instantiations record bit-identically given the same
+    sample stream. Returns the seven updated arrays in argument order.
+    """
+    xp = ops.xp
+    T = buf_t.shape[-1]
+    stride_safe = xp.maximum(stride, 1)  # padded device rows carry 0
+    want = rec & (seen % stride_safe == 0)
+    full = want & (length >= T)
+    # stride-2 compaction: storage position j keeps old position 2j
+    half = (T + 1) // 2
+    comp_t = xp.concatenate(
+        [buf_t[..., 0::2], xp.zeros_like(buf_t[..., : T - half])], axis=-1
+    )
+    comp_r = xp.concatenate(
+        [buf_r[..., 0::2], xp.zeros_like(buf_r[..., : T - half])], axis=-1
+    )
+    full_e = xp.expand_dims(full, -1)
+    buf_t = xp.where(full_e, comp_t, buf_t)
+    buf_r = xp.where(full_e, comp_r, buf_r)
+    length = xp.where(full, (length + 1) // 2, length)
+    stride = xp.where(full, stride_safe * 2, stride)
+    # re-check under the (possibly doubled) stride
+    store = rec & (seen % xp.maximum(stride, 1) == 0) & (length < T)
+    at = xp.arange(T) == xp.expand_dims(length, -1)
+    store_e = xp.expand_dims(store, -1)
+    buf_t = xp.where(store_e & at, xp.expand_dims(t, -1), buf_t)
+    buf_r = xp.where(store_e & at, xp.expand_dims(rate, -1), buf_r)
+    length = length + xp.where(store, 1, 0)
+    seen = seen + xp.where(rec, 1, 0)
+    last_t = xp.where(rec, t, last_t)
+    last_r = xp.where(rec, rate, last_r)
+    return buf_t, buf_r, length, stride, seen, last_t, last_r
+
+
+def timeline_samples(buf_t, buf_r, length, stride, seen, last_t, last_r):
+    """Finalize one scenario's recorded timeline (host side, 1-D rows).
+
+    Returns the stored ``(t, rate)`` samples plus the *last* candidate
+    sample when decimation dropped it (appended while the budget allows,
+    else replacing the final stored slot) — so first and last samples
+    are always preserved and the result never exceeds the budget.
+    """
+    n, s, seen = int(length), max(int(stride), 1), int(seen)
+    out = [(float(buf_t[j]), float(buf_r[j])) for j in range(n)]
+    if seen > 0 and (seen - 1) % s != 0:
+        final = (float(last_t), float(last_r))
+        if n < buf_t.shape[-1]:
+            out.append(final)
+        else:
+            out[-1] = final
+    return out
+
+
 def feed_queues(
     ops: ArrayOps, enabled, chunk_of, busy, dead, rem, qsizes, qoff, qlen,
     qptr, queue_bytes, fsdt, prepend_sizes=None, prepend_n=None,
@@ -201,7 +317,11 @@ def feed_queues(
             prepend_sizes, prepend_sizes.shape[:-2] + (K * P,)
         )
         pidx = ch_clip * P + xp.clip(pn_c - 1 - rank, 0, P - 1)
-        pre_sz = ops.table_lookup(ps_flat, pidx)
+        # a real gather, not the one-hot table_lookup: the stack axis is
+        # pre-sized from the worst-case bound (P up to ~2x the channel
+        # axis), so a one-hot here would cost O(C*K*P) on every
+        # stack-path sweep; C scalar loads are cheaper on both backends
+        pre_sz = xp.take_along_axis(ps_flat, pidx, axis=-1)
     else:
         # pure-FIFO fast path: callers pass None exactly when no resume
         # files exist anywhere, so skip the stack bookkeeping entirely

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Callable, Dict, List, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core import testbeds
 from repro.core.runner import build_scheduler
@@ -98,12 +98,18 @@ class Scenario:
     num_chunks: int = 4
     tick_period: float = 5.0
     seed: int = 0
+    #: record the (t, aggregate rate) timeline. On the fabric backends the
+    #: samples stream into the fixed-budget on-device ring buffer
+    #: (uniform-stride decimation past the budget); the event backend
+    #: keeps the full host-appended timeline.
+    record_timeline: bool = False
 
     @property
     def name(self) -> str:
+        tl = "|tl" if self.record_timeline else ""
         return (
             f"{self.network}|{self.dataset}|{self.algorithm}"
-            f"|cc{self.max_cc}|k{self.num_chunks}|s{self.seed}"
+            f"|cc{self.max_cc}|k{self.num_chunks}|s{self.seed}{tl}"
         )
 
     @property
@@ -127,9 +133,11 @@ def build_files(scenario: Scenario) -> List[FileSpec]:
 
 
 def build_simulation(
-    scenario: Scenario, record_timeline: bool = False
+    scenario: Scenario, record_timeline: Optional[bool] = None
 ) -> Simulation:
-    """Scenario -> ready-to-run event-driven Simulation (fresh scheduler)."""
+    """Scenario -> ready-to-run event-driven Simulation (fresh scheduler).
+
+    ``record_timeline`` overrides the scenario's own flag when given."""
     network = testbeds.TESTBEDS[scenario.network]
     sched = build_scheduler(
         scenario.algorithm,
@@ -138,6 +146,8 @@ def build_simulation(
         max_cc=scenario.max_cc,
         num_chunks=scenario.num_chunks,
     )
+    if record_timeline is None:
+        record_timeline = scenario.record_timeline
     return Simulation(
         sched.chunks,
         sched.network,  # baselines may degrade the path (GCP mode)
@@ -226,6 +236,18 @@ def full_matrix(seed: int = 0) -> List[Scenario]:
                     Scenario(network=net, dataset=ds, algorithm=algo, seed=seed)
                 )
     return out
+
+
+def timeline_matrix(seed: int = 0) -> List[Scenario]:
+    """Timeline-recording variants of the smoke cross-section (every
+    network / core dataset / scheduler appears): the grid the
+    timeline-equivalence tests run through all three backends, asserting
+    the on-device ring buffer matches the event backend's host-appended
+    samples."""
+    return [
+        dataclasses.replace(sc, record_timeline=True)
+        for sc in smoke_matrix(seed)
+    ]
 
 
 def smoke_matrix(seed: int = 0) -> List[Scenario]:

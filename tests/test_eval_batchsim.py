@@ -15,23 +15,20 @@ from repro.eval.fabric import FabricSimulation as BatchSimulation
 from repro.eval.scenarios import Scenario, build_simulation
 
 
-def test_batchsim_module_is_a_deprecation_shim():
-    """`repro.eval.batchsim` warns on import and still exposes the driver
-    (removal slated for the next PR)."""
+def test_batchsim_shim_is_gone():
+    """The `repro.eval.batchsim` deprecation shim was removed: importing
+    it raises ModuleNotFoundError, and the package no longer exports the
+    alias — `repro.eval.fabric.FabricSimulation` is the one NumPy driver."""
     import importlib
     import sys
-    import warnings
+
+    import repro.eval
 
     sys.modules.pop("repro.eval.batchsim", None)
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        mod = importlib.import_module("repro.eval.batchsim")
-    assert any(
-        issubclass(w.category, DeprecationWarning)
-        and "repro.eval.fabric" in str(w.message)
-        for w in caught
-    )
-    assert mod.BatchSimulation is BatchSimulation
+    with pytest.raises(ModuleNotFoundError):
+        importlib.import_module("repro.eval.batchsim")
+    with pytest.raises(AttributeError):
+        repro.eval.BatchSimulation
 
 # ------------------------------------------------------------------ #
 # waterfill_batch == waterfill (the scalar reference)
