@@ -30,9 +30,12 @@ LAST_SNAPSHOT: Optional[Dict] = None
 _JAX_TARGET_RATIO = 2.0
 
 
-def _time_backend(scenarios, backend: str, repeat: int = 2) -> Dict[str, float]:
+def _time_backend(scenarios, backend: str, repeat: int = 2):
+    """Time one backend over the grid; returns ``(metrics, results)`` —
+    the last run's results ride along so consumers (the tuner leg's
+    regret report) don't pay a redundant full sweep."""
     t0 = time.perf_counter()
-    run_matrix(scenarios, backend=backend)
+    results = run_matrix(scenarios, backend=backend)
     cold = time.perf_counter() - t0
     # steady state: best of ``repeat`` further runs (for jax the first run
     # above also populated the XLA compile cache)
@@ -41,7 +44,7 @@ def _time_backend(scenarios, backend: str, repeat: int = 2) -> Dict[str, float]:
         _jax_backend.reset_sync_stats()
     for _ in range(repeat if backend == "jax" else repeat - 1):
         t0 = time.perf_counter()
-        run_matrix(scenarios, backend=backend)
+        results = run_matrix(scenarios, backend=backend)
         steady = min(steady, time.perf_counter() - t0)
     out = {
         "wall_s_cold": round(cold, 3),
@@ -65,6 +68,93 @@ def _time_backend(scenarios, backend: str, repeat: int = 2) -> Dict[str, float]:
             stats["replay_rounds"] / runs / scen, 4
         )
         out["post_row_replays_per_run"] = stats["post_row_replays"] // runs
+    return out, results
+
+
+#: candidate budget of the bench's tuner leg per grid (the full grid
+#: carries the acceptance-bar budget; smoke keeps CI fast)
+_TUNE_CANDIDATES = {"smoke": 16, "default": 32, "full": 64}
+
+
+def _time_tuner(scenarios, grid_name: str, claims, heuristics) -> Dict:
+    """Oracle-regret + successive-halving leg of the snapshot.
+
+    The oracle runs over the *bench grid* on the NumPy driver — the
+    candidate plane is dominated by deliberately slow settings (an
+    untuned-like candidate pays thousands of ticks), so eager NumPy
+    beats paying one XLA compile per (rows, channels, profile) shape
+    bucket; the zero-host-round JAX path for static rows is exercised
+    by CI's tuner smoke and ``tests/test_tune.py``. The
+    successive-halving budget bar is always measured on the smoke
+    matrix (its acceptance definition) against a smoke oracle.
+    """
+    from repro.eval.tune import (
+        oracle_search,
+        regret_report,
+        successive_halving,
+    )
+
+    n_candidates = _TUNE_CANDIDATES[grid_name]
+    backend = "numpy"
+    t0 = time.perf_counter()
+    oracle = oracle_search(
+        scenarios, backend=backend, n_candidates=n_candidates
+    )
+    oracle_wall = time.perf_counter() - t0
+    report = regret_report(scenarios, heuristics, oracle)
+
+    # the SHA bar is defined at 64 candidates on the smoke matrix, which
+    # never matches the regret leg's grid/budget — its oracle is its own
+    smoke = smoke_matrix()
+    smoke_oracle = oracle_search(smoke, backend=backend, n_candidates=64)
+    t0 = time.perf_counter()
+    sha = successive_halving(smoke, backend=backend, n_candidates=64)
+    sha_wall = time.perf_counter() - t0
+    by_ctx = {e.context: e.best_throughput for e in smoke_oracle.entries}
+    sha_worst = min(
+        e.best_throughput / max(by_ctx[e.context], 1e-12)
+        for e in sha.entries
+    )
+    out = {
+        "backend": backend,
+        "candidates": n_candidates,
+        "contexts": len(oracle.tables),
+        "oracle": {
+            "evals": oracle.evals,
+            "wall_s": round(oracle_wall, 3),
+        },
+        "sha_smoke_64": {
+            "evals": sha.evals,
+            "equivalent_evals": round(sha.equivalent_evals, 1),
+            "oracle_evals": smoke_oracle.evals,
+            "wall_s": round(sha_wall, 3),
+            "worst_vs_oracle": round(sha_worst, 4),
+        },
+        "regret_median": {
+            algo: round(agg["median"], 4)
+            for algo, agg in report.per_algorithm.items()
+        },
+        "regret_mean": {
+            algo: round(agg["mean"], 4)
+            for algo, agg in report.per_algorithm.items()
+        },
+    }
+    claims.check(
+        "successive halving within 5% of oracle throughput at <= 1/4 "
+        "of its candidate evaluations (smoke matrix, 64 candidates)",
+        sha_worst >= 0.95
+        and sha.equivalent_evals <= smoke_oracle.evals / 4.0,
+        f"worst {sha_worst:.3f}, {sha.equivalent_evals:.0f} equivalent "
+        f"evals vs oracle {smoke_oracle.evals}",
+    )
+    if grid_name == "full":
+        med = out["regret_median"]
+        claims.check(
+            "adaptive heuristics approach the static oracle "
+            "(MC/ProMC median regret >= 0.9 on the full matrix)",
+            med.get("mc", 0) >= 0.9 and med.get("promc", 0) >= 0.9,
+            f"median regret {med}",
+        )
     return out
 
 
@@ -80,8 +170,11 @@ def run(claims) -> List[Dict]:
     n = len(scenarios)
 
     backends = {}
+    results_of = {}
     for backend in ("event", "numpy", "jax"):
-        backends[backend] = _time_backend(scenarios, backend)
+        backends[backend], results_of[backend] = _time_backend(
+            scenarios, backend
+        )
 
     # jax/numpy ratio vs grid size: where does the device loop cross over?
     by_size: Dict[str, float] = {}
@@ -94,8 +187,8 @@ def run(claims) -> List[Dict]:
             np_t = backends["numpy"]["wall_s"]
             jx_t = backends["jax"]["wall_s"]
         else:
-            np_t = _time_backend(sub, "numpy")["wall_s"]
-            jx_t = _time_backend(sub, "jax")["wall_s"]
+            np_t = _time_backend(sub, "numpy")[0]["wall_s"]
+            jx_t = _time_backend(sub, "jax")[0]["wall_s"]
         ratio = round(np_t / max(jx_t, 1e-9), 3)
         by_size[str(len(sub))] = ratio
         if crossover is None and ratio >= 1.0:
@@ -137,11 +230,16 @@ def run(claims) -> List[Dict]:
             f"jax/numpy {ratio_full:.2f}x at {n} scenarios",
         )
 
+    tune_snapshot = _time_tuner(
+        scenarios, grid_name, claims, results_of["numpy"]
+    )
+
     LAST_SNAPSHOT = {
         "bench": "eval_matrix",
         "timestamp": round(time.time(), 1),
         "grid": {"name": grid_name, "scenarios": n},
         "backends": backends,
+        "tune": tune_snapshot,
         "jax_vs_numpy": {
             "steady_ratio": ratio_full,
             "target": _JAX_TARGET_RATIO,

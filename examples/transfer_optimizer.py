@@ -1,51 +1,104 @@
-"""The paper's contribution, standalone: tune and schedule a mixed-file
-transfer two ways —
+"""The paper's contribution plus this repo's autotuner, end to end:
 
-1. SIMULATED on the paper's XSEDE testbed (reproduces the Sec. 4 behaviour:
-   chunking, Algorithm-1 parameters, SC vs MC vs ProMC vs Globus/untuned);
-2. REAL threaded engine moving actual files on local disk with the same
-   schedulers (latency injection makes the pipelining effect visible).
+1. TUNE — run the static-parameter oracle over the smoke matrix (every
+   paper testbed / size-class mix / scheduler appears), print each
+   testbed's optimal (pipelining, parallelism, concurrency) and the
+   regret table: how close SC / MC / ProMC get to the best static
+   setting they never saw — the paper's headline claim, quantified.
+2. SEARCH CHEAPER — successive halving and warm-started hill climbing
+   find (nearly) the same winners at a fraction of the oracle's
+   evaluations, persisting per-testbed winners to a JSON history store
+   that seeds the next search.
+3. REAL ENGINE (``--engine``) — the threaded engine moves actual files
+   on local disk with the tuned schedulers (latency injection makes the
+   pipelining effect visible).
 
-    PYTHONPATH=src python examples/transfer_optimizer.py
+    PYTHONPATH=src python examples/transfer_optimizer.py [--engine]
 """
 import dataclasses
 import hashlib
 import os
+import sys
 import tempfile
 
-from repro.core import (
-    prepare_chunks,
-    run_transfer,
-    testbeds,
-    to_gbps,
-)
+from repro.core import prepare_chunks, testbeds, to_gbps
 from repro.core.engine import TransferEngine, file_task
 from repro.core.schedulers import make_scheduler
 from repro.core.types import KB, MB, FileSpec
-from repro.data.filesets import mixed_dataset
+from repro.eval.runner import run_matrix
+from repro.eval.scenarios import smoke_matrix
+from repro.eval.tune import (
+    HistoryStore,
+    hill_climb,
+    oracle_search,
+    regret_report,
+    successive_halving,
+)
 
 
-def simulated():
-    print("== simulated: mixed dataset on Stampede-Comet (10G WAN) ==")
-    files = mixed_dataset(scale=0.03)
-    total = sum(f.size for f in files) / 1e9
-    print(f"   {len(files)} files, {total:.1f} GB")
-    for algo in ("untuned", "globus", "sc", "mc", "promc"):
-        r = run_transfer(files, testbeds.STAMPEDE_COMET, algo, max_cc=8)
+def tune_demo(backend: str = "numpy", n_candidates: int = 16):
+    """Oracle + regret on the smoke matrix, then the budget searchers.
+
+    Returns the oracle regret report (the system tests smoke this)."""
+    scenarios = smoke_matrix()
+    print(
+        f"== tune: static-parameter oracle over the smoke matrix "
+        f"({len(scenarios)} scenarios, {n_candidates}+ candidates each, "
+        f"backend={backend}) =="
+    )
+    heuristics = run_matrix(scenarios, backend=backend)
+    oracle = oracle_search(
+        scenarios, backend=backend, n_candidates=n_candidates
+    )
+    report = regret_report(scenarios, heuristics, oracle)
+
+    print("   per-testbed optima (first one per network):")
+    seen = set()
+    for entry in oracle.entries:
+        net = entry.context[0]
+        if net in seen:
+            continue
+        seen.add(net)
+        pp, par, cc = entry.best_params
         print(
-            f"   {algo:8s} {to_gbps(r.throughput):6.2f} Gbps "
-            f"({r.total_time:7.1f} s, {r.n_moves} channel moves)"
+            f"   {net:<24s} pp={pp:<4d} p={par:<2d} cc={cc:<2d} "
+            f"-> {to_gbps(entry.best_throughput):6.2f} Gbps"
         )
+    print("   regret = heuristic / oracle throughput:")
+    for line in report.format_table().splitlines():
+        print(f"   {line}")
 
-    # show the tuned parameters per chunk (Algorithm 1)
-    chunks = prepare_chunks(files, testbeds.STAMPEDE_COMET, 2, max_cc=8)
-    for c in chunks:
-        p = c.params
-        print(
-            f"   chunk {c.name:6s}: {len(c):5d} files avg "
-            f"{c.avg_file_size/MB:7.1f} MB -> pipelining={p.pipelining} "
-            f"parallelism={p.parallelism} concurrency={p.concurrency}"
+    with tempfile.TemporaryDirectory() as tmp:
+        hist_path = os.path.join(tmp, "winners.json")
+        history = HistoryStore(hist_path)
+        sha = successive_halving(
+            scenarios, backend=backend, n_candidates=n_candidates,
+            history=history,
         )
+        hill = hill_climb(
+            scenarios, backend=backend, n_candidates=n_candidates,
+            history=history,  # warm-started from the sha winners
+        )
+        history.save()
+        oracle_best = {
+            e.context: e.best_throughput for e in oracle.entries
+        }
+        for result in (sha, hill):
+            worst = min(
+                e.best_throughput / max(oracle_best[e.context], 1e-12)
+                for e in result.entries
+            )
+            print(
+                f"   {result.method:<6s} {result.evals:4d} evaluations "
+                f"({result.equivalent_evals:6.1f} full-fidelity-equiv, "
+                f"oracle spent {oracle.evals}); worst-case "
+                f"{worst:.1%} of oracle throughput"
+            )
+        print(
+            f"   {len(history)} per-testbed winners recorded (demo store is "
+            "temporary; use `runner --tune ... --history PATH` to keep one)"
+        )
+    return report
 
 
 def real_engine():
@@ -87,5 +140,6 @@ def real_engine():
 
 
 if __name__ == "__main__":
-    simulated()
-    real_engine()
+    tune_demo()
+    if "--engine" in sys.argv[1:]:
+        real_engine()

@@ -69,6 +69,31 @@ class _StaticOneChunkScheduler(Scheduler):
         return [Open(chunk=0, n=self.params.concurrency)]
 
 
+class StaticParamsScheduler(_StaticOneChunkScheduler):
+    """One undivided chunk driven by *caller-chosen* fixed parameters.
+
+    This is the candidate-evaluation row of the autotuner
+    (:mod:`repro.eval.tune`): grid / successive-halving / hill-climbing
+    searches sweep the (pipelining, parallelism, concurrency) knob space
+    by running one of these per candidate, and the static-oracle regret
+    of the adaptive heuristics — "how close does SC/MC/ProMC get to the
+    best static setting it never saw" — is computed against their argmax.
+    Unlike :class:`GlobusOnlineScheduler` (class-preset parameters) the
+    setting is explicit; like every baseline it emits its initial Opens
+    and then never acts, so the batched fabric drivers run it through
+    the trivial-controller fast path (zero host rounds on JAX).
+    """
+
+    name = "Static"
+
+    def __init__(self, chunks, network, max_cc, params: TransferParams):
+        super().__init__(chunks, network, max_cc, params)
+        p = params
+        self.name = (
+            f"Static(pp={p.pipelining},p={p.parallelism},cc={p.concurrency})"
+        )
+
+
 class GlobusOnlineScheduler(_StaticOneChunkScheduler):
     name = "GlobusOnline"
 

@@ -3,14 +3,18 @@ from __future__ import annotations
 
 from typing import List, Optional, Sequence
 
-from .baselines import GlobusOnlineScheduler, UntunedScheduler
+from .baselines import (
+    GlobusOnlineScheduler,
+    StaticParamsScheduler,
+    UntunedScheduler,
+)
 from .chunking import partition_files
 from .params import assign_chunk_params
 from .schedulers import SCHEDULERS, Scheduler, make_scheduler
 from .simulator import SimResult, Simulation
-from .types import Chunk, FileSpec, NetworkSpec
+from .types import Chunk, ChunkType, FileSpec, NetworkSpec, TransferParams
 
-ALGORITHMS = tuple(SCHEDULERS) + ("globus", "untuned")
+ALGORITHMS = tuple(SCHEDULERS) + ("globus", "untuned", "static")
 
 
 def prepare_chunks(
@@ -36,6 +40,20 @@ def build_scheduler(
     **kw,
 ) -> Scheduler:
     algorithm = algorithm.lower()
+    if algorithm == "static":
+        params = kw.pop("static_params", None)
+        if params is None:
+            raise ValueError(
+                "algorithm 'static' requires static_params="
+                "TransferParams(...) (or a (pp, p, cc) tuple)"
+            )
+        if not isinstance(params, TransferParams):
+            params = TransferParams(*params)
+        # no partitioning / Algorithm 1: the whole point is one undivided
+        # chunk at the caller's parameters, and candidate sweeps build
+        # thousands of these per search round
+        chunks = [Chunk(ctype=ChunkType.ALL, files=list(files))]
+        return StaticParamsScheduler(chunks, network, max_cc, params, **kw)
     if algorithm == "globus":
         chunks = prepare_chunks(files, network, 1, max_cc)
         return GlobusOnlineScheduler(chunks, network, max_cc, **kw)

@@ -95,6 +95,27 @@ class TransferParams:
             raise ValueError("concurrency must be >= 1")
 
 
+def param_triple(params) -> tuple:
+    """Normalize a parameter setting to a ``(pp, p, cc)`` int triple.
+
+    Accepts :class:`TransferParams` (or anything exposing its fields) and
+    plain 3-sequences — the one conversion every autotuner entry point
+    (candidate expansion, search tables, the history store) shares.
+    """
+    if hasattr(params, "pipelining"):
+        return (
+            int(params.pipelining),
+            int(params.parallelism),
+            int(params.concurrency),
+        )
+    trip = tuple(int(v) for v in params)
+    if len(trip) != 3:
+        raise ValueError(
+            f"expected (pipelining, parallelism, concurrency), got {params!r}"
+        )
+    return trip
+
+
 @dataclasses.dataclass(frozen=True)
 class DiskSpec:
     """End-system storage model (parallel FS / GlusterFS / local).

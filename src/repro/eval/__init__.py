@@ -15,6 +15,10 @@ breadth into an executable object:
                       with chunked execution + golden JSON snapshots
   - :mod:`difftest`   differential harness asserting backend agreement
                       within tolerance on every scenario
+  - :mod:`tune`       autotuner: batched (pp, p, cc) parameter-space
+                      search over the fused sweep (exhaustive oracle,
+                      successive halving, hill climbing), static-oracle
+                      regret reports, JSON warm-start history
 
 Every future tuning PR is validated against this matrix; see TESTING.md.
 
@@ -34,12 +38,20 @@ _EXPORTS = {
     "Scenario": ".scenarios",
     "build_simulation": ".scenarios",
     "default_matrix": ".scenarios",
+    "expand_candidates": ".scenarios",
     "full_matrix": ".scenarios",
     "smoke_matrix": ".scenarios",
     "timeline_matrix": ".scenarios",
+    "run_built": ".runner",
     "run_matrix": ".runner",
     "run_scenario": ".runner",
     "run_simulations": ".runner",
+    "HistoryStore": ".tune",
+    "TuneResult": ".tune",
+    "hill_climb": ".tune",
+    "oracle_search": ".tune",
+    "regret_report": ".tune",
+    "successive_halving": ".tune",
     "metrics_snapshot": ".runner",
     "save_golden": ".runner",
     "load_golden": ".runner",

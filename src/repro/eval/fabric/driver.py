@@ -63,11 +63,20 @@ _EPS = 1e-12
 _NO_CHUNK = NO_CHUNK
 
 #: controller kinds the vectorized decision layer understands; anything
-#: else (KIND_CUSTOM) drives the scalar callback protocol on the host
-KIND_CUSTOM, KIND_TRIVIAL, KIND_SC, KIND_MC, KIND_PROMC = -1, 0, 1, 2, 3
+#: else (KIND_CUSTOM) drives the scalar callback protocol on the host.
+#: KIND_STATIC (the autotuner's fixed-parameter candidate rows) behaves
+#: exactly like a trivial baseline at runtime — initial Opens, then no
+#: actions — but is kept distinct so capacity pre-sizing and telemetry
+#: can see the candidate axis; it deliberately sits *below* KIND_SC so
+#: every ``kind >= KIND_SC`` controller-dispatch guard excludes it.
+(
+    KIND_CUSTOM, KIND_TRIVIAL, KIND_STATIC, KIND_SC, KIND_MC, KIND_PROMC,
+) = -1, 0, 1, 2, 3, 4
 
 
 def _scheduler_kind(scheduler: Scheduler) -> int:
+    from repro.core.baselines import StaticParamsScheduler
+
     cls = type(scheduler)
     if cls is SingleChunkScheduler:
         return KIND_SC
@@ -75,6 +84,8 @@ def _scheduler_kind(scheduler: Scheduler) -> int:
         return KIND_MC
     if cls is ProActiveMultiChunkScheduler:
         return KIND_PROMC
+    if cls is StaticParamsScheduler:
+        return KIND_STATIC
     if (
         cls.on_tick is Scheduler.on_tick
         and cls.on_chunk_complete is Scheduler.on_chunk_complete
@@ -353,8 +364,10 @@ class FabricSimulation:
         * MC / ProMC open ``max(maxCC, n_nonempty)`` channels up front
           (every non-empty chunk gets at least one) and every later
           transition (laggard grants, ProMC moves) conserves the count.
-        * Trivial baselines only act at t=0 (bounded by the per-chunk
-          concurrency sum); custom schedulers keep the host-growth path.
+        * Trivial baselines and static-params candidate rows only act at
+          t=0 (bounded by the per-chunk concurrency sum — exactly the
+          candidate's ``cc`` for a one-chunk static row); custom
+          schedulers keep the host-growth path.
         """
         kind = _scheduler_kind(r.scheduler)
         conc = sorted(

@@ -241,7 +241,11 @@ def _phase_advance(row: dict, qsizes, with_stack: bool = True):
     comp_any_pre = xp.any(comp_pre)
     tick_hit = t2 >= row["next_tick"] - _EPS
     kind = row["kind"]
-    known = kind >= KIND_SC  # SC / MC / ProMC: fused on-device
+    # SC / MC / ProMC route through the fused controller phases below;
+    # KIND_STATIC (the autotuner's fixed-parameter candidate rows) sits
+    # deliberately below KIND_SC — like the trivial baselines it acts
+    # only at t=0, so it needs neither the handlers nor a host replay
+    known = kind >= KIND_SC
 
     # Only *custom* scheduler subclasses still need Python: their
     # callbacks run through the scalar protocol on the host. Built-in

@@ -80,27 +80,42 @@ def _driver_cls(backend: str):
     return get_backend(backend)
 
 
-def _cost_proxy(scenario: Scenario) -> float:
+def cost_estimate(network, files, concurrency: int, tick_period: float) -> float:
     """Cheap *event-count* estimate for cost-homogeneous chunking.
 
     Batched sweep cost scales with the straggler's event count (file
     completions + controller ticks), so the proxy estimates the transfer
     duration at the *achievable* rate — window-limited streams on lossy
-    paths run far below line rate — and converts it to ticks.
+    paths run far below line rate — and converts it to ticks. Shared by
+    the scenario cost proxy below and the autotuner's explicit-fileset
+    rows (successive halving's sketch rungs).
     """
-    from repro.core import testbeds
     from repro.core.netmodel import channel_rate_cap
 
-    files = build_files(scenario)
-    net = testbeds.TESTBEDS[scenario.network]
     total = sum(f.size for f in files)
     est_rate = min(
-        net.bandwidth,
-        net.disk.streaming_rate,
-        max(1, scenario.max_cc) * channel_rate_cap(net, 4),
+        network.bandwidth,
+        network.disk.streaming_rate,
+        max(1, concurrency) * channel_rate_cap(network, 4),
     )
     duration = total / max(est_rate, 1.0)
-    return duration / max(scenario.tick_period, 1e-9) + len(files)
+    return duration / max(tick_period, 1e-9) + len(files)
+
+
+def _cost_proxy(scenario: Scenario) -> float:
+    from repro.core import testbeds
+
+    net = testbeds.TESTBEDS[scenario.network]
+    # static candidate rows run at their own fixed concurrency, not the
+    # heuristics' maxCC budget
+    eff_cc = (
+        scenario.static_params[2]
+        if scenario.static_params is not None
+        else scenario.max_cc
+    )
+    return cost_estimate(
+        net, build_files(scenario), eff_cc, scenario.tick_period
+    )
 
 
 def run_scenario(scenario: Scenario, backend: str = "event") -> SimResult:
@@ -110,28 +125,61 @@ def run_scenario(scenario: Scenario, backend: str = "event") -> SimResult:
     return run_matrix([scenario], backend=backend)[0]
 
 
+def run_built(
+    builders: Sequence,
+    names: Sequence[str],
+    costs: Optional[Sequence[float]] = None,
+    backend: str = "numpy",
+    chunk_size: Optional[int] = DEFAULT_CHUNK_SIZE,
+) -> List[SimResult]:
+    """Chunked batched execution of *lazily built* Simulations.
+
+    ``builders[i]`` is a zero-argument callable returning a fresh
+    ``Simulation`` (schedulers are stateful, so every run needs its own);
+    construction happens per chunk, so peak memory holds one chunk's
+    queues, not the whole sweep's. ``costs`` orders rows into
+    cost-homogeneous chunks exactly like :func:`run_matrix`'s scenario
+    proxy. This is the execution primitive shared by the scenario-matrix
+    runner and the autotuner (:mod:`repro.eval.tune`), whose
+    successive-halving rungs sweep candidate rows that are not matrix
+    scenarios (subsampled filesets).
+    """
+    backend = _resolve_backend(backend)
+    if chunk_size is not None and chunk_size <= 0:
+        raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+    if backend == "event":
+        return [b().run() for b in builders]
+    cls = _driver_cls(backend)
+    order = list(range(len(builders)))
+    if costs is not None:
+        order.sort(key=lambda i: costs[i])
+    size = chunk_size or BACKEND_CHUNK_SIZE[backend]
+    results: List[Optional[SimResult]] = [None] * len(builders)
+    for lo in range(0, len(order), size):
+        part = order[lo : lo + size]
+        sims = [builders[i]() for i in part]
+        out = cls(sims, names=[names[i] for i in part]).run()
+        for i, res in zip(part, out):
+            results[i] = res
+    return results  # type: ignore[return-value]
+
+
 def run_matrix(
     scenarios: Sequence[Scenario],
     backend: str = "numpy",
     chunk_size: Optional[int] = DEFAULT_CHUNK_SIZE,
 ) -> List[SimResult]:
     """Run every scenario; order of results matches the input order."""
-    backend = _resolve_backend(backend)
-    if chunk_size is not None and chunk_size <= 0:
-        raise ValueError(f"chunk_size must be positive, got {chunk_size}")
-    if backend == "event":
-        return [build_simulation(sc).run() for sc in scenarios]
-    cls = _driver_cls(backend)
-    order = sorted(range(len(scenarios)), key=lambda i: _cost_proxy(scenarios[i]))
-    size = chunk_size or BACKEND_CHUNK_SIZE[backend]
-    results: List[Optional[SimResult]] = [None] * len(scenarios)
-    for lo in range(0, len(order), size):
-        part = order[lo : lo + size]
-        sims = [build_simulation(scenarios[i]) for i in part]
-        out = cls(sims, names=[scenarios[i].name for i in part]).run()
-        for i, res in zip(part, out):
-            results[i] = res
-    return results  # type: ignore[return-value]
+    return run_built(
+        [
+            (lambda sc=sc: build_simulation(sc))
+            for sc in scenarios
+        ],
+        names=[sc.name for sc in scenarios],
+        costs=[_cost_proxy(sc) for sc in scenarios],
+        backend=backend,
+        chunk_size=chunk_size,
+    )
 
 
 def run_simulations(
@@ -223,6 +271,46 @@ def build_matrix(name: str) -> List[Scenario]:
     raise ValueError(f"unknown matrix {name!r}; options: default, smoke, full")
 
 
+def run_tune(args, scenarios: Sequence[Scenario]) -> int:
+    """The ``--tune`` subcommand: search the static knob space over the
+    matrix and report every heuristic's regret against the result."""
+    from . import tune
+
+    history = tune.HistoryStore(args.history) if args.history else None
+    searchers = {
+        "oracle": tune.oracle_search,
+        "sha": tune.successive_halving,
+        "hill": tune.hill_climb,
+    }
+    search = searchers[args.tune]
+    result = search(
+        scenarios,
+        backend=args.backend,
+        n_candidates=args.candidates,
+        history=history,
+        chunk_size=args.chunk_size,
+    )
+    heuristics = run_matrix(
+        scenarios, backend=args.backend, chunk_size=args.chunk_size
+    )
+    report = tune.regret_report(scenarios, heuristics, result)
+    n_ctx = len(result.tables)
+    print(
+        f"tune[{args.tune}]: {len(scenarios)} scenarios, {n_ctx} contexts, "
+        f"{result.evals} candidate evaluations "
+        f"({result.equivalent_evals:.1f} full-fidelity-equivalent)"
+    )
+    print(f"regret = heuristic_throughput / {args.tune}_throughput:")
+    print(report.format_table())
+    if history is not None:
+        history.save()
+        print(f"warm-start history ({len(history)} winners) -> {args.history}")
+    if args.regret_out:
+        tune.save_report(args.regret_out, report, result)
+        print(f"regret report -> {args.regret_out}")
+    return 0
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     import argparse
 
@@ -239,9 +327,30 @@ def main(argv: Optional[List[str]] = None) -> int:
     )
     ap.add_argument("--out", default="tests/golden/eval_matrix.json")
     ap.add_argument("--refresh-golden", action="store_true")
+    ap.add_argument(
+        "--tune", choices=("oracle", "sha", "hill"), default=None,
+        help="search the static (pipelining, parallelism, concurrency) "
+        "space over the matrix (exhaustive grid / successive halving / "
+        "hill climbing) and report per-algorithm regret vs the result",
+    )
+    ap.add_argument(
+        "--candidates", type=int, default=64,
+        help="--tune: candidate-grid budget per scenario context",
+    )
+    ap.add_argument(
+        "--history", default=None, metavar="PATH",
+        help="--tune: JSON warm-start store; read to seed the search, "
+        "updated with the winners afterwards",
+    )
+    ap.add_argument(
+        "--regret-out", default=None, metavar="PATH",
+        help="--tune: write the regret report + search tables as JSON",
+    )
     args = ap.parse_args(argv)
 
     scenarios = build_matrix(args.matrix)
+    if args.tune:
+        return run_tune(args, scenarios)
     results = run_matrix(
         scenarios, backend=args.backend, chunk_size=args.chunk_size
     )

@@ -13,13 +13,14 @@ JAX device loop — consumes the same grids unchanged.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import testbeds
 from repro.core.runner import build_scheduler
 from repro.core.simulator import Simulation
-from repro.core.types import GB, MB, FileSpec
+from repro.core.types import GB, MB, FileSpec, param_triple
 from repro.data import filesets
 
 # --------------------------------------------------------------------------
@@ -86,6 +87,14 @@ CORE_DATASETS: Sequence[str] = (
 
 ALGORITHMS: Sequence[str] = ("sc", "mc", "promc", "globus", "untuned")
 
+#: reserved separator of :attr:`Scenario.name`. Name components are joined
+#: with it and suffixes like ``|tl`` (timeline recording) and ``|pp…``
+#: (static candidate parameters) are appended behind it, so a component
+#: containing the separator would make two different scenarios collide on
+#: one name (e.g. network ``"x|tl"`` vs network ``"x"`` recording its
+#: timeline). ``Scenario`` validates its string components against it.
+NAME_SEP = "|"
+
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
@@ -93,7 +102,7 @@ class Scenario:
 
     network: str  # key into testbeds.TESTBEDS
     dataset: str  # key into DATASET_BUILDERS
-    algorithm: str  # sc | mc | promc | globus | untuned
+    algorithm: str  # sc | mc | promc | globus | untuned | static
     max_cc: int = 8
     num_chunks: int = 4
     tick_period: float = 5.0
@@ -103,13 +112,47 @@ class Scenario:
     #: (uniform-stride decimation past the budget); the event backend
     #: keeps the full host-appended timeline.
     record_timeline: bool = False
+    #: fixed (pipelining, parallelism, concurrency) for ``algorithm ==
+    #: "static"`` rows — the autotuner's candidate axis
+    #: (:mod:`repro.eval.tune`): one static row per candidate setting,
+    #: flowing through the same matrix runner / cost-proxy chunking /
+    #: difftest machinery as every heuristic row.
+    static_params: Optional[Tuple[int, int, int]] = None
+
+    def __post_init__(self):
+        for field in ("network", "dataset", "algorithm"):
+            value = getattr(self, field)
+            if NAME_SEP in value:
+                raise ValueError(
+                    f"scenario {field} {value!r} contains the reserved "
+                    f"name separator {NAME_SEP!r} (names would collide "
+                    "with suffixed variants like the '|tl' timeline rows)"
+                )
+        if (self.algorithm == "static") != (self.static_params is not None):
+            raise ValueError(
+                "static_params is required for algorithm 'static' and "
+                f"reserved to it (got algorithm={self.algorithm!r}, "
+                f"static_params={self.static_params!r})"
+            )
+        if self.static_params is not None:
+            pp, par, cc = self.static_params
+            if pp < 0 or par < 1 or cc < 1:
+                raise ValueError(
+                    f"invalid static_params {self.static_params!r}: need "
+                    "pipelining >= 0, parallelism >= 1, concurrency >= 1"
+                )
 
     @property
     def name(self) -> str:
+        st = (
+            "|pp{}.p{}.cc{}".format(*self.static_params)
+            if self.static_params is not None
+            else ""
+        )
         tl = "|tl" if self.record_timeline else ""
         return (
             f"{self.network}|{self.dataset}|{self.algorithm}"
-            f"|cc{self.max_cc}|k{self.num_chunks}|s{self.seed}{tl}"
+            f"|cc{self.max_cc}|k{self.num_chunks}|s{self.seed}{st}{tl}"
         )
 
     @property
@@ -121,15 +164,28 @@ class Scenario:
         return int.from_bytes(digest[:4], "little")
 
 
-def build_files(scenario: Scenario) -> List[FileSpec]:
+@functools.lru_cache(maxsize=512)
+def _build_files_cached(dataset: str, dataset_seed: int) -> tuple:
     try:
-        builder = DATASET_BUILDERS[scenario.dataset]
+        builder = DATASET_BUILDERS[dataset]
     except KeyError:
         raise ValueError(
-            f"unknown dataset {scenario.dataset!r}; "
+            f"unknown dataset {dataset!r}; "
             f"options: {sorted(DATASET_BUILDERS)}"
         )
-    return builder(scenario.dataset_seed)
+    return tuple(builder(dataset_seed))
+
+
+def build_files(scenario: Scenario) -> List[FileSpec]:
+    """The scenario's dataset (deterministic in (dataset, seed)).
+
+    Memoized: the autotuner expands each scenario along a candidate axis
+    (dozens of static rows sharing one dataset), and the cost-proxy sort
+    builds files a second time per row — generator calls would otherwise
+    dominate candidate-sweep setup. FileSpecs are frozen, so sharing the
+    specs across rows is safe; the list itself is fresh per call.
+    """
+    return list(_build_files_cached(scenario.dataset, scenario.dataset_seed))
 
 
 def build_simulation(
@@ -139,12 +195,18 @@ def build_simulation(
 
     ``record_timeline`` overrides the scenario's own flag when given."""
     network = testbeds.TESTBEDS[scenario.network]
+    extra = (
+        {"static_params": scenario.static_params}
+        if scenario.static_params is not None
+        else {}
+    )
     sched = build_scheduler(
         scenario.algorithm,
         build_files(scenario),
         network,
         max_cc=scenario.max_cc,
         num_chunks=scenario.num_chunks,
+        **extra,
     )
     if record_timeline is None:
         record_timeline = scenario.record_timeline
@@ -235,6 +297,41 @@ def full_matrix(seed: int = 0) -> List[Scenario]:
                 out.append(
                     Scenario(network=net, dataset=ds, algorithm=algo, seed=seed)
                 )
+    return out
+
+
+def expand_candidates(
+    scenarios: Sequence[Scenario],
+    candidates,
+) -> List[Scenario]:
+    """Expand a scenario matrix along the autotuner's candidate axis.
+
+    ``candidates`` is either one shared sequence of ``(pp, p, cc)``
+    settings (``TransferParams`` accepted) or a callable
+    ``scenario -> sequence`` for per-scenario spaces (BDP-derived caps
+    differ across testbeds). Each base scenario yields one ``static``
+    row per candidate — same network / dataset / seed / tick, so the
+    candidate transfers exactly the bytes the heuristic row transfers —
+    returned scenario-major (``len(scenarios) * n_candidates`` rows,
+    candidate order preserved). The expanded rows are ordinary
+    scenarios: one :func:`repro.eval.runner.run_matrix` call sweeps the
+    whole (scenario x candidate) plane through the batched fabric
+    backends, chunked by the runner's cost proxy — no per-candidate
+    Python loop over scenarios.
+    """
+    out: List[Scenario] = []
+    for sc in scenarios:
+        cands = candidates(sc) if callable(candidates) else candidates
+        for params in cands:
+            trip = param_triple(params)
+            out.append(
+                dataclasses.replace(
+                    sc,
+                    algorithm="static",
+                    static_params=trip,
+                    record_timeline=False,
+                )
+            )
     return out
 
 

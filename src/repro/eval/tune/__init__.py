@@ -1,0 +1,68 @@
+"""Autotuner: batched parameter-space search + static-oracle regret.
+
+The fourth layer of the evaluation stack — above the controller layer
+the way the controllers sit above the fluid kernels — and the first
+consumer that composes *multiple* fused sweeps in a host loop. The
+batched fabric sweep (NumPy driver or zero-host-round JAX device loop)
+is treated as a vectorized black-box objective
+``f(scenario, pp, p, cc) -> throughput``; everything here is about
+choosing which (scenario x candidate) plane to hand it next:
+
+  - :mod:`space`    BDP-capped log-spaced (pp, p, cc) axes per testbed
+                    + the ``StaticParamsScheduler`` candidate vehicle
+  - :mod:`oracle`   exhaustive grid search as ONE batched sweep over
+                    the candidate-expanded scenario matrix; per-scenario
+                    argmax tables and the heuristic-vs-oracle regret
+                    report (the paper's "approaches the best static
+                    setting" claim, quantified)
+  - :mod:`search`   successive halving (subsampled rungs, shrink the
+                    candidate axis between sweeps) and axis-neighbor
+                    hill climbing — within a few percent of the oracle
+                    at a fraction of its evaluations
+  - :mod:`history`  JSON warm-start store of per-testbed winners that
+                    seeds subsequent searches
+
+``eval/runner.py --tune {oracle,sha,hill}`` is the CLI; TESTING.md
+documents the regret semantics and the candidate-axis chunking.
+"""
+from __future__ import annotations
+
+from .history import HistoryStore, history_key
+from .oracle import (
+    ContextTable,
+    RegretReport,
+    TuneEntry,
+    TuneResult,
+    context_key,
+    oracle_search,
+    regret_report,
+    save_report,
+)
+from .search import hill_climb, successive_halving
+from .space import (
+    ParamSpace,
+    StaticParamsScheduler,
+    algorithm1_params,
+    param_space,
+    scenario_space,
+)
+
+__all__ = [
+    "ContextTable",
+    "HistoryStore",
+    "ParamSpace",
+    "RegretReport",
+    "StaticParamsScheduler",
+    "TuneEntry",
+    "TuneResult",
+    "algorithm1_params",
+    "context_key",
+    "hill_climb",
+    "history_key",
+    "oracle_search",
+    "param_space",
+    "regret_report",
+    "save_report",
+    "scenario_space",
+    "successive_halving",
+]

@@ -65,10 +65,18 @@ def _network(bw_gbps, rtt_ms, buf_mb, disk_frac, sat_cc, contention,
     )
 
 
-def _run(backend, files, net, algo, max_cc, num_chunks, tick):
+#: fixed (pp, p, cc) draws for the static controller kind (the
+#: autotuner's candidate rows): the same event/numpy/jax 2% bar as the
+#: adaptive schedulers, including a deliberately oversubscribed cc=16
+STATIC_PARAMS = ((0, 1, 1), (8, 2, 2), (32, 4, 8), (4, 8, 4), (128, 1, 16))
+
+
+def _run(backend, files, net, algo, max_cc, num_chunks, tick,
+         static_params=None):
     # fresh scheduler per backend: controllers are stateful
+    kw = {"static_params": static_params} if algo == "static" else {}
     sched = build_scheduler(
-        algo, files, net, max_cc=max_cc, num_chunks=num_chunks
+        algo, files, net, max_cc=max_cc, num_chunks=num_chunks, **kw
     )
     sim = Simulation(
         sched.chunks, sched.network, sched, tick_period=tick
@@ -90,14 +98,18 @@ def _run(backend, files, net, algo, max_cc, num_chunks, tick):
     sizes=st.lists(
         st.sampled_from(SIZE_POOL), min_size=1, max_size=14
     ),
-    algo=st.sampled_from(["sc", "mc", "promc", "globus", "untuned"]),
+    algo=st.sampled_from(
+        ["sc", "mc", "promc", "globus", "untuned", "static"]
+    ),
+    static_params=st.sampled_from(STATIC_PARAMS),
     max_cc=st.sampled_from([1, 2, 8, 16]),
     num_chunks=st.sampled_from([1, 2, 3, 4]),
     tick=st.sampled_from([1.0, 2.5, 5.0]),
 )
 def test_fuzz_event_numpy_jax_agree(
     bw_gbps, rtt_ms, buf_mb, disk_frac, sat_cc, contention, unhidden_ms,
-    ctrl_mult, profile, sizes, algo, max_cc, num_chunks, tick,
+    ctrl_mult, profile, sizes, algo, static_params, max_cc, num_chunks,
+    tick,
 ):
     net = _network(
         bw_gbps, rtt_ms, buf_mb, disk_frac, sat_cc, contention,
@@ -105,7 +117,10 @@ def test_fuzz_event_numpy_jax_agree(
     )
     files = [FileSpec(f"f{i}", s) for i, s in enumerate(sizes)]
     results = {
-        backend: _run(backend, files, net, algo, max_cc, num_chunks, tick)
+        backend: _run(
+            backend, files, net, algo, max_cc, num_chunks, tick,
+            static_params=static_params,
+        )
         for backend in ("event", "numpy", "jax")
     }
     ev = results["event"]

@@ -1,0 +1,363 @@
+"""Autotuner subsystem tests: grid-vs-scalar-loop equivalence, the
+successive-halving budget/monotonicity contract, history round-trips,
+the bounded-regret property, and the zero-host-round invariant for the
+static controller kind."""
+import json
+import os
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import testbeds
+from repro.eval.runner import run_matrix, run_scenario
+from repro.eval.scenarios import Scenario, expand_candidates, smoke_matrix
+from repro.eval.tune import (
+    HistoryStore,
+    hill_climb,
+    oracle_search,
+    regret_report,
+    successive_halving,
+)
+from repro.eval.tune.oracle import candidate_lists, context_key
+from repro.eval.tune.space import param_space, scenario_space
+
+#: adaptivity bonus bound (see test_oracle_dominates_heuristics_bounded):
+#: multi-chunk adaptive schedulers may legitimately beat EVERY static
+#: setting — per-chunk parameters and online re-allocation are exactly
+#: what one static triple cannot express — but only by a bounded margin.
+#: Measured maximum over the property pool: ~1.25 (MC/ProMC on mixed
+#: datasets under a tight maxCC=4 budget, where the per-size-class split
+#: is worth the most); densifying the grid does not close it, so it is a
+#: real adaptivity edge, not search error.
+ADAPTIVITY_BONUS = 1.30
+
+
+def _smoke_slice(n):
+    return smoke_matrix()[:n]
+
+
+# ------------------------------------------------------------------ #
+# search space
+# ------------------------------------------------------------------ #
+
+
+def test_param_space_meets_candidate_budget_on_every_smoke_scenario():
+    for sc in smoke_matrix():
+        sp = scenario_space(sc, n_candidates=64)
+        assert sp.size >= 64, (sc.name, sp)
+        # axes stay inside the admissible range and are strictly sorted
+        assert sp.pp_axis[0] == 0
+        assert sp.par_axis[0] == 1 and sp.cc_axis[0] == 1
+        assert sp.cc_axis[-1] <= sc.max_cc
+        for axis in (sp.pp_axis, sp.par_axis, sp.cc_axis):
+            assert list(axis) == sorted(set(axis))
+
+
+def test_param_space_pins_disk_saturation_cc():
+    net = testbeds.TESTBEDS[testbeds.BLUEWATERS_STAMPEDE.name]
+    sp = param_space(net, max_cc=32, avg_file_size=64 * 1024**2)
+    if 1 < net.disk.saturation_cc < 32:
+        assert net.disk.saturation_cc in sp.cc_axis
+
+
+def test_untuned_baseline_is_always_a_candidate():
+    """(0, 1, 1) — the 10x-claim baseline — is in every default grid
+    (axis endpoints are kept), so the oracle dominates it by
+    construction."""
+    for sc in _smoke_slice(6):
+        sp = scenario_space(sc, n_candidates=64)
+        assert 0 in sp.pp_axis and 1 in sp.par_axis and 1 in sp.cc_axis
+
+
+def test_space_neighbors_stay_in_bounds():
+    sp = scenario_space(smoke_matrix()[0], n_candidates=64)
+    for idx in [(0, 0, 0), tuple(s - 1 for s in sp.shape)]:
+        for nb in sp.neighbors(idx):
+            assert all(0 <= nb[a] < sp.shape[a] for a in range(3))
+            assert sum(abs(nb[a] - idx[a]) for a in range(3)) == 1
+
+
+# ------------------------------------------------------------------ #
+# oracle: grid == scalar loop
+# ------------------------------------------------------------------ #
+
+
+def test_oracle_argmax_matches_scalar_candidate_loop():
+    """The batched candidate-expanded sweep must pick exactly the argmax
+    a plain per-scenario Python loop over candidates picks (and report
+    exactly its throughputs)."""
+    scenarios = _smoke_slice(4)
+    oracle = oracle_search(scenarios, backend="numpy", n_candidates=16)
+    _, _, cands = candidate_lists(scenarios, n_candidates=16)
+    for sc in scenarios:
+        key = context_key(sc)
+        table = oracle.tables[key]
+        assert list(table.candidates) == cands[key]
+        loop_thr = [
+            run_scenario(row, backend="numpy").throughput
+            for row in expand_candidates([sc], cands[key])
+        ]
+        assert list(table.throughputs) == pytest.approx(loop_thr, rel=1e-12)
+        assert table.best_index == int(np.argmax(loop_thr))
+
+
+def test_oracle_dedups_shared_contexts():
+    """Scenarios differing only in scheduler / num_chunks share one
+    candidate table (the static objective ignores both fields)."""
+    base = smoke_matrix()[0]
+    import dataclasses
+
+    variants = [
+        base,
+        dataclasses.replace(base, algorithm="mc"),
+        dataclasses.replace(base, algorithm="promc", num_chunks=2),
+    ]
+    oracle = oracle_search(variants, backend="numpy", n_candidates=16)
+    assert len(oracle.tables) == 1
+    assert len({e.best_params for e in oracle.entries}) == 1
+    # evals == one context's candidate count, not 3x
+    assert oracle.evals == len(next(iter(oracle.tables.values())).candidates)
+
+
+# ------------------------------------------------------------------ #
+# successive halving: monotonicity + the budget/quality acceptance bar
+# ------------------------------------------------------------------ #
+
+
+def test_successive_halving_monotone_and_within_bar():
+    """On the smoke matrix: every rung shrinks a *nested* survivor set
+    that keeps the rung argmax, fidelity fractions are non-decreasing
+    with a full-fidelity final rung — and the result lands within 5% of
+    the oracle's throughput on every context for less than 1/4 of the
+    oracle's (full-fidelity-equivalent) candidate evaluations."""
+    scenarios = smoke_matrix()
+    oracle = oracle_search(scenarios, backend="numpy", n_candidates=64)
+    sha = successive_halving(scenarios, backend="numpy", n_candidates=64)
+
+    for key, rungs in sha.trace.items():
+        prev_kept = None
+        prev_frac = 0.0
+        for rung in rungs:
+            evaluated = set(rung["evaluated"])
+            kept = rung["kept"]
+            assert set(kept) <= evaluated
+            assert 0 < len(kept) <= len(evaluated)
+            if prev_kept is not None:
+                # survivors only ever shrink (nested selection)
+                assert evaluated <= prev_kept
+                assert len(kept) < len(prev_kept)
+            assert rung["fraction"] >= prev_frac
+            prev_kept, prev_frac = set(kept), rung["fraction"]
+        assert rungs[-1]["fraction"] == 1.0
+
+    by_ctx = {e.context: e for e in oracle.entries}
+    for entry in sha.entries:
+        ratio = entry.best_throughput / by_ctx[entry.context].best_throughput
+        assert ratio >= 0.95, (entry.scenario, ratio)
+    assert sha.equivalent_evals <= oracle.evals / 4.0, (
+        sha.equivalent_evals, oracle.evals,
+    )
+
+
+def test_hill_climb_reaches_oracle_on_slice():
+    scenarios = _smoke_slice(6)
+    oracle = oracle_search(scenarios, backend="numpy", n_candidates=64)
+    hill = hill_climb(scenarios, backend="numpy", n_candidates=64)
+    by_ctx = {e.context: e for e in oracle.entries}
+    for entry in hill.entries:
+        ratio = entry.best_throughput / by_ctx[entry.context].best_throughput
+        assert ratio >= 0.95, (entry.scenario, ratio)
+    assert hill.evals < oracle.evals
+
+
+# ------------------------------------------------------------------ #
+# history store
+# ------------------------------------------------------------------ #
+
+
+def test_history_store_round_trip(tmp_path):
+    path = os.path.join(tmp_path, "winners.json")
+    store = HistoryStore(path)
+    sc = smoke_matrix()[0]
+    assert store.seed(sc) is None
+    assert store.record(sc, (8, 2, 4), 1.5e9, method="oracle")
+    # a worse result must not clobber the winner
+    assert not store.record(sc, (0, 1, 1), 1.0e9, method="sha")
+    store.save()
+
+    reloaded = HistoryStore(path)
+    seed = reloaded.seed(sc)
+    assert (seed.pipelining, seed.parallelism, seed.concurrency) == (8, 2, 4)
+    assert reloaded.best_throughput(sc) == 1.5e9
+    # the JSON on disk is the documented stable format
+    with open(path) as f:
+        data = json.load(f)
+    assert data["version"] == 1
+    key = f"{sc.network}/{sc.dataset}/cc{sc.max_cc}"
+    assert data["winners"][key]["method"] == "oracle"
+    # a strictly better result replaces it
+    assert reloaded.record(sc, (16, 4, 8), 2.0e9, method="hill")
+    seed2 = reloaded.seed(sc)
+    assert seed2.concurrency == 8
+
+
+def test_history_warm_start_reduces_hill_evals(tmp_path):
+    scenarios = _smoke_slice(4)
+    cold = hill_climb(scenarios, backend="numpy", n_candidates=16)
+    store = HistoryStore(os.path.join(tmp_path, "w.json"))
+    for key, table in cold.tables.items():
+        # seed the store with each context's winner
+        rep = next(sc for sc in scenarios if context_key(sc) == key)
+        store.record(rep, table.best_params, table.best_throughput, "hill")
+    warm = hill_climb(
+        scenarios, backend="numpy", n_candidates=16, history=store
+    )
+    assert warm.evals <= cold.evals
+    for e_cold, e_warm in zip(cold.entries, warm.entries):
+        assert e_warm.best_throughput >= e_cold.best_throughput * (1 - 1e-12)
+
+
+def test_history_rejects_unknown_version(tmp_path):
+    path = os.path.join(tmp_path, "bad.json")
+    with open(path, "w") as f:
+        json.dump({"version": 99, "winners": {}}, f)
+    with pytest.raises(ValueError, match="version"):
+        HistoryStore(path)
+
+
+# ------------------------------------------------------------------ #
+# regret properties
+# ------------------------------------------------------------------ #
+
+
+@settings(max_examples=6, deadline=None, derandomize=True)
+@given(
+    network=st.sampled_from(
+        [
+            testbeds.XSEDE.name,
+            testbeds.STAMPEDE_COMET.name,
+            testbeds.LAN.name,
+        ]
+    ),
+    dataset=st.sampled_from(
+        ["mixed", "uniform_small", "uniform_huge", "small_dominated"]
+    ),
+    algorithm=st.sampled_from(["sc", "mc", "promc", "globus", "untuned"]),
+    max_cc=st.sampled_from([4, 8]),
+)
+def test_oracle_dominates_heuristics_bounded(
+    network, dataset, algorithm, max_cc
+):
+    """Oracle throughput >= every heuristic's throughput per scenario —
+    up to the bounded adaptivity bonus.
+
+    Strict domination as literally stated is FALSE in the model (found
+    while building this suite): multi-chunk adaptive schedulers give
+    each size class its own parameters and re-allocate channels online,
+    which no single static (pp, p, cc) can express, and on
+    small-dominated datasets that legitimately beats the best static
+    setting by a few percent. What must hold: (a) the oracle strictly
+    dominates the *static* baselines whose settings live inside the
+    grid — untuned's (0, 1, 1) is always a grid point — and (b) the
+    adaptive edge is bounded (measured max ~1.25, asserted <= 1.30):
+    anything larger would mean the oracle missed a static optimum, not
+    that adaptivity won."""
+    sc = Scenario(
+        network=network, dataset=dataset, algorithm=algorithm,
+        max_cc=max_cc,
+    )
+    heur = run_matrix([sc], backend="numpy")[0]
+    oracle = oracle_search([sc], backend="numpy", n_candidates=16)
+    best = oracle.entries[0].best_throughput
+    assert best * ADAPTIVITY_BONUS >= heur.throughput, (
+        sc.name, best, heur.throughput,
+    )
+    if algorithm == "untuned":
+        # (0,1,1) is in the grid: domination is exact, not approximate
+        assert best >= heur.throughput * (1 - 1e-9)
+
+
+def test_regret_report_shape_and_static_rows_excluded():
+    scenarios = _smoke_slice(5)
+    heur = run_matrix(scenarios, backend="numpy")
+    oracle = oracle_search(scenarios, backend="numpy", n_candidates=16)
+    # static candidate rows must not be scored as contestants
+    extra = expand_candidates(scenarios[:1], [(0, 1, 1)])
+    rep = regret_report(
+        scenarios + extra,
+        heur + run_matrix(extra, backend="numpy"),
+        oracle,
+    )
+    assert all(r["algorithm"] != "static" for r in rep.per_scenario)
+    assert len(rep.per_scenario) == len(scenarios)
+    for agg in rep.per_algorithm.values():
+        assert agg["min"] <= agg["median"] <= agg["max"]
+        assert 0 < agg["median"] <= ADAPTIVITY_BONUS
+    table = rep.format_table()
+    assert "median" in table and "beats-oracle" in table
+
+
+# ------------------------------------------------------------------ #
+# static rows: scenario plumbing + zero-host-round on the JAX backend
+# ------------------------------------------------------------------ #
+
+
+def test_scenario_name_reserves_separator_and_static_coupling():
+    with pytest.raises(ValueError, match="reserved name separator"):
+        Scenario(network="a|tl", dataset="mixed", algorithm="mc")
+    with pytest.raises(ValueError, match="static_params"):
+        Scenario(network="lan", dataset="mixed", algorithm="static")
+    with pytest.raises(ValueError, match="static_params"):
+        Scenario(
+            network="lan", dataset="mixed", algorithm="mc",
+            static_params=(0, 1, 1),
+        )
+    with pytest.raises(ValueError, match="invalid static_params"):
+        Scenario(
+            network="lan", dataset="mixed", algorithm="static",
+            static_params=(-1, 1, 1),
+        )
+    sc = Scenario(
+        network="lan", dataset="mixed", algorithm="static",
+        static_params=(4, 2, 8),
+    )
+    assert "|pp4.p2.cc8" in sc.name
+
+
+def test_static_rows_zero_host_round_on_jax():
+    """Candidate rows run the fused device loop without a single parked-
+    row replay — the invariant `difftest --expect-zero-replays` gates."""
+    from repro.eval.fabric import jax_backend
+
+    scenarios = expand_candidates(
+        _smoke_slice(3), [(0, 1, 1), (16, 4, 8), (4, 2, 16)]
+    )
+    jax_backend.reset_sync_stats()
+    jax_res = run_matrix(scenarios, backend="jax")
+    stats = dict(jax_backend.SYNC_STATS)
+    assert stats["post_row_replays"] == 0
+    assert stats["replay_rounds"] == 0
+    ev_res = run_matrix(scenarios, backend="event")
+    for sc, jr, er in zip(scenarios, jax_res, ev_res):
+        assert jr.throughput == pytest.approx(er.throughput, rel=1e-9), sc.name
+
+
+def test_static_scheduler_kind_is_distinct():
+    from repro.eval.fabric.driver import (
+        KIND_SC,
+        KIND_STATIC,
+        _scheduler_kind,
+    )
+    from repro.eval.scenarios import build_simulation
+
+    sim = build_simulation(
+        Scenario(
+            network=testbeds.LAN.name, dataset="mixed",
+            algorithm="static", static_params=(8, 2, 4),
+        )
+    )
+    assert _scheduler_kind(sim.scheduler) == KIND_STATIC
+    assert KIND_STATIC < KIND_SC  # every >= KIND_SC dispatch excludes it
+    assert sim.scheduler.name == "Static(pp=8,p=2,cc=4)"
