@@ -44,6 +44,13 @@ def main() -> None:
     )
     args = ap.parse_args()
 
+    # arm the persistent XLA compilation cache up front when opted in
+    # (REPRO_XLA_CACHE): the jax benches then measure cache reads, not
+    # recompiles, and a fresh CI runner inherits prior runs' programs
+    from repro.eval.fabric.xla_cache import enable_persistent_cache
+
+    enable_persistent_cache()
+
     claims = Claims()
     print("name,us_per_call,derived")
     t_start = time.time()

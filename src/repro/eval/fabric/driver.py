@@ -56,6 +56,7 @@ from repro.core.simulator import SimResult, Simulation
 from repro.core.types import TransferParams
 
 from . import controllers, kernels
+from .bucketing import PROFILE_PAD_FLOOR, bucket
 from .reference import resume_file
 from .shim import NO_CHUNK, ArrayOps, numpy_ops
 
@@ -164,6 +165,12 @@ class FabricSimulation:
     ``waterfill_impl`` may name an alternative water-fill kernel
     (``"closed"`` — the sort-based closed form — or ``"pallas"`` for the
     optional Pallas kernel; also via ``REPRO_FABRIC_WATERFILL``).
+    ``fused_step`` (``"none"`` / ``"pallas"``, also via
+    ``REPRO_FABRIC_FUSED_STEP``) routes resume-free sweeps through the
+    fused Pallas advance+feed kernel
+    (:mod:`repro.eval.fabric.kernels.fused_step_pallas`) instead of the
+    split ``_advance`` / feed path; the JAX subclass ignores it (its
+    device loop is already fused).
     """
 
     def __init__(
@@ -173,6 +180,7 @@ class FabricSimulation:
         *,
         ops: Optional[ArrayOps] = None,
         waterfill_impl: Optional[str] = None,
+        fused_step: Optional[str] = None,
         timeline_budget: Optional[int] = None,
     ):
         if names is None:
@@ -195,6 +203,14 @@ class FabricSimulation:
                 f"unknown waterfill_impl {impl!r}; options: closed, pallas"
             )
         self.waterfill_impl = impl
+        fused = fused_step or os.environ.get(
+            "REPRO_FABRIC_FUSED_STEP", "none"
+        )
+        if fused not in ("none", "pallas"):
+            raise ValueError(
+                f"unknown fused_step {fused!r}; options: none, pallas"
+            )
+        self.fused_step = fused
         self.rt = [
             _ScenarioRuntime(i, n, sim)
             for i, (n, sim) in enumerate(zip(names, sims))
@@ -203,7 +219,10 @@ class FabricSimulation:
         self.S = S
         self.C = 4  # channel capacity; grows on demand
         self.P = 4  # resume-stack capacity; grows on demand
-        K = max((len(r.chunks) for r in self.rt), default=1)
+        # chunk axis bucketed to the canonical pow2 ladder: padding chunks
+        # are born done/empty (see chunk_done below), so a 3-chunk batch
+        # shares the K=4 compiled program with a 4-chunk one
+        K = bucket(max((len(r.chunks) for r in self.rt), default=1))
         self.K = K
 
         # scenario scalars
@@ -242,7 +261,13 @@ class FabricSimulation:
             getattr(r.network, "bandwidth_profile", None) or ((0.0, 1.0),)
             for r in self.rt
         ]
+        # profile width rides the same ladder (all-static batches keep the
+        # width-1 fast path; mixed batches bucket so step counts don't leak
+        # into the jit signature): pad steps hold t=inf / the last
+        # multiplier, which the gather below never selects
         B = max((len(p) for p in profiles), default=1)
+        if B > 1:
+            B = bucket(B, PROFILE_PAD_FLOOR)
         self.prof_t = np.full((S, B), np.inf)
         self.prof_mult = np.ones((S, B))
         for r, prof in zip(self.rt, profiles):
@@ -655,8 +680,15 @@ class FabricSimulation:
         act = ~self.done if rows is None else (~self.done & rows)
         if not act.any():
             return
-        self._advance(act)
-        self._post(act)
+        if self.fused_step == "pallas" and not self.prepend_n.any():
+            # resume-free sweeps (the overwhelmingly common case) run
+            # water-fill + horizon + advance + FIFO feed as one fused
+            # Pallas launch; _post then skips its own feed
+            self._advance_fused(act)
+            self._post(act, skip_feed=True)
+        else:
+            self._advance(act)
+            self._post(act)
 
     def _bandwidth_now(self):
         """Effective per-row bandwidth under the profile at time ``t`` and
@@ -749,16 +781,78 @@ class FabricSimulation:
         )
         self.fin_any = np.where(act, finished.any(axis=1), self.fin_any)
 
-    def _post(self, act: np.ndarray) -> None:
+    def _advance_fused(self, act: np.ndarray) -> None:
+        """Physics half + FIFO feed as one fused Pallas launch.
+
+        Semantics match :meth:`_advance` followed by :meth:`_post`'s feed
+        on resume-free sweeps (the caller guarantees ``prepend_n`` is all
+        zero); host-side error checks, timeline recording, and the
+        delivered scatter stay here, fed by the kernel's returns. The
+        bisected water level agrees with the closed form to ~1e-12, so
+        results sit far inside the difftest's 2% bar but are not
+        bit-identical to the default path.
+        """
+        from .kernels.fused_step_pallas import fused_advance_feed_f64
+
+        over = act & (self.t > self.max_time)
+        if over.any():
+            s = int(np.flatnonzero(over)[0])
+            raise RuntimeError(
+                f"batch scenario {self.rt[s].name!r} exceeded max_time="
+                f"{self.max_time[s]}s (t={self.t[s]:.1f})"
+            )
+        self.n_events[act] += 1
+        # stranded-chunk detection on pre-advance state, as in _advance
+        no_busy = act & ~self.busy.any(axis=1)
+        for s in np.flatnonzero(no_busy):
+            r = self.rt[s]
+            live = np.flatnonzero(~self.chunk_done[s])
+            held = set(self.chunk_of[s][self.chunk_of[s] != _NO_CHUNK].tolist())
+            if any(int(k) not in held for k in live):
+                raise RuntimeError(
+                    f"scheduler {r.scheduler.name} stranded chunks "
+                    f"{[r.chunks[int(k)].name for k in live]} in {r.name!r}"
+                )
+        eff_bw, next_prof = self._bandwidth_now()
+        (
+            dt, rate_sum, fin, busy, dead, rem, moved, qptr, qb,
+        ) = fused_advance_feed_f64(
+            act, self.busy, self.dead, self.rem, self.cap, self.chunk_of,
+            np.minimum(self.next_tick - self.t, next_prof - self.t),
+            eff_bw, self.disk_rate, self.sat_cc, self.contention,
+            self.qoff, self.qlen, self.qptr, self.queue_bytes, self.fsdt,
+            self.qsizes,
+        )
+        rec = act & self.record_timeline
+        if rec.any():
+            (
+                self.tl_t, self.tl_rate, self.tl_len, self.tl_stride,
+                self.tl_seen, self.tl_last_t, self.tl_last_rate,
+            ) = kernels.timeline_push(
+                self.ops, rec, self.t, rate_sum, self.tl_t, self.tl_rate,
+                self.tl_len, self.tl_stride, self.tl_seen, self.tl_last_t,
+                self.tl_last_rate,
+            )
+        self.t += dt  # kernel zeroes dt on inactive rows
+        self.busy, self.dead, self.rem = busy, dead, rem
+        self.qptr, self.queue_bytes = qptr, qb
+        self.delivered = self.ops.chunk_scatter_add(
+            self.delivered, self.chunk_of, moved, moved != 0.0
+        )
+        self.fin_any = np.where(act, fin, self.fin_any)
+
+    def _post(self, act: np.ndarray, skip_feed: bool = False) -> None:
         """Transition half of a sweep: feed -> completions -> tick -> done.
 
         The order is the fidelity contract's feed/complete/tick ordering;
         the JAX backend fuses the same sequence on-device and calls this
         only for rows it parked (timeline / custom-controller / guard
-        edges — their ``_advance`` ran on-device).
+        edges — their ``_advance`` ran on-device). ``skip_feed`` is the
+        fused-step path, whose kernel already fed the queues.
         """
         # ---- feed (batched, resume-stack aware) ----
-        self._feed_vec(act)
+        if not skip_feed:
+            self._feed_vec(act)
 
         # ---- chunk completions ----
         # a chunk can only complete in an iteration where one of its

@@ -52,6 +52,7 @@ from jax import lax
 from repro.core.simulator import SimResult, Simulation
 
 from . import controllers, kernels
+from .bucketing import MIN_ROW_PAD, bucket, qsizes_pad
 from .driver import (
     _EPS,
     _NO_CHUNK,
@@ -79,7 +80,9 @@ _ROUND_CAP = 2048
 #: more XLA trace at compile time. Once a round starts at the floor,
 #: draining below half the cohort cannot shrink the device shape, so the
 #: half-cohort early exit is skipped there (see ``_device_rounds``).
-_MIN_PAD = 8
+#: Aliased from :mod:`repro.eval.fabric.bucketing` — the canonical pad
+#: ladder shared by the runner's chunk spans and the tuner's planes.
+_MIN_PAD = MIN_ROW_PAD
 
 #: host-sync telemetry, accumulated across runs (reset with
 #: :func:`reset_sync_stats`); the eval-matrix bench derives its
@@ -600,10 +603,10 @@ class JaxFabricSimulation(FabricSimulation):
     def _pad_rows(self) -> int:
         """Row count uploaded to the device: next power of two >= live rows
         (min ``_MIN_PAD``). Padded rows are born ``done`` and never sweep;
-        bucketing bounds the number of XLA shapes traced as compaction
-        shrinks S."""
-        n = max(_MIN_PAD, self.S)
-        return 1 << (n - 1).bit_length()
+        ``_pad_floor`` (set by the one-rung compaction policy below) keeps
+        the post-compaction shape on a deterministic ladder rung instead
+        of wherever the live count happened to land."""
+        return bucket(max(self.S, getattr(self, "_pad_floor", 0)), _MIN_PAD)
 
     def _padded(self, key: str, arr: np.ndarray, pad: int):
         if pad:
@@ -686,11 +689,46 @@ class JaxFabricSimulation(FabricSimulation):
             self._drive()
         return [self._result(r) for r in all_rt]
 
+    def _maybe_compact(self) -> None:
+        """Compaction policy for the device loop: one deterministic
+        quarter-step rung, then stop.
+
+        The parent compacts whenever half the batch is done — right for
+        NumPy, where a rebuild is free and sweep cost tracks live rows.
+        Here every rebuild that shrinks the padded row bucket is a fresh
+        jit signature, and each signature costs seconds of *retrace* per
+        process even when the persistent cache supplies the compiled
+        executable (tracing is Python, the cache only skips XLA).
+        Walking every pow2 rung (1024 -> 512 -> ... -> 16) spent more
+        wall time tracing than the narrower sweeps saved. So: when the
+        live rows fit a 4x smaller pad, compact to exactly ``pad // 4``
+        (pinned via ``_pad_floor`` even if far fewer rows survive) and
+        stop at a 64-row device shape — a 1024-row chunk occupies
+        exactly {1024, 256, 64}, never a stray 128/32 rung from
+        wherever the live count happened to land.
+        """
+        live = self.S - int(self.done.sum())
+        pad = self._pad_rows()
+        if pad > 64 and bucket(live, _MIN_PAD) * 4 <= pad:
+            self._pad_floor = max(pad // 4, 64)
+            self._compact()
+
     def _drive(self) -> None:
         self._stall = np.zeros(self.S, dtype=np.int64)
         SYNC_STATS["runs"] += 1
         SYNC_STATS["scenarios"] += self.S
-        qsizes_dev = jnp.asarray(self.qsizes)
+        # the flat file-size buffer is a jit-signature axis too — its raw
+        # length is the batch's total file count, different for every
+        # chunk, which made every chunk a fresh XLA compile. Zero-pad to
+        # the quarter-step ladder; the feed kernel only reads qoff+qptr <
+        # qoff+qlen, so the pad slots are dead weight (8 B each), not
+        # semantics
+        q_pad = qsizes_pad(self.qsizes.shape[0])
+        qsizes_dev = jnp.asarray(
+            np.concatenate(
+                [self.qsizes, np.zeros(q_pad - self.qsizes.shape[0])]
+            )
+        )
         while not self.done.all():
             progressed = False
             runnable = ~self.done & (self._stall == _STALL_NONE)

@@ -3,24 +3,38 @@ signature of :func:`repro.eval.fabric.kernels.waterfill`.
 
 Instead of the sort-based closed form, the kernel bisects the water level
 ``lam`` solving ``sum_i min(cap_i, lam) = min(pool, sum_i cap_i)`` — pure
-element-wise math plus row reductions, which maps onto the TPU VPU without
-needing an in-kernel sort. 80 halvings from ``max(caps)`` pin ``lam`` to
-f64 resolution, so allocations agree with the closed form to ~1e-12
-relative.
+element-wise math plus row reductions, which maps onto the TPU VPU (and
+Triton on GPU) without needing an in-kernel sort. 80 halvings from
+``max(caps)`` pin ``lam`` to f64 resolution, so allocations agree with
+the closed form to ~1e-12 relative.
 
-On hosts without a TPU the kernel runs in interpreter mode (the
-``interpret=`` fallback), which is how CI and the equivalence test in
-``tests/test_fabric_kernels.py`` exercise it. Opt in on the NumPy driver
-with ``FabricSimulation(..., waterfill_impl="pallas")`` or
-``REPRO_FABRIC_WATERFILL=pallas``.
+Pallas has real lowerings on TPU (Mosaic) and GPU (Triton); only plain
+CPU lacks one, so interpreter mode is the fallback *there alone* — a GPU
+host gets the genuinely compiled kernel, not the silent interpreted
+crawl it used to. CI and the equivalence test in
+``tests/test_fabric_kernels.py`` exercise the interpreter path. Opt in
+on the NumPy driver with ``FabricSimulation(..., waterfill_impl=
+"pallas")`` or ``REPRO_FABRIC_WATERFILL=pallas``.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 _BISECT_ITERS = 80
+
+#: backends with a real Pallas lowering (TPU: Mosaic; GPU: Triton).
+#: Everything else (cpu, plugins without kernel support) interprets.
+_COMPILED_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+
+def supports_compiled_pallas() -> bool:
+    """True when the default JAX backend can lower ``pallas_call``
+    natively instead of interpreting it."""
+    return jax.default_backend() in _COMPILED_BACKENDS
 
 
 def _waterfill_kernel(caps_ref, pool_ref, out_ref):
@@ -43,11 +57,26 @@ def _waterfill_kernel(caps_ref, pool_ref, out_ref):
     out_ref[...] = jnp.minimum(caps, hi)
 
 
+@functools.lru_cache(maxsize=64)
+def _build_call(S: int, C: int, dtype: str, interpret: bool):
+    """One ``pallas_call`` per (shape, dtype, mode): kernel construction
+    re-walks the grid/block specs every time, so rebuilding it per sweep
+    put Python dispatch on the hot path of every water-fill. Shapes are
+    bucketed upstream (:mod:`repro.eval.fabric.bucketing`), so the cache
+    stays a handful of entries."""
+    return pl.pallas_call(
+        _waterfill_kernel,
+        out_shape=jax.ShapeDtypeStruct((S, C), dtype),
+        interpret=interpret,
+    )
+
+
 def waterfill_pallas(caps, pool, interpret=None):
     """Max-min fair allocation of ``pool`` across ``caps`` rows via Pallas.
 
     ``caps``: (S, C) per-entity ceilings (idle entries 0); ``pool``: (S,).
-    ``interpret=None`` auto-selects interpreter mode off-TPU.
+    ``interpret=None`` auto-selects: compiled wherever the backend has a
+    Pallas lowering (TPU/GPU), interpreter mode only on CPU.
     """
     caps = jnp.asarray(caps)
     pool = jnp.asarray(pool)
@@ -55,13 +84,10 @@ def waterfill_pallas(caps, pool, interpret=None):
     if S == 0 or C == 0:
         return jnp.zeros_like(caps)
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = not supports_compiled_pallas()
     pool2 = pool.reshape(S, 1).astype(caps.dtype)
-    return pl.pallas_call(
-        _waterfill_kernel,
-        out_shape=jax.ShapeDtypeStruct((S, C), caps.dtype),
-        interpret=interpret,
-    )(caps, pool2)
+    call = _build_call(S, C, jnp.dtype(caps.dtype).name, bool(interpret))
+    return call(caps, pool2)
 
 
 def waterfill_pallas_f64(caps, pool):

@@ -1,0 +1,75 @@
+"""Opt-in persistent XLA compilation cache (``REPRO_XLA_CACHE``).
+
+Shape bucketing (:mod:`repro.eval.fabric.bucketing`) shrinks the jax
+backend's compile footprint to a handful of canonical signatures, but
+each of those still costs seconds of XLA time on the first run of every
+*process*. JAX ships a persistent on-disk compilation cache that keys
+entries on the serialized HLO + compile options + backend version — with
+bucketing keeping the HLO set small and stable, pointing the cache at a
+durable directory makes cold starts a cache read (< 1s per program)
+instead of a compile (~5-10s per program).
+
+Enable by exporting ``REPRO_XLA_CACHE=/path/to/dir``, or just
+``REPRO_XLA_CACHE=1`` for the default directory
+(``~/.cache/repro_xla``, created on demand); the fabric backend
+registry, ``benchmarks/run.py``, and the CI workflow (actions/cache
+keyed on the jax version + kernel sources) all route through
+:func:`enable_persistent_cache`. Off by default: writing cache entries
+into undeclared paths is the wrong default for a library, and tests
+that *count* compiles must see real ones.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+#: environment variable naming the cache directory (opt-in); truthy
+#: one-word values select :data:`DEFAULT_DIR`
+ENV_VAR = "REPRO_XLA_CACHE"
+
+#: where ``REPRO_XLA_CACHE=1`` puts the cache
+DEFAULT_DIR = os.path.join(
+    os.path.expanduser("~"), ".cache", "repro_xla"
+)
+
+_TRUTHY = {"1", "true", "yes", "on"}
+
+_configured: Optional[str] = None
+
+
+def cache_dir() -> Optional[str]:
+    """The configured cache directory, or None when disabled."""
+    return _configured
+
+
+def enabled() -> bool:
+    """True once the persistent cache has been pointed at a directory
+    (or would be on the next backend resolution: the env var counts)."""
+    return _configured is not None or bool(os.environ.get(ENV_VAR))
+
+
+def enable_persistent_cache(path: Optional[str] = None) -> Optional[str]:
+    """Point JAX's persistent compilation cache at ``path`` (default:
+    ``$REPRO_XLA_CACHE``). Returns the directory in effect, or None when
+    neither is set. Idempotent; safe to call before any jax import cost
+    has been paid — it only touches jax.config.
+    """
+    global _configured
+    if path is None:
+        val = os.environ.get(ENV_VAR, "").strip()
+        if not val:
+            return _configured
+        path = DEFAULT_DIR if val.lower() in _TRUTHY else val
+    if _configured is not None:
+        return _configured
+    import jax
+
+    os.makedirs(path, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", path)
+    # the fused device loop is one big program per shape signature: cache
+    # every entry (no size floor) but skip sub-second trivia like the
+    # difftest's scalar helpers
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.5)
+    _configured = path
+    return _configured

@@ -36,6 +36,7 @@ from typing import Dict, Iterable, List, Optional, Sequence
 
 from repro.core.simulator import SimResult, Simulation
 
+from .fabric.bucketing import bucket, chunk_spans
 from .scenarios import (
     Scenario,
     build_files,
@@ -102,20 +103,33 @@ def cost_estimate(network, files, concurrency: int, tick_period: float) -> float
     return duration / max(tick_period, 1e-9) + len(files)
 
 
-def _cost_proxy(scenario: Scenario) -> float:
-    from repro.core import testbeds
-
-    net = testbeds.TESTBEDS[scenario.network]
+def _effective_cc(scenario: Scenario) -> int:
     # static candidate rows run at their own fixed concurrency, not the
     # heuristics' maxCC budget
-    eff_cc = (
+    return (
         scenario.static_params[2]
         if scenario.static_params is not None
         else scenario.max_cc
     )
+
+
+def _cost_proxy(scenario: Scenario) -> float:
+    from repro.core import testbeds
+
+    net = testbeds.TESTBEDS[scenario.network]
     return cost_estimate(
-        net, build_files(scenario), eff_cc, scenario.tick_period
+        net, build_files(scenario), _effective_cc(scenario),
+        scenario.tick_period,
     )
+
+
+def shape_hint(concurrency: int) -> int:
+    """Chunk-grouping key for shape-homogeneous batches: the pow2 bucket
+    the row's worst-case channel axis lands in (the jax driver pre-sizes
+    C/P from ``capacity_need`` by doubling from 4). Grouping rows by this
+    hint *before* cost-sorting keeps a cc=32 candidate from dragging every
+    cc<=8 row in its chunk up to the C=32 compiled program."""
+    return bucket(concurrency, 4)
 
 
 def run_scenario(scenario: Scenario, backend: str = "event") -> SimResult:
@@ -131,6 +145,7 @@ def run_built(
     costs: Optional[Sequence[float]] = None,
     backend: str = "numpy",
     chunk_size: Optional[int] = DEFAULT_CHUNK_SIZE,
+    hints: Optional[Sequence[int]] = None,
 ) -> List[SimResult]:
     """Chunked batched execution of *lazily built* Simulations.
 
@@ -143,6 +158,12 @@ def run_built(
     runner and the autotuner (:mod:`repro.eval.tune`), whose
     successive-halving rungs sweep candidate rows that are not matrix
     scenarios (subsampled filesets).
+
+    On the jax backend two more shape-canonicalization steps apply (see
+    :mod:`repro.eval.fabric.bucketing`): rows are grouped by ``hints``
+    (the :func:`shape_hint` capacity bucket) before cost-sorting, and
+    chunk spans are cut power-of-two-aligned so live rows fill the padded
+    device shape instead of sweeping dead pad width.
     """
     backend = _resolve_backend(backend)
     if chunk_size is not None and chunk_size <= 0:
@@ -151,12 +172,16 @@ def run_built(
         return [b().run() for b in builders]
     cls = _driver_cls(backend)
     order = list(range(len(builders)))
+    aligned = backend == "jax"
     if costs is not None:
-        order.sort(key=lambda i: costs[i])
+        if aligned and hints is not None:
+            order.sort(key=lambda i: (hints[i], costs[i]))
+        else:
+            order.sort(key=lambda i: costs[i])
     size = chunk_size or BACKEND_CHUNK_SIZE[backend]
     results: List[Optional[SimResult]] = [None] * len(builders)
-    for lo in range(0, len(order), size):
-        part = order[lo : lo + size]
+    for lo, hi in chunk_spans(len(order), size, pad_aligned=aligned):
+        part = order[lo:hi]
         sims = [builders[i]() for i in part]
         out = cls(sims, names=[names[i] for i in part]).run()
         for i, res in zip(part, out):
@@ -179,6 +204,7 @@ def run_matrix(
         costs=[_cost_proxy(sc) for sc in scenarios],
         backend=backend,
         chunk_size=chunk_size,
+        hints=[shape_hint(_effective_cc(sc)) for sc in scenarios],
     )
 
 

@@ -15,6 +15,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import hashlib
+from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import testbeds
@@ -164,8 +165,56 @@ class Scenario:
         return int.from_bytes(digest[:4], "little")
 
 
-@functools.lru_cache(maxsize=512)
+#: cap on the *approximate bytes* the built-fileset cache may pin. An
+#: entry's footprint scales with its file count (FileSpec objects +
+#: name strings), not the entry count — a 512-entry LRU let a candidate
+#: sweep over heavy-tail filesets pin hundreds of 100k-file lists while
+#: counting them the same as 10-file smoke sets. 64 MiB holds every
+#: matrix dataset with room to spare and bounds the worst case.
+FILES_CACHE_MAX_BYTES = 64 * 1024 * 1024
+
+#: rough per-FileSpec cost: the object, its slots, and the name string.
+_FILESPEC_BYTES = 120
+
+_files_cache: "OrderedDict[Tuple[str, int], tuple]" = OrderedDict()
+_files_cache_bytes = 0
+_files_cache_stats = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+def _entry_bytes(specs: tuple) -> int:
+    return 64 + _FILESPEC_BYTES * len(specs) + sum(
+        len(f.name) for f in specs
+    )
+
+
+def files_cache_info() -> dict:
+    """Introspection for tests/benchmarks: current byte footprint,
+    entry count, and hit/miss/eviction counters."""
+    return dict(
+        _files_cache_stats,
+        entries=len(_files_cache),
+        bytes=_files_cache_bytes,
+        max_bytes=FILES_CACHE_MAX_BYTES,
+    )
+
+
 def _build_files_cached(dataset: str, dataset_seed: int) -> tuple:
+    """Byte-bounded LRU over built filesets.
+
+    ``functools.lru_cache(maxsize=512)`` keyed eviction on *entry count*;
+    datasets differ in size by four orders of magnitude, so the bound is
+    on the approximate bytes pinned instead — oldest entries fall out
+    until the new entry fits. Entries are immutable tuples of frozen
+    FileSpecs, shared across every caller (sweeps over the same context
+    reference one fileset, they don't copy it).
+    """
+    global _files_cache_bytes
+    key = (dataset, dataset_seed)
+    entry = _files_cache.get(key)
+    if entry is not None:
+        _files_cache.move_to_end(key)
+        _files_cache_stats["hits"] += 1
+        return entry
     try:
         builder = DATASET_BUILDERS[dataset]
     except KeyError:
@@ -173,7 +222,17 @@ def _build_files_cached(dataset: str, dataset_seed: int) -> tuple:
             f"unknown dataset {dataset!r}; "
             f"options: {sorted(DATASET_BUILDERS)}"
         )
-    return tuple(builder(dataset_seed))
+    _files_cache_stats["misses"] += 1
+    entry = tuple(builder(dataset_seed))
+    cost = _entry_bytes(entry)
+    while _files_cache and _files_cache_bytes + cost > FILES_CACHE_MAX_BYTES:
+        _, old = _files_cache.popitem(last=False)
+        _files_cache_bytes -= _entry_bytes(old)
+        _files_cache_stats["evictions"] += 1
+    if cost <= FILES_CACHE_MAX_BYTES:
+        _files_cache[key] = entry
+        _files_cache_bytes += cost
+    return entry
 
 
 def build_files(scenario: Scenario) -> List[FileSpec]:
@@ -183,7 +242,9 @@ def build_files(scenario: Scenario) -> List[FileSpec]:
     (dozens of static rows sharing one dataset), and the cost-proxy sort
     builds files a second time per row — generator calls would otherwise
     dominate candidate-sweep setup. FileSpecs are frozen, so sharing the
-    specs across rows is safe; the list itself is fresh per call.
+    specs across rows is safe; the list itself is fresh per call. The
+    cache is bounded by approximate bytes (:data:`FILES_CACHE_MAX_BYTES`),
+    not entry count.
     """
     return list(_build_files_cached(scenario.dataset, scenario.dataset_seed))
 

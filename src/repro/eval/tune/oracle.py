@@ -195,6 +195,14 @@ def oracle_search(
     Per-context argmax over the full candidate grid: ground truth for
     the regret claims and the budget baseline the cheaper searchers
     (:mod:`repro.eval.tune.search`) are measured against.
+
+    The pre-expanded plane is canonical-shape by construction: every row
+    is a one-chunk (K=1) static scenario, and :func:`run_matrix` groups
+    rows by their capacity shape hint (a static row holds exactly ``cc``
+    channels) and cuts power-of-two-aligned chunk spans, so on the jax
+    backend the whole 10k+-row plane executes as a handful of compiled
+    programs instead of one per chunk (see
+    :mod:`repro.eval.fabric.bucketing`).
     """
     keys, reps, cands = candidate_lists(
         scenarios, n_candidates=n_candidates, space=space, history=history

@@ -44,7 +44,7 @@ from repro.core.runner import build_scheduler
 from repro.core.simulator import Simulation
 from repro.core.types import FileSpec
 
-from ..runner import DEFAULT_CHUNK_SIZE, cost_estimate, run_built
+from ..runner import DEFAULT_CHUNK_SIZE, cost_estimate, run_built, shape_hint
 from ..scenarios import Scenario, build_files
 from .oracle import (
     ContextKey,
@@ -143,8 +143,11 @@ def _evaluate(
     chunk_size: Optional[int],
 ) -> List[float]:
     """One batched sweep over (context, candidate, fraction) rows ->
-    throughputs, input order."""
-    builders, names, costs = [], [], []
+    throughputs, input order. Rows carry a capacity shape hint (a static
+    candidate holds exactly its own ``cc`` channels) so the jax backend
+    can group them into capacity-homogeneous — hence compile-shape-
+    homogeneous — chunks."""
+    builders, names, costs, hints = [], [], [], []
     for ctx, triple, fraction in rows:
         files = ctx.subset(fraction)
         builders.append(
@@ -159,8 +162,10 @@ def _evaluate(
         costs.append(
             cost_estimate(ctx.network, files, triple[2], ctx.rep.tick_period)
         )
+        hints.append(shape_hint(triple[2]))
     results = run_built(
-        builders, names, costs, backend=backend, chunk_size=chunk_size
+        builders, names, costs, backend=backend, chunk_size=chunk_size,
+        hints=hints,
     )
     return [r.throughput for r in results]
 
