@@ -15,16 +15,24 @@ repeatedly.
 """
 from __future__ import annotations
 
+import json
 import os
 import resource
+import subprocess
+import sys
 import time
 from typing import Dict, List, Optional
 
 from benchmarks.common import row
 from repro.eval import run_matrix
+from repro.eval.fabric import executor as _fabric_executor
 from repro.eval.fabric import jax_backend as _jax_backend
 from repro.eval.fabric import xla_cache
 from repro.eval.scenarios import default_matrix, full_matrix, smoke_matrix
+
+#: repo root (the subprocess legs run ``python -m benchmarks.mega_sweep``
+#: from here so ``src`` + the benchmarks package resolve)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 #: snapshot of the last run(), serialized by ``run.py --bench-json``
 LAST_SNAPSHOT: Optional[Dict] = None
@@ -39,6 +47,55 @@ _COLD_BUDGET_S = 20.0
 
 def _peak_rss_mb() -> float:
     return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def _provenance() -> Dict:
+    """Execution provenance for cross-snapshot comparability: two
+    snapshots' ratios only mean something when they ran the same
+    executor/donation/device configuration — the event-canary drift
+    note covers machine speed, this covers execution mode."""
+    import jax
+
+    return {
+        "jax_version": jax.__version__,
+        "platform": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "executor": _fabric_executor.executor_mode(),
+        "donation": _jax_backend.donation_enabled(),
+        "cpu_count": os.cpu_count(),
+    }
+
+
+def _mega_subprocess(
+    n_candidates: int, devices: int = 0, timeout: float = 1800.0
+) -> Optional[Dict]:
+    """One ``benchmarks.mega_sweep`` run in a fresh interpreter: clean
+    per-run peak RSS (``ru_maxrss`` is process-lifetime, so in-process
+    numbers inherit earlier legs' peaks) and, for ``devices > 0``, a
+    simulated multi-device topology (the XLA host device count is fixed
+    at jax import). Returns the parsed JSON row, or None on failure
+    (recorded as an absent leg, never a bench crash)."""
+    cmd = [
+        sys.executable, "-m", "benchmarks.mega_sweep",
+        "--candidates", str(n_candidates),
+    ]
+    if devices:
+        cmd += ["--devices", str(devices)]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (
+            os.path.join(_ROOT, "src"), _ROOT,
+            env.get("PYTHONPATH", ""),
+        ) if p
+    )
+    try:
+        proc = subprocess.run(
+            cmd, cwd=_ROOT, env=env, capture_output=True, text=True,
+            timeout=timeout,
+        )
+        return json.loads(proc.stdout.strip().splitlines()[-1])
+    except Exception:
+        return None
 
 
 def _time_backend(scenarios, backend: str, repeat: int = 2):
@@ -128,39 +185,43 @@ def _time_tuner(scenarios, grid_name: str, claims, heuristics) -> Dict:
         for e in sha.entries
     )
     # the mega-sweep leg: the full candidate plane (>= 10k rows) on the
-    # jax driver, chunked by the cost proxy with bounded peak memory —
-    # one chunk's device arrays live at a time, the byte-bounded fileset
-    # cache holds the rest flat
+    # jax driver through the pipelined executor, run in a *fresh
+    # subprocess* so peak RSS is the sweep's own (not inherited from the
+    # grid legs above), plus a 4-simulated-device scaling row from a
+    # second subprocess (the XLA host device count is import-time)
     mega = None
     if grid_name == "full":
-        rss_before = _peak_rss_mb()
-        t0 = time.perf_counter()
-        jax_oracle = oracle_search(
-            scenarios, backend="jax", n_candidates=n_candidates
-        )
-        jax_wall = time.perf_counter() - t0
-        rss_peak = _peak_rss_mb()
-        mega = {
-            "backend": "jax",
-            "evals": jax_oracle.evals,
-            "wall_s": round(jax_wall, 3),
-            "rows_per_s": round(jax_oracle.evals / max(jax_wall, 1e-9), 1),
-            "peak_rss_mb": round(rss_peak, 1),
-            "compiled_programs": (
-                _jax_backend._device_rounds._cache_size()
-            ),
-        }
-        claims.check(
-            "10k+-row candidate plane sweeps on jax with bounded memory "
-            "(peak RSS < 4 GB) and wall competitive with NumPy (< 2x)",
-            jax_oracle.evals >= 10_000
-            and rss_peak < 4096
-            and jax_wall < 2.0 * oracle_wall,
-            f"{jax_oracle.evals} rows in {jax_wall:.1f}s "
-            f"(numpy {oracle_wall:.1f}s), peak RSS {rss_peak:.0f} MB "
-            f"(pre-sweep {rss_before:.0f} MB), "
-            f"{mega['compiled_programs']} compiled programs",
-        )
+        mega = _mega_subprocess(n_candidates)
+        if mega is not None:
+            scaling = _mega_subprocess(n_candidates, devices=4)
+            if scaling is not None:
+                mega["scaling_4dev"] = {
+                    k: scaling[k]
+                    for k in (
+                        "wall_s", "rows_per_s", "peak_rss_mb",
+                        "device_count", "executor", "donation",
+                    )
+                }
+            jax_wall = mega["wall_s"]
+            rss_peak = mega["peak_rss_mb"]
+            claims.check(
+                "16k+-row candidate plane sweeps on jax with donated, "
+                "pipelined chunks: peak RSS <= 1.6 GB and wall "
+                "competitive with NumPy (< 2x)",
+                mega["evals"] >= 10_000
+                and rss_peak <= 1638.0
+                and jax_wall < 2.0 * oracle_wall,
+                f"{mega['evals']} rows in {jax_wall:.1f}s "
+                f"(numpy {oracle_wall:.1f}s), peak RSS {rss_peak:.0f} MB, "
+                f"{mega['compiled_programs']} compiled programs, "
+                f"executor={mega['executor']} donation={mega['donation']}",
+            )
+        else:
+            claims.check(
+                "mega-sweep subprocess leg completed",
+                False,
+                "benchmarks.mega_sweep subprocess failed; see stderr",
+            )
 
     out = {
         "backend": backend,
@@ -298,6 +359,9 @@ def run(claims) -> List[Dict]:
         "bench": "eval_matrix",
         "timestamp": round(time.time(), 1),
         "grid": {"name": grid_name, "scenarios": n},
+        # execution provenance: jax/platform/devices + executor mode and
+        # donation state the backends ran under
+        "execution": _provenance(),
         # cold numbers only mean anything relative to this: with the
         # persistent cache armed (REPRO_XLA_CACHE) "cold" is a fresh
         # process reading compiled executables off disk; without it,

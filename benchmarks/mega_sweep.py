@@ -1,0 +1,105 @@
+"""Standalone 16k+-row oracle-plane sweep with clean per-run telemetry.
+
+The mega-sweep leg of ``BENCH_eval_matrix.json`` and CI's peak-RSS /
+multi-device gates run this as a *subprocess* for two reasons the
+in-process bench cannot work around:
+
+  * ``ru_maxrss`` is a process-lifetime high-water mark, so an
+    in-process measurement inherits whatever the earlier full-grid legs
+    peaked at — a fresh process measures the sweep itself;
+  * the XLA host device count is fixed at jax import
+    (``--xla_force_host_platform_device_count``), so a 4-simulated-device
+    scaling row needs its own interpreter.
+
+Prints one JSON object on stdout (last line). ``--assert-rss-mb`` turns
+it into a regression gate: non-zero exit when the sweep's peak RSS
+exceeds the bound.
+
+Usage::
+
+    PYTHONPATH=src:. python -m benchmarks.mega_sweep \
+        --devices 4 --candidates 64 --json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import resource
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--devices", type=int, default=0,
+        help="simulate N host devices (0 = leave jax alone); must be "
+        "applied before jax imports, which is why this is its own "
+        "process",
+    )
+    ap.add_argument("--candidates", type=int, default=64)
+    ap.add_argument("--backend", default="jax")
+    ap.add_argument("--matrix", default="full",
+                    choices=("smoke", "default", "full"))
+    ap.add_argument(
+        "--executor", default=None, choices=("serial", "async"),
+        help="chunk executor mode (default: REPRO_FABRIC_EXECUTOR/async)",
+    )
+    ap.add_argument(
+        "--assert-rss-mb", type=float, default=None,
+        help="fail (exit 1) if the sweep's peak RSS exceeds this bound",
+    )
+    args = ap.parse_args(argv)
+
+    if args.devices:
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + flags
+        )
+    # everything jax-adjacent imports after the flag is set
+    import jax
+
+    from repro.eval.fabric import executor as fabric_executor
+    from repro.eval.fabric import jax_backend
+    from repro.eval.runner import build_matrix
+    from repro.eval.tune import oracle_search
+
+    scenarios = build_matrix(args.matrix)
+    t0 = time.perf_counter()
+    result = oracle_search(
+        scenarios,
+        backend=args.backend,
+        n_candidates=args.candidates,
+        executor=args.executor,
+    )
+    wall = time.perf_counter() - t0
+    peak_rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    row = {
+        "evals": result.evals,
+        "wall_s": round(wall, 3),
+        "rows_per_s": round(result.evals / max(wall, 1e-9), 1),
+        "peak_rss_mb": round(peak_rss, 1),
+        "backend": args.backend,
+        "matrix": args.matrix,
+        "jax_version": jax.__version__,
+        "platform": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "executor": fabric_executor.executor_mode(args.executor),
+        "donation": jax_backend.donation_enabled(),
+        "compiled_programs": jax_backend.compiled_program_count(),
+    }
+    print(json.dumps(row))
+    if args.assert_rss_mb is not None and peak_rss > args.assert_rss_mb:
+        print(
+            f"FAIL: peak RSS {peak_rss:.0f} MB exceeds the "
+            f"{args.assert_rss_mb:.0f} MB gate",
+            file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -45,6 +45,12 @@ MIN_ROW_PAD = 8
 #: more compiled program
 QSIZES_FLOOR = 1024
 
+#: the smallest padded device shape compaction will descend to (the jax
+#: driver's deterministic quarter-step rung policy bottoms out here);
+#: shared with :func:`signature_ladder` so the executor's AOT warm-start
+#: pre-builds exactly the rungs a running batch can reach
+COMPACT_FLOOR = 64
+
 #: chunk remainders below this are not split further into power-of-two
 #: spans but padded as one chunk — a 32-row padded tail beats three
 #: extra device batches with their own fixed dispatch cost
@@ -138,3 +144,19 @@ def canonical_signature(sim) -> Tuple[int, ...]:
         sim.tl_t.shape[1],
         qsizes_pad(sim.qsizes.shape[0]),
     )
+
+
+def signature_ladder(sig: Tuple[int, ...]) -> Tuple[Tuple[int, ...], ...]:
+    """Every signature a batch starting at ``sig`` can occupy over its
+    lifetime: the initial shape plus the deterministic quarter-step
+    compaction rungs of the rows axis (``R, R//4, ..., COMPACT_FLOOR``
+    — only the rows axis moves; compaction never reshapes C/K/P/B/T/Q).
+    The executor AOT-warms exactly this set per chunk, so mid-run
+    compaction re-entry hits a pre-built executable too."""
+    rows = int(sig[0])
+    rest = tuple(sig[1:])
+    out = [(rows,) + rest]
+    while rows > COMPACT_FLOOR:
+        rows = max(rows // 4, COMPACT_FLOOR)
+        out.append((rows,) + rest)
+    return tuple(out)

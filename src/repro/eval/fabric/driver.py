@@ -173,6 +173,12 @@ class FabricSimulation:
     device loop is already fused).
     """
 
+    #: whether the driver accepts a ``device=`` kwarg and benefits from
+    #: the executor's round-robin device sharding (the JAX subclass flips
+    #: this; the eager NumPy driver has no device axis, so the pipelined
+    #: executor still overlaps its prep and compute but never pins it)
+    supports_device_placement = False
+
     def __init__(
         self,
         sims: Sequence[Simulation],

@@ -1,0 +1,245 @@
+"""Overlap-pipelined, multi-device chunk executor for the batched sweeps.
+
+``runner.run_built`` used to execute chunks strictly serially: build one
+chunk's Simulations on the host (scenario assembly, ``build_files``,
+padding/bucketing), run the driver, block on the download, repeat — the
+host sat idle while the device ran and vice versa. This module replaces
+that loop with a small pipeline:
+
+  * one **prep thread** walks the chunks in order, builds each chunk's
+    Simulations and driver, submits its canonical-signature ladder to a
+    background AOT warm thread (jax), and hands the ready driver to a
+    bounded per-device queue — explicit double-buffered staging: while
+    device ``d`` computes chunk ``j``, chunk ``j + n_devices`` is already
+    built and waiting in ``d``'s queue, and the chunk after that is being
+    built;
+  * one **compute worker per device** drains its queue, runs the driver
+    (pinned to that device via ``device=`` for drivers that advertise
+    ``supports_device_placement``), and writes results straight into the
+    shared results list at the chunk's original indices — results are
+    always in input order, independent of interleaving;
+  * chunks round-robin across ``jax.devices()``, so the oracle/tuner
+    planes scale with device count (validated on CPU hosts via
+    ``--xla_force_host_platform_device_count=N``, as ``launch/dryrun.py``
+    does).
+
+The queue bound is the backpressure: at most ``queue_depth`` staged
+chunks per device plus the one being built, so peak host memory stays a
+small constant multiple of one chunk — not the whole sweep.
+
+``REPRO_FABRIC_EXECUTOR=serial`` is the escape hatch: it restores the
+exact pre-pipeline execution path (same thread, same loop, no device
+pinning, no AOT warm, donation off unless forced) for debugging — a
+traceback then points at a plain call stack, and buffer donation cannot
+be a variable. ``REPRO_FABRIC_EXECUTOR_DEPTH`` overrides the staging
+depth.
+
+Any worker/prep exception cancels the pipeline (remaining chunks are
+discarded) and re-raises in the caller, so failure behaviour matches the
+serial loop's fail-fast semantics.
+"""
+from __future__ import annotations
+
+import os
+import queue
+import threading
+from typing import Callable, List, Optional, Sequence
+
+#: recognised ``REPRO_FABRIC_EXECUTOR`` values
+EXECUTOR_MODES = ("serial", "async")
+
+#: staged (built-but-not-running) chunks per device: 1 is classic double
+#: buffering — one chunk in flight, one staged, one being built
+DEFAULT_QUEUE_DEPTH = 1
+
+
+def executor_mode(override: Optional[str] = None) -> str:
+    """Resolve the executor mode: explicit ``override`` (a run_built /
+    run_matrix kwarg or CLI flag) wins, then ``REPRO_FABRIC_EXECUTOR``,
+    then the async default."""
+    mode = override or os.environ.get("REPRO_FABRIC_EXECUTOR") or "async"
+    if mode not in EXECUTOR_MODES:
+        raise ValueError(
+            f"unknown executor mode {mode!r}; options: {EXECUTOR_MODES}"
+        )
+    return mode
+
+
+def backend_devices(cls) -> list:
+    """The device list the executor shards over: ``jax.devices()`` for
+    drivers that support placement, else a single anonymous slot (the
+    NumPy driver still gets prep/compute overlap from the pipeline)."""
+    if getattr(cls, "supports_device_placement", False):
+        import jax
+
+        return list(jax.devices())
+    return [None]
+
+
+def _queue_depth(depth: Optional[int]) -> int:
+    if depth is None:
+        depth = int(
+            os.environ.get("REPRO_FABRIC_EXECUTOR_DEPTH", DEFAULT_QUEUE_DEPTH)
+        )
+    return max(1, depth)
+
+
+def _warm_chunk(driver) -> None:
+    """AOT-compile the chunk's signature ladder (initial shape + every
+    compaction rung) so the compute worker finds ready executables."""
+    from . import jax_backend
+    from .bucketing import canonical_signature, signature_ladder
+
+    try:
+        sig = canonical_signature(driver)
+    except Exception:
+        return  # custom schedulers may defeat the closed-form bound
+    for rung in signature_ladder(sig):
+        jax_backend.warm_signature(
+            rung, device=driver.device, donate=driver.donate
+        )
+
+
+def execute_chunks(
+    cls,
+    parts: Sequence[Sequence[int]],
+    builders: Sequence[Callable],
+    names: Sequence[str],
+    results: List,
+    mode: Optional[str] = None,
+    queue_depth: Optional[int] = None,
+) -> List:
+    """Execute ``parts`` (lists of row indices into ``builders``) through
+    driver class ``cls``, writing each row's result to ``results[i]``.
+
+    ``mode="serial"`` runs the historical strictly-serial loop; the
+    default async pipeline overlaps host prep, device compute, and AOT
+    warming, sharding chunks across devices round-robin.
+    """
+    mode = executor_mode(mode)
+    parts = [list(p) for p in parts]
+    if mode == "serial" or len(parts) <= 0:
+        for part in parts:
+            sims = [builders[i]() for i in part]
+            out = cls(sims, names=[names[i] for i in part]).run()
+            for i, res in zip(part, out):
+                results[i] = res
+        return results
+
+    devices = backend_devices(cls)
+    placed = getattr(cls, "supports_device_placement", False)
+    # with one device there is no sharding win from pinning, and leaving
+    # device=None keeps the AOT/jit cache key shared with direct
+    # (non-executor) runs of the same shapes
+    if len(devices) == 1:
+        devices = [None]
+    depth = _queue_depth(queue_depth)
+    queues: List[queue.Queue] = [
+        queue.Queue(maxsize=depth) for _ in devices
+    ]
+    stop = threading.Event()
+    errors: List[BaseException] = []
+    err_lock = threading.Lock()
+
+    def fail(exc: BaseException) -> None:
+        with err_lock:
+            errors.append(exc)
+        stop.set()
+
+    def put(q: queue.Queue, item) -> None:
+        # bounded-queue put that aborts on pipeline failure; sentinels
+        # (None) always go through — workers drain until they see one
+        while True:
+            if stop.is_set() and item is not None:
+                return
+            try:
+                q.put(item, timeout=0.05)
+                return
+            except queue.Full:
+                continue
+
+    def prep() -> None:
+        try:
+            for j, part in enumerate(parts):
+                if stop.is_set():
+                    break
+                dev = devices[j % len(devices)]
+                sims = [builders[i]() for i in part]
+                kwargs = {"device": dev} if placed else {}
+                driver = cls(
+                    sims, names=[names[i] for i in part], **kwargs
+                )
+                if placed:
+                    warm_pool_submit(driver)
+                put(queues[j % len(devices)], (part, driver))
+        except BaseException as exc:  # builders can raise anything
+            fail(exc)
+        finally:
+            for q in queues:
+                put(q, None)
+
+    def compute(d: int) -> None:
+        q = queues[d]
+        while True:
+            item = q.get()
+            if item is None:
+                return
+            if stop.is_set():
+                continue  # keep draining so prep's puts can't wedge
+            part, driver = item
+            try:
+                out = driver.run()
+                # distinct indices per chunk: concurrent writes are safe
+                for i, res in zip(part, out):
+                    results[i] = res
+            except BaseException as exc:
+                fail(exc)
+
+    # a single warm thread: AOT compiles happen off the critical path but
+    # still one at a time (XLA compiles are already multi-threaded
+    # internally; stacking them thrashes)
+    warm_q: "queue.Queue" = queue.Queue()
+
+    def warm_loop() -> None:
+        while True:
+            driver = warm_q.get()
+            if driver is None:
+                return
+            try:
+                _warm_chunk(driver)
+            except Exception:
+                pass  # a failed warm only means the jit fallback compiles
+
+    def warm_pool_submit(driver) -> None:
+        warm_q.put(driver)
+
+    threads = [threading.Thread(target=prep, name="fabric-prep")]
+    threads += [
+        threading.Thread(target=compute, args=(d,), name=f"fabric-dev{d}")
+        for d in range(len(devices))
+    ]
+    warm_thread = None
+    if placed:
+        warm_thread = threading.Thread(
+            target=warm_loop, name="fabric-warm", daemon=True
+        )
+        warm_thread.start()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if warm_thread is not None:
+        # leftover warm work is pure prefetch — drop it, then join: an
+        # abandoned thread still inside an XLA compile when the
+        # interpreter exits aborts the whole process (std::terminate),
+        # and the join waits out at most the one in-flight compile
+        try:
+            while True:
+                warm_q.get_nowait()
+        except queue.Empty:
+            pass
+        warm_q.put(None)
+        warm_thread.join()
+    if errors:
+        raise errors[0]
+    return results

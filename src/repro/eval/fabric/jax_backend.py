@@ -39,10 +39,33 @@ proves the zero-replay property on every run.
 
 Numerics run in float64 via the scoped ``jax.experimental.enable_x64``
 context (never the global flag: the rest of the repo traces in f32).
+
+Execution-loop structure (the overlap-pipelined executor rides on it):
+
+  * the jit boundary takes *(mutable, const, qsizes)* instead of one
+    merged state dict, and only the mutable half is carried through the
+    ``while_loop`` — the read-only tables are closed over as loop
+    invariants, so the carry's double buffer covers state that actually
+    changes, not the decision tables;
+  * the mutable half is **donated** (``donate_argnums=0``) whenever
+    :func:`donation_enabled` says so (default: on under the async
+    executor, forced via ``REPRO_FABRIC_DONATE``), so steady-state sweeps
+    update device buffers in place instead of allocating a second copy.
+    Donated buffers are dead after the call — the driver re-uploads from
+    host NumPy each round and never touches a donated array again;
+  * each batch can be pinned to a device (``device=``) — the executor
+    round-robins chunks across ``jax.devices()``;
+  * :func:`warm_signature` AOT-compiles (``jit(...).lower().compile()``)
+    the loop for a canonical :func:`bucketing.canonical_signature` before
+    the first chunk needs it, taking the ~1 s/signature Python retrace
+    off the critical path. ``SYNC_STATS`` merges are per-run atomic so
+    interleaved chunks report the same totals as serial execution.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+import os
+import threading
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,7 +75,7 @@ from jax import lax
 from repro.core.simulator import SimResult, Simulation
 
 from . import controllers, kernels
-from .bucketing import MIN_ROW_PAD, bucket, qsizes_pad
+from .bucketing import COMPACT_FLOOR, MIN_ROW_PAD, bucket, qsizes_pad
 from .driver import (
     _EPS,
     _NO_CHUNK,
@@ -100,10 +123,57 @@ SYNC_STATS = {
     "runs": 0,
 }
 
+#: guards SYNC_STATS: under the pipelined executor several driver
+#: instances finish concurrently, and each merges its private per-run
+#: counters in one locked step — interleaved chunks therefore report
+#: exactly the totals serial execution would
+_SYNC_LOCK = threading.Lock()
+
 
 def reset_sync_stats() -> None:
-    for k in SYNC_STATS:
-        SYNC_STATS[k] = 0
+    with _SYNC_LOCK:
+        for k in SYNC_STATS:
+            SYNC_STATS[k] = 0
+
+
+def _merge_sync_stats(local: dict) -> None:
+    with _SYNC_LOCK:
+        for k, v in local.items():
+            SYNC_STATS[k] += v
+
+
+def _persistent_cache_active() -> bool:
+    try:
+        return bool(jax.config.jax_compilation_cache_dir)
+    except Exception:
+        return False
+
+
+def donation_enabled(default: Optional[bool] = None) -> bool:
+    """Resolve the buffer-donation toggle: ``REPRO_FABRIC_DONATE`` wins,
+    else ``default`` (a driver kwarg), else on exactly when the async
+    executor is active — ``REPRO_FABRIC_EXECUTOR=serial`` preserves the
+    undonated pre-executor execution path byte for byte.
+
+    Donation is forced OFF while a persistent compilation cache is
+    configured (``REPRO_XLA_CACHE`` / ``jax_compilation_cache_dir``):
+    on jax 0.4.x CPU, donated executables of this program do not
+    survive the cache's serialize/deserialize round trip — a program
+    read back from disk aliases stale buffers and produces
+    nondeterministic garbage (diverging schedulers, phantom stranded
+    chunks). Fresh compiles of the identical donated program are
+    correct, so the guard only bites cache *reads*; the explicit env
+    override still wins for anyone bisecting that upstream bug."""
+    env = os.environ.get("REPRO_FABRIC_DONATE")
+    if env is not None:
+        return env.strip().lower() not in ("0", "false", "off", "no", "")
+    if _persistent_cache_active():
+        return False
+    if default is not None:
+        return bool(default)
+    from .executor import executor_mode
+
+    return executor_mode() == "async"
 
 
 #: state arrays the device sweep may mutate (host <-> device sync set)
@@ -503,13 +573,23 @@ def _phase_move(row: dict, qsizes):
     )
 
 
-@jax.jit
-def _device_rounds(state: dict, qsizes):
+#: the while_loop carry: everything the device may write. The read-only
+#: tables (``_CONST_STATIC``) are *not* carried — they're closed over as
+#: loop invariants — so the carry's double buffer, and the donation
+#: aliasing below, cover exactly the state that changes.
+_CARRY = _MUTABLE + _SCRATCH
+
+
+def _device_rounds_fn(mut: dict, const: dict, qsizes):
     """Advance every runnable scenario to its own next Python decision
     point (or completion): vmapped sweeps inside lax.while_loop. Each
     sweep is phase A (always) plus controller phases B/C/D gated by
     batch-level ``lax.cond`` — completions, ProMC ticks, and fired moves
     are sparse across sweeps, so most iterations pay phase A alone.
+
+    ``mut`` is the carried (and donatable) half; ``const`` the per-batch
+    read-only tables, merged into the phase row-dicts each iteration and
+    stripped before the carry closes.
     """
     import functools
 
@@ -529,7 +609,7 @@ def _device_rounds(state: dict, qsizes):
             & (st["err"] == _ERR_NONE)
         )
 
-    start_count = jnp.sum(runnable(state))
+    start_count = jnp.sum(runnable(mut))
 
     def cond(carry):
         st, it = carry
@@ -546,6 +626,7 @@ def _device_rounds(state: dict, qsizes):
 
     def body(carry):
         st, it = carry
+        st = {**st, **const}
         # resume files are rare: feed through the pure-FIFO phase-A
         # variant unless some row's stack holds one
         st = lax.cond(
@@ -571,10 +652,189 @@ def _device_rounds(state: dict, qsizes):
             jnp.any(st["_moving"]), lambda s: phase_d(s, qsizes),
             lambda s: s, st,
         )
-        return st, it + 1
+        return {k: st[k] for k in _CARRY}, it + 1
 
-    state, iters = lax.while_loop(cond, body, (state, 0))
+    state, iters = lax.while_loop(cond, body, (dict(mut), 0))
     return state, iters
+
+
+#: the undonated loop (exact pre-executor semantics: inputs stay live)
+_device_rounds = jax.jit(_device_rounds_fn)
+#: the donated twin: the mutable carry updates in place, halving the
+#: loop's peak device footprint. The driver re-uploads from host NumPy
+#: every round, so donated inputs are never read again.
+_device_rounds_donated = jax.jit(_device_rounds_fn, donate_argnums=0)
+
+
+# ------------------------------------------------------------------ #
+# AOT warm-start: pre-compile the canonical-signature ladder
+# ------------------------------------------------------------------ #
+
+#: per-key shape templates over the canonical signature axes
+#: (rows, C, K, P, B, T, Q); ``signature_shapes`` instantiates them.
+#: Kept explicit — and honest via the test that diffs it against a real
+#: ``_upload`` — because AOT avals must match runtime uploads exactly.
+_F64, _I64, _BOOL = np.float64, np.int64, np.bool_
+_SHAPE_TABLE = {
+    # mutable scalars (rows,)
+    "t": ("S", _F64), "next_tick": ("S", _F64), "finish_t": ("S", _F64),
+    "tl_last_t": ("S", _F64), "tl_last_rate": ("S", _F64),
+    "done": ("S", _BOOL), "fin_any": ("S", _BOOL),
+    "n_events": ("S", _I64), "stall": ("S", _I64), "err": ("S", _I64),
+    "streak": ("S", _I64), "pair_fast": ("S", _I64),
+    "pair_slow": ("S", _I64), "sc_cursor": ("S", _I64),
+    "n_moves": ("S", _I64), "tl_len": ("S", _I64),
+    "tl_stride": ("S", _I64), "tl_seen": ("S", _I64),
+    # channel axis (rows, C)
+    "dead": ("SC", _F64), "rem": ("SC", _F64), "cap": ("SC", _F64),
+    "busy": ("SC", _BOOL), "chunk_of": ("SC", _I64),
+    # chunk axis (rows, K)
+    "chunk_done": ("SK", _BOOL), "completed_at": ("SK", _F64),
+    "delivered": ("SK", _F64), "delivered_at_tick": ("SK", _F64),
+    "rate_est": ("SK", _F64), "queue_bytes": ("SK", _F64),
+    "qptr": ("SK", _I64), "prepend_n": ("SK", _I64),
+    # resume stack + timeline ring
+    "prepend_sizes": ("SKP", _F64),
+    "tl_t": ("ST", _F64), "tl_rate": ("ST", _F64),
+    # per-sweep scratch
+    "_completed": ("SK", _BOOL), "_handler": ("S", _BOOL),
+    "_tick": ("S", _BOOL), "_moving": ("S", _BOOL),
+    "_msrc": ("S", _I64), "_mdst": ("S", _I64),
+    # read-only tables
+    "max_time": ("S", _F64), "tick_period": ("S", _F64),
+    "bw": ("S", _F64), "disk_rate": ("S", _F64),
+    "contention": ("S", _F64), "setup_cost": ("S", _F64),
+    "promc_ratio": ("S", _F64),
+    "trivial_tick": ("S", _BOOL), "trivial_complete": ("S", _BOOL),
+    "record_timeline": ("S", _BOOL),
+    "sat_cc": ("S", _I64), "kind": ("S", _I64),
+    "promc_patience": ("S", _I64), "n_chunks": ("S", _I64),
+    "cap_need": ("S", _I64),
+    "qoff": ("SK", _I64), "qlen": ("SK", _I64), "sc_order": ("SK", _I64),
+    "conc": ("SK", _I64), "par": ("SK", _I64), "nfiles": ("SK", _I64),
+    "fsdt": ("SK", _F64), "cap_k": ("SK", _F64), "avg_fs_k": ("SK", _F64),
+    "prof_t": ("SB", _F64), "prof_mult": ("SB", _F64),
+}
+
+
+def signature_shapes(
+    sig: Tuple[int, ...], device=None
+) -> Tuple[dict, dict, jax.ShapeDtypeStruct]:
+    """``(mut, const, qsizes)`` aval pytrees for one canonical signature
+    ``(rows, C, K, P, B, T, Q)`` — exactly what :meth:`JaxFabricSimulation.
+    _upload` produces for a batch occupying that signature, so
+    ``jit(...).lower(*signature_shapes(sig)).compile()`` pre-builds the
+    very executable the runtime call will look up."""
+    rows, C, K, P, B, T, Q = sig
+    dims = {
+        "S": (rows,), "SC": (rows, C), "SK": (rows, K),
+        "SKP": (rows, K, P), "ST": (rows, T), "SB": (rows, B),
+    }
+    sharding = None
+    if device is not None:
+        from jax.sharding import SingleDeviceSharding
+
+        sharding = SingleDeviceSharding(device)
+
+    def aval(shape, dt):
+        if sharding is not None:
+            return jax.ShapeDtypeStruct(shape, dt, sharding=sharding)
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    mut = {k: aval(dims[_SHAPE_TABLE[k][0]], _SHAPE_TABLE[k][1])
+           for k in _CARRY}
+    const = {k: aval(dims[_SHAPE_TABLE[k][0]], _SHAPE_TABLE[k][1])
+             for k in _CONST_STATIC}
+    return mut, const, aval((Q,), _F64)
+
+
+_AOT_LOCK = threading.Lock()
+#: ``(sig, device, donate) -> jax.stages.Compiled`` (``None`` records a
+#: failed warm so the jit fallback handles that signature quietly)
+_AOT_CACHE: dict = {}
+#: in-flight warms: waiters block on the event instead of re-compiling
+_AOT_PENDING: dict = {}
+
+
+def _aot_key(sig, device, donate):
+    return (tuple(int(x) for x in sig), device, bool(donate))
+
+
+def warm_signature(sig, device=None, donate: Optional[bool] = None) -> bool:
+    """AOT-compile the device loop for one canonical signature (exactly
+    once per ``(sig, device, donate)`` process-wide; concurrent callers
+    wait). Returns True if this call did the compile. The executor warms
+    each chunk's signature — and its compaction rungs — from a background
+    thread while earlier chunks compute, so by the time a chunk reaches
+    the device its executable already exists and the ~1 s/signature
+    Python retrace never lands on the critical path."""
+    donate = donation_enabled(donate)
+    key = _aot_key(sig, device, donate)
+    with _AOT_LOCK:
+        if key in _AOT_CACHE:
+            return False
+        ev = _AOT_PENDING.get(key)
+        if ev is not None:
+            owner = False
+        else:
+            ev = threading.Event()
+            _AOT_PENDING[key] = ev
+            owner = True
+    if not owner:
+        ev.wait()
+        return False
+    compiled = None
+    try:
+        from jax.experimental import enable_x64
+
+        # x64 is thread-local: the warm thread needs its own context so
+        # the traced avals match the runtime's f64 uploads
+        with enable_x64():
+            fn = _device_rounds_donated if donate else _device_rounds
+            compiled = fn.lower(*signature_shapes(sig, device)).compile()
+    except Exception:
+        compiled = None  # fall back to plain jit for this signature
+    finally:
+        with _AOT_LOCK:
+            _AOT_CACHE[key] = compiled
+            _AOT_PENDING.pop(key, None)
+        ev.set()
+    return compiled is not None
+
+
+def _aot_lookup(sig, device, donate):
+    """The compiled executable for a signature, waiting out an in-flight
+    warm (the warm thread is already doing the same compile the jit
+    fallback would pay); None if never warmed or the warm failed."""
+    key = _aot_key(sig, device, donate)
+    with _AOT_LOCK:
+        exe = _AOT_CACHE.get(key)
+        ev = _AOT_PENDING.get(key)
+    if exe is not None:
+        return exe
+    if ev is not None:
+        ev.wait()
+        with _AOT_LOCK:
+            return _AOT_CACHE.get(key)
+    return None
+
+
+def reset_aot_cache() -> None:
+    with _AOT_LOCK:
+        _AOT_CACHE.clear()
+
+
+def compiled_program_count() -> int:
+    """Compiled executables for the device loop across all entry points:
+    the undonated jit, the donated twin, and the AOT warm cache — the
+    bench's compile-tax telemetry and the bucketing tests count this."""
+    with _AOT_LOCK:
+        aot = sum(1 for v in _AOT_CACHE.values() if v is not None)
+    return (
+        aot
+        + _device_rounds._cache_size()
+        + _device_rounds_donated._cache_size()
+    )
 
 
 class JaxFabricSimulation(FabricSimulation):
@@ -585,15 +845,28 @@ class JaxFabricSimulation(FabricSimulation):
     point (usually: completion), downloads, and replays the parent's
     Python half for parked rows. Custom-scheduler bookkeeping (callback
     objects, views) is inherited unchanged.
+
+    ``device`` pins every upload (and the AOT executable) to one
+    ``jax.Device`` — the executor round-robins chunks across
+    ``jax.devices()`` this way; None uses the default placement.
+    ``donate`` overrides :func:`donation_enabled` for this batch.
     """
+
+    #: the executor passes ``device=`` only to drivers that advertise it
+    supports_device_placement = True
 
     def __init__(
         self,
         sims: Sequence[Simulation],
         names: Optional[Sequence[str]] = None,
+        *,
+        device=None,
+        donate: Optional[bool] = None,
         **kwargs,
     ):
         super().__init__(sims, names=names, **kwargs)
+        self.device = device
+        self.donate = donation_enabled(donate)
 
     # -------------------------------------------------------------- #
 
@@ -614,12 +887,23 @@ class JaxFabricSimulation(FabricSimulation):
             arr = np.concatenate(
                 [arr, fill((pad,) + arr.shape[1:], dtype=arr.dtype)]
             )
+        if self.device is not None:
+            return jax.device_put(arr, self.device)
         return jnp.asarray(arr)
 
-    def _upload(self) -> dict:
+    def _to_device(self, arr):
+        if self.device is not None:
+            return jax.device_put(arr, self.device)
+        return jnp.asarray(arr)
+
+    def _upload(self) -> Tuple[dict, dict]:
+        """Fresh device buffers for one round: ``(mut, const)``. ``mut``
+        is rebuilt from host NumPy every round — which is what makes
+        donating it safe — while the read-only ``const`` tables are
+        device-cached until compaction/growth reshapes the rows."""
         pad = self._pad_rows() - self.S
         rows = self.S + pad
-        state = {}
+        mut = {}
         for key in _MUTABLE:
             if key == "stall":
                 arr = self._stall
@@ -627,13 +911,15 @@ class JaxFabricSimulation(FabricSimulation):
                 arr = np.zeros(self.S, dtype=np.int64)
             else:
                 arr = getattr(self, key)
-            state[key] = self._padded(key, arr, pad)
+            mut[key] = self._padded(key, arr, pad)
         # per-sweep scratch threaded between the device phases
-        state["_completed"] = jnp.zeros((rows, self.K), dtype=bool)
+        mut["_completed"] = self._to_device(
+            np.zeros((rows, self.K), dtype=bool)
+        )
         for key in ("_handler", "_tick", "_moving"):
-            state[key] = jnp.zeros(rows, dtype=bool)
+            mut[key] = self._to_device(np.zeros(rows, dtype=bool))
         for key in ("_msrc", "_mdst"):
-            state[key] = jnp.zeros(rows, dtype=jnp.int64)
+            mut[key] = self._to_device(np.zeros(rows, dtype=np.int64))
         # statics are immutable for a given row set: cache on device and
         # rebuild only when compaction (or channel growth) reshapes rows
         cache_key = (self.S, self.C, self.P, pad)
@@ -643,8 +929,26 @@ class JaxFabricSimulation(FabricSimulation):
                 for key in _CONST_STATIC
             }
             self._static_cache_key = cache_key
-        state.update(self._static_cache)
-        return state
+        return mut, self._static_cache
+
+    def _rounds_signature(self) -> Tuple[int, ...]:
+        """The canonical signature of the *current* device shape (it
+        walks down the rows ladder as compaction fires) — the AOT-cache
+        key the next ``_device_call`` will look up."""
+        return (
+            self._pad_rows(), self.C, self.K, self.P,
+            self.prof_t.shape[1], self.tl_t.shape[1], self._q_pad,
+        )
+
+    def _device_call(self, mut: dict, const: dict, qsizes):
+        """One device round through the best available executable: the
+        AOT-warmed one when the executor pre-built it, else the jit twin
+        matching this batch's donation mode."""
+        exe = _aot_lookup(self._rounds_signature(), self.device, self.donate)
+        if exe is not None:
+            return exe(mut, const, qsizes)
+        fn = _device_rounds_donated if self.donate else _device_rounds
+        return fn(mut, const, qsizes)
 
     def _download(self, state: dict) -> None:
         for key in _MUTABLE:
@@ -709,46 +1013,62 @@ class JaxFabricSimulation(FabricSimulation):
         """
         live = self.S - int(self.done.sum())
         pad = self._pad_rows()
-        if pad > 64 and bucket(live, _MIN_PAD) * 4 <= pad:
-            self._pad_floor = max(pad // 4, 64)
+        if pad > COMPACT_FLOOR and bucket(live, _MIN_PAD) * 4 <= pad:
+            self._pad_floor = max(pad // 4, COMPACT_FLOOR)
             self._compact()
 
     def _drive(self) -> None:
         self._stall = np.zeros(self.S, dtype=np.int64)
-        SYNC_STATS["runs"] += 1
-        SYNC_STATS["scenarios"] += self.S
+        # accumulate host-sync telemetry privately and merge once at the
+        # end: under the pipelined executor several batches drive
+        # concurrently, and per-increment writes to the module-global
+        # counters would interleave (same totals, but torn reads for any
+        # observer); one locked merge per run keeps SYNC_STATS exactly
+        # serial-equivalent
+        stats = {k: 0 for k in SYNC_STATS}
+        stats["runs"] = 1
+        stats["scenarios"] = self.S
         # the flat file-size buffer is a jit-signature axis too — its raw
         # length is the batch's total file count, different for every
         # chunk, which made every chunk a fresh XLA compile. Zero-pad to
         # the quarter-step ladder; the feed kernel only reads qoff+qptr <
         # qoff+qlen, so the pad slots are dead weight (8 B each), not
         # semantics
-        q_pad = qsizes_pad(self.qsizes.shape[0])
-        qsizes_dev = jnp.asarray(
+        self._q_pad = qsizes_pad(self.qsizes.shape[0])
+        qsizes_dev = self._to_device(
             np.concatenate(
-                [self.qsizes, np.zeros(q_pad - self.qsizes.shape[0])]
+                [self.qsizes, np.zeros(self._q_pad - self.qsizes.shape[0])]
             )
         )
-        while not self.done.all():
-            progressed = False
-            runnable = ~self.done & (self._stall == _STALL_NONE)
-            if runnable.any():
-                state, iters = _device_rounds(self._upload(), qsizes_dev)
-                self._download(state)
-                SYNC_STATS["rounds"] += 1
-                progressed = int(iters) > 0
-            post_rows = ~self.done & (self._stall == _STALL_POST)
-            if post_rows.any():
-                # custom-scheduler callbacks (or a capacity guard a custom
-                # subclass defeated): replay the NumPy transition half
-                SYNC_STATS["replay_rounds"] += 1
-                SYNC_STATS["post_row_replays"] += int(post_rows.sum())
-                self._post(post_rows)
-                self._stall[post_rows] = _STALL_NONE
-                progressed = True
-            if not progressed:
-                raise RuntimeError(
-                    "jax fabric backend made no progress; device loop "
-                    f"exited with {int(runnable.sum())} runnable rows"
-                )
-            self._maybe_compact()
+        try:
+            while not self.done.all():
+                progressed = False
+                runnable = ~self.done & (self._stall == _STALL_NONE)
+                if runnable.any():
+                    mut, const = self._upload()
+                    state, iters = self._device_call(mut, const, qsizes_dev)
+                    # donated inputs are dead past this point; the next
+                    # round re-uploads from the host arrays _download
+                    # refreshes, so nothing reads them again
+                    del mut
+                    self._download(state)
+                    stats["rounds"] += 1
+                    progressed = int(iters) > 0
+                post_rows = ~self.done & (self._stall == _STALL_POST)
+                if post_rows.any():
+                    # custom-scheduler callbacks (or a capacity guard a
+                    # custom subclass defeated): replay the NumPy
+                    # transition half
+                    stats["replay_rounds"] += 1
+                    stats["post_row_replays"] += int(post_rows.sum())
+                    self._post(post_rows)
+                    self._stall[post_rows] = _STALL_NONE
+                    progressed = True
+                if not progressed:
+                    raise RuntimeError(
+                        "jax fabric backend made no progress; device loop "
+                        f"exited with {int(runnable.sum())} runnable rows"
+                    )
+                self._maybe_compact()
+        finally:
+            _merge_sync_stats(stats)

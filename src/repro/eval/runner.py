@@ -37,6 +37,7 @@ from typing import Dict, Iterable, List, Optional, Sequence
 from repro.core.simulator import SimResult, Simulation
 
 from .fabric.bucketing import bucket, chunk_spans
+from .fabric.executor import EXECUTOR_MODES, execute_chunks
 from .scenarios import (
     Scenario,
     build_files,
@@ -146,6 +147,7 @@ def run_built(
     backend: str = "numpy",
     chunk_size: Optional[int] = DEFAULT_CHUNK_SIZE,
     hints: Optional[Sequence[int]] = None,
+    executor: Optional[str] = None,
 ) -> List[SimResult]:
     """Chunked batched execution of *lazily built* Simulations.
 
@@ -164,6 +166,15 @@ def run_built(
     (the :func:`shape_hint` capacity bucket) before cost-sorting, and
     chunk spans are cut power-of-two-aligned so live rows fill the padded
     device shape instead of sweeping dead pad width.
+
+    ``executor`` picks the chunk execution strategy (see
+    :mod:`repro.eval.fabric.executor`): the default async pipeline
+    overlaps next-chunk host prep and AOT warm-compiles with in-flight
+    device compute and round-robins chunks across devices;
+    ``"serial"`` (or ``REPRO_FABRIC_EXECUTOR=serial``) restores the
+    historical strictly-serial loop. Results are in input order and
+    per-row outputs are identical under either mode — scenarios never
+    interact.
     """
     backend = _resolve_backend(backend)
     if chunk_size is not None and chunk_size <= 0:
@@ -180,12 +191,11 @@ def run_built(
             order.sort(key=lambda i: costs[i])
     size = chunk_size or BACKEND_CHUNK_SIZE[backend]
     results: List[Optional[SimResult]] = [None] * len(builders)
-    for lo, hi in chunk_spans(len(order), size, pad_aligned=aligned):
-        part = order[lo:hi]
-        sims = [builders[i]() for i in part]
-        out = cls(sims, names=[names[i] for i in part]).run()
-        for i, res in zip(part, out):
-            results[i] = res
+    parts = [
+        order[lo:hi]
+        for lo, hi in chunk_spans(len(order), size, pad_aligned=aligned)
+    ]
+    execute_chunks(cls, parts, builders, names, results, mode=executor)
     return results  # type: ignore[return-value]
 
 
@@ -193,6 +203,7 @@ def run_matrix(
     scenarios: Sequence[Scenario],
     backend: str = "numpy",
     chunk_size: Optional[int] = DEFAULT_CHUNK_SIZE,
+    executor: Optional[str] = None,
 ) -> List[SimResult]:
     """Run every scenario; order of results matches the input order."""
     return run_built(
@@ -205,6 +216,7 @@ def run_matrix(
         backend=backend,
         chunk_size=chunk_size,
         hints=[shape_hint(_effective_cc(sc)) for sc in scenarios],
+        executor=executor,
     )
 
 
@@ -315,9 +327,11 @@ def run_tune(args, scenarios: Sequence[Scenario]) -> int:
         n_candidates=args.candidates,
         history=history,
         chunk_size=args.chunk_size,
+        executor=args.executor,
     )
     heuristics = run_matrix(
-        scenarios, backend=args.backend, chunk_size=args.chunk_size
+        scenarios, backend=args.backend, chunk_size=args.chunk_size,
+        executor=args.executor,
     )
     report = tune.regret_report(scenarios, heuristics, result)
     n_ctx = len(result.tables)
@@ -351,6 +365,12 @@ def main(argv: Optional[List[str]] = None) -> int:
         "--chunk-size", type=int, default=DEFAULT_CHUNK_SIZE,
         help="scenarios per batched execution chunk (bounds memory)",
     )
+    ap.add_argument(
+        "--executor", choices=EXECUTOR_MODES, default=None,
+        help="chunk execution strategy: the overlap-pipelined multi-"
+        "device default ('async') or the historical strictly-serial "
+        "loop ('serial'); also via REPRO_FABRIC_EXECUTOR",
+    )
     ap.add_argument("--out", default="tests/golden/eval_matrix.json")
     ap.add_argument("--refresh-golden", action="store_true")
     ap.add_argument(
@@ -378,7 +398,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     if args.tune:
         return run_tune(args, scenarios)
     results = run_matrix(
-        scenarios, backend=args.backend, chunk_size=args.chunk_size
+        scenarios, backend=args.backend, chunk_size=args.chunk_size,
+        executor=args.executor,
     )
     snap = metrics_snapshot(scenarios, results)
     if args.refresh_golden:

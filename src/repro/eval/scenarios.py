@@ -15,6 +15,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import hashlib
+import threading
 from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -179,6 +180,12 @@ _FILESPEC_BYTES = 120
 _files_cache: "OrderedDict[Tuple[str, int], tuple]" = OrderedDict()
 _files_cache_bytes = 0
 _files_cache_stats = {"hits": 0, "misses": 0, "evictions": 0}
+#: guards every lookup/insert/evict above: the pipelined executor's prep
+#: thread builds the next chunk's filesets while the main thread's cost
+#: proxy reads the same cache, and OrderedDict.move_to_end during a
+#: concurrent popitem corrupts the dict. An RLock (not Lock) so a
+#: re-entrant builder that itself calls build_files can't self-deadlock.
+_files_cache_lock = threading.RLock()
 
 
 def _entry_bytes(specs: tuple) -> int:
@@ -190,49 +197,56 @@ def _entry_bytes(specs: tuple) -> int:
 def files_cache_info() -> dict:
     """Introspection for tests/benchmarks: current byte footprint,
     entry count, and hit/miss/eviction counters."""
-    return dict(
-        _files_cache_stats,
-        entries=len(_files_cache),
-        bytes=_files_cache_bytes,
-        max_bytes=FILES_CACHE_MAX_BYTES,
-    )
+    with _files_cache_lock:
+        return dict(
+            _files_cache_stats,
+            entries=len(_files_cache),
+            bytes=_files_cache_bytes,
+            max_bytes=FILES_CACHE_MAX_BYTES,
+        )
 
 
 def _build_files_cached(dataset: str, dataset_seed: int) -> tuple:
-    """Byte-bounded LRU over built filesets.
+    """Byte-bounded, thread-safe LRU over built filesets.
 
     ``functools.lru_cache(maxsize=512)`` keyed eviction on *entry count*;
     datasets differ in size by four orders of magnitude, so the bound is
     on the approximate bytes pinned instead — oldest entries fall out
     until the new entry fits. Entries are immutable tuples of frozen
     FileSpecs, shared across every caller (sweeps over the same context
-    reference one fileset, they don't copy it).
+    reference one fileset, they don't copy it). The lock covers the
+    build too: two threads missing on the same key then build it once,
+    not twice (generator cost is the whole point of the cache).
     """
     global _files_cache_bytes
     key = (dataset, dataset_seed)
-    entry = _files_cache.get(key)
-    if entry is not None:
-        _files_cache.move_to_end(key)
-        _files_cache_stats["hits"] += 1
+    with _files_cache_lock:
+        entry = _files_cache.get(key)
+        if entry is not None:
+            _files_cache.move_to_end(key)
+            _files_cache_stats["hits"] += 1
+            return entry
+        try:
+            builder = DATASET_BUILDERS[dataset]
+        except KeyError:
+            raise ValueError(
+                f"unknown dataset {dataset!r}; "
+                f"options: {sorted(DATASET_BUILDERS)}"
+            )
+        _files_cache_stats["misses"] += 1
+        entry = tuple(builder(dataset_seed))
+        cost = _entry_bytes(entry)
+        while (
+            _files_cache
+            and _files_cache_bytes + cost > FILES_CACHE_MAX_BYTES
+        ):
+            _, old = _files_cache.popitem(last=False)
+            _files_cache_bytes -= _entry_bytes(old)
+            _files_cache_stats["evictions"] += 1
+        if cost <= FILES_CACHE_MAX_BYTES:
+            _files_cache[key] = entry
+            _files_cache_bytes += cost
         return entry
-    try:
-        builder = DATASET_BUILDERS[dataset]
-    except KeyError:
-        raise ValueError(
-            f"unknown dataset {dataset!r}; "
-            f"options: {sorted(DATASET_BUILDERS)}"
-        )
-    _files_cache_stats["misses"] += 1
-    entry = tuple(builder(dataset_seed))
-    cost = _entry_bytes(entry)
-    while _files_cache and _files_cache_bytes + cost > FILES_CACHE_MAX_BYTES:
-        _, old = _files_cache.popitem(last=False)
-        _files_cache_bytes -= _entry_bytes(old)
-        _files_cache_stats["evictions"] += 1
-    if cost <= FILES_CACHE_MAX_BYTES:
-        _files_cache[key] = entry
-        _files_cache_bytes += cost
-    return entry
 
 
 def build_files(scenario: Scenario) -> List[FileSpec]:

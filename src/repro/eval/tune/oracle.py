@@ -189,6 +189,7 @@ def oracle_search(
     space: Optional[Callable[[Scenario], Sequence]] = None,
     history=None,
     chunk_size: Optional[int] = DEFAULT_CHUNK_SIZE,
+    executor: Optional[str] = None,
 ) -> TuneResult:
     """Exhaustive grid search, executed as one batched sweep.
 
@@ -213,7 +214,10 @@ def oracle_search(
         rows = expand_candidates([reps[key]], cands[key])
         spans.append((key, len(expanded), len(expanded) + len(rows)))
         expanded.extend(rows)
-    results = run_matrix(expanded, backend=backend, chunk_size=chunk_size)
+    results = run_matrix(
+        expanded, backend=backend, chunk_size=chunk_size,
+        executor=executor,
+    )
     tables: Dict[ContextKey, ContextTable] = {}
     for key, lo, hi in spans:
         tables[key] = ContextTable(

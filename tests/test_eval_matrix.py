@@ -284,3 +284,48 @@ def test_matrix_promc_starved_concurrency():
     ba = BatchSimulation([build_simulation(sc)], names=[sc.name]).run()[0]
     assert ev.total_time > 0
     assert ba.throughput == pytest.approx(ev.throughput, rel=1e-9)
+
+
+# ------------------------------------------------------------------ #
+# result-ordering invariant: the executor never reorders rows
+# ------------------------------------------------------------------ #
+
+
+def test_matrix_results_keep_input_order_across_executors():
+    """``run_matrix`` promises results in input order. The pipelined
+    executor completes chunks out of order (different devices, different
+    runtimes), chunking regroups rows by shape hint, and per-scenario
+    results must still land at the row's input index — pin that against
+    a deliberately shuffled, heterogeneous matrix."""
+    scenarios = [
+        Scenario(
+            network=net, dataset=ds, algorithm=algo, max_cc=cc, seed=i,
+        )
+        for i, (net, ds, algo, cc) in enumerate(
+            (
+                (testbeds.XSEDE.name, "mixed", "promc", 8),
+                (testbeds.LAN.name, "uniform_small", "sc", 2),
+                (testbeds.LONI.name, "mixed", "mc", 4),
+                (testbeds.LAN.name, "mixed", "promc", 2),
+                (testbeds.XSEDE.name, "uniform_small", "mc", 6),
+                (testbeds.LONI.name, "uniform_small", "sc", 4),
+                (testbeds.LAN.name, "mixed", "sc", 6),
+            )
+        )
+    ]
+    reference = {
+        sc.name: build_simulation(sc).run() for sc in scenarios
+    }
+    for executor in ("serial", "async"):
+        for chunk_size in (2, 3, 64):
+            out = run_matrix(
+                scenarios, backend="numpy", chunk_size=chunk_size,
+                executor=executor,
+            )
+            assert len(out) == len(scenarios)
+            for sc, r in zip(scenarios, out):
+                ref = reference[sc.name]
+                assert r.total_bytes == ref.total_bytes, sc.name
+                assert r.throughput == pytest.approx(
+                    ref.throughput, rel=1e-9
+                ), (executor, chunk_size, sc.name)

@@ -160,3 +160,53 @@ def test_fuzz_degenerate_single_zero_file():
     assert abs(
         out["numpy"].total_time - out["event"].total_time
     ) <= 1e-9 * max(out["event"].total_time, 1.0)
+
+
+@settings(max_examples=4, deadline=None, derandomize=True)
+@given(
+    bw_gbps=st.sampled_from([2.0, 30.0]),
+    rtt_ms=st.sampled_from([0.2, 60.0]),
+    algo=st.sampled_from(["sc", "mc", "promc"]),
+    max_cc=st.sampled_from([2, 8]),
+    n_variants=st.sampled_from([5, 9]),
+)
+def test_fuzz_async_executor_matches_event(
+    bw_gbps, rtt_ms, algo, max_cc, n_variants,
+):
+    """The same fuzz-style draws pushed through ``run_built`` with the
+    overlap-pipelined executor and a tiny chunk size (forcing several
+    in-flight chunks): per-row results must match the event reference
+    within the difftest bar and land at their input index."""
+    from repro.eval.runner import run_built
+
+    net = _network(bw_gbps, rtt_ms, 4, 0.9, 8, 0.02, 12.0, None, None)
+    variants = [
+        [FileSpec(f"f{i}", SIZE_POOL[(i + v) % len(SIZE_POOL)])
+         for i in range(1 + v)]
+        for v in range(n_variants)
+    ]
+
+    def make_builder(files):
+        def build():
+            sched = build_scheduler(
+                algo, files, net, max_cc=max_cc, num_chunks=2
+            )
+            return Simulation(
+                sched.chunks, sched.network, sched, tick_period=2.5
+            )
+        return build
+
+    builders = [make_builder(f) for f in variants]
+    names = [f"v{v}" for v in range(n_variants)]
+    ev = [b().run() for b in builders]
+    for backend in ("numpy", "jax"):
+        out = run_built(
+            builders, names, backend=backend, chunk_size=2,
+            executor="async",
+        )
+        for i, (e, r) in enumerate(zip(ev, out)):
+            assert r.total_bytes == e.total_bytes, i
+            rel = abs(r.throughput - e.throughput) / max(
+                abs(e.throughput), 1e-12
+            )
+            assert rel <= RTOL, (backend, i, rel)

@@ -29,6 +29,7 @@ from repro.eval.fabric.bucketing import (
     bucket,
     canonical_signature,
     chunk_spans,
+    signature_ladder,
 )
 from repro.eval.fabric.driver import FabricSimulation
 from repro.eval.fabric.jax_backend import JaxFabricSimulation
@@ -106,14 +107,15 @@ def _jax_batch(n_rows):
 def test_bucketed_batches_share_one_compiled_program():
     """3 rows / 120 files and 5 rows / 200 files land on the same
     (S=8, ..., Q=1024) signature: the second batch must add zero
-    entries to the jit cache."""
+    compiled programs (jit caches for both donation twins plus the
+    AOT cache — direct runs may use either)."""
     a, b = _jax_batch(3), _jax_batch(5)
     assert a.S != b.S  # genuinely different raw shapes
     assert a.qsizes.shape != b.qsizes.shape
     ra = a.run()
-    n_compiles = jax_backend._device_rounds._cache_size()
+    n_compiles = jax_backend.compiled_program_count()
     rb = b.run()
-    assert jax_backend._device_rounds._cache_size() == n_compiles
+    assert jax_backend.compiled_program_count() == n_compiles
     # same scenario -> identical results regardless of batch shape
     assert rb[0].total_time == pytest.approx(ra[0].total_time)
     assert rb[0].total_bytes == ra[0].total_bytes
@@ -165,12 +167,10 @@ def test_full_grid_pad_ladder_stays_small():
             fs._grow_prepend()
         sig = canonical_signature(fs)
         sigs.add(sig)
-        # deterministic quarter-step compaction rungs, 64-row floor
-        # (JaxFabricSimulation._maybe_compact)
-        pad = sig[0]
-        while pad > 64:
-            pad = max(pad // 4, 64)
-            sigs.add((pad,) + sig[1:])
+        # deterministic quarter-step compaction rungs, COMPACT_FLOOR
+        # floor (JaxFabricSimulation._maybe_compact) — the same ladder
+        # the executor AOT-warms per chunk
+        sigs.update(signature_ladder(sig))
     assert len(sigs) <= 8, sorted(sigs)
     # and each one is entirely on the ladder
     for rows, C, K, P, B, T, Q in sigs:
