@@ -205,17 +205,33 @@ def _time_tuner(scenarios, grid_name: str, claims, heuristics) -> Dict:
             jax_wall = mega["wall_s"]
             rss_peak = mega["peak_rss_mb"]
             claims.check(
-                "16k+-row candidate plane sweeps on jax with donated, "
-                "pipelined chunks: peak RSS <= 1.6 GB and wall "
-                "competitive with NumPy (< 2x)",
+                "16k+-row candidate plane sweeps on jax via columnar "
+                "plan ingest: peak RSS <= 1.6 GB and wall >= 1.5x "
+                "faster than the NumPy oracle (warm cache)",
                 mega["evals"] >= 10_000
                 and rss_peak <= 1638.0
-                and jax_wall < 2.0 * oracle_wall,
+                and jax_wall * 1.5 <= oracle_wall,
                 f"{mega['evals']} rows in {jax_wall:.1f}s "
                 f"(numpy {oracle_wall:.1f}s), peak RSS {rss_peak:.0f} MB, "
                 f"{mega['compiled_programs']} compiled programs, "
                 f"executor={mega['executor']} donation={mega['donation']}",
             )
+            if scaling is not None:
+                # multi-core hosts must scale positive across devices;
+                # on a single core the executor caps the virtual-device
+                # fanout, so the row degenerates to the 1-device path
+                # and only gross collapse (the pre-cap 0.44x) is wrong
+                cores = os.cpu_count() or 1
+                floor = 1.0 if cores >= 2 else 0.9
+                claims.check(
+                    "4-simulated-device sweep holds the 1-device rate "
+                    "(>= 1.0x on multi-core hosts; >= 0.9x on one core "
+                    "where virtual devices share it)",
+                    scaling["rows_per_s"] >= floor * mega["rows_per_s"],
+                    f"{scaling['rows_per_s']:.0f} vs "
+                    f"{mega['rows_per_s']:.0f} rows/s "
+                    f"({cores} cores)",
+                )
         else:
             claims.check(
                 "mega-sweep subprocess leg completed",

@@ -11,9 +11,10 @@ in-process bench cannot work around:
     (``--xla_force_host_platform_device_count``), so a 4-simulated-device
     scaling row needs its own interpreter.
 
-Prints one JSON object on stdout (last line). ``--assert-rss-mb`` turns
-it into a regression gate: non-zero exit when the sweep's peak RSS
-exceeds the bound.
+Prints one JSON object on stdout (last line). ``--assert-rss-mb`` and
+``--assert-min-rows-per-s`` turn it into a regression gate: non-zero
+exit when the sweep's peak RSS exceeds the bound or its throughput
+falls below it.
 
 Usage::
 
@@ -49,6 +50,12 @@ def main(argv=None) -> int:
     ap.add_argument(
         "--assert-rss-mb", type=float, default=None,
         help="fail (exit 1) if the sweep's peak RSS exceeds this bound",
+    )
+    ap.add_argument(
+        "--assert-min-rows-per-s", type=float, default=None,
+        help="fail (exit 1) if the sweep's throughput falls below this "
+        "bound — CI runs the 4-device sweep against the measured "
+        "1-device rate so multi-device scaling can't silently regress",
     )
     args = ap.parse_args(argv)
 
@@ -95,6 +102,16 @@ def main(argv=None) -> int:
         print(
             f"FAIL: peak RSS {peak_rss:.0f} MB exceeds the "
             f"{args.assert_rss_mb:.0f} MB gate",
+            file=sys.stderr,
+        )
+        return 1
+    if (
+        args.assert_min_rows_per_s is not None
+        and row["rows_per_s"] < args.assert_min_rows_per_s
+    ):
+        print(
+            f"FAIL: {row['rows_per_s']:.1f} rows/s below the "
+            f"{args.assert_min_rows_per_s:.1f} rows/s gate",
             file=sys.stderr,
         )
         return 1

@@ -48,7 +48,11 @@ QSIZES_FLOOR = 1024
 #: the smallest padded device shape compaction will descend to (the jax
 #: driver's deterministic quarter-step rung policy bottoms out here);
 #: shared with :func:`signature_ladder` so the executor's AOT warm-start
-#: pre-builds exactly the rungs a running batch can reach
+#: pre-builds exactly the rungs a running batch can reach. Straggler
+#: tails run thousands of narrow sweeps whose cost is linear in the pad
+#: width, so the heterogeneous full grid needs the 64 rung; each extra
+#: rung is one more program per (C, B) family, which the jax.export
+#: trace cache keeps to ~0.3 s/program in warm processes
 COMPACT_FLOOR = 64
 
 #: chunk remainders below this are not split further into power-of-two
@@ -136,7 +140,7 @@ def canonical_signature(sim) -> Tuple[int, ...]:
     """
     need_c, need_p = sim.capacity_need()
     return (
-        bucket(sim.S, MIN_ROW_PAD),
+        bucket(max(sim.S, getattr(sim, "_pad_floor", 0)), MIN_ROW_PAD),
         bucket(need_c, sim.C),
         sim.K,
         bucket(need_p, sim.P),
@@ -146,17 +150,23 @@ def canonical_signature(sim) -> Tuple[int, ...]:
     )
 
 
-def signature_ladder(sig: Tuple[int, ...]) -> Tuple[Tuple[int, ...], ...]:
+def signature_ladder(
+    sig: Tuple[int, ...], floor: int = COMPACT_FLOOR
+) -> Tuple[Tuple[int, ...], ...]:
     """Every signature a batch starting at ``sig`` can occupy over its
     lifetime: the initial shape plus the deterministic quarter-step
-    compaction rungs of the rows axis (``R, R//4, ..., COMPACT_FLOOR``
-    — only the rows axis moves; compaction never reshapes C/K/P/B/T/Q).
-    The executor AOT-warms exactly this set per chunk, so mid-run
-    compaction re-entry hits a pre-built executable too."""
+    compaction rungs of the rows axis (``R, R//4, ..., floor`` — only
+    the rows axis moves; compaction never reshapes C/K/P/B/T/Q).
+    ``floor`` is the batch's compaction floor (:data:`COMPACT_FLOOR`
+    for the heterogeneous grid, ``plan.PLAN_COMPACT_FLOOR`` for
+    all-static candidate planes). The executor AOT-warms exactly this
+    set per chunk, so mid-run compaction re-entry hits a pre-built
+    executable too."""
     rows = int(sig[0])
+    floor = int(floor)
     rest = tuple(sig[1:])
     out = [(rows,) + rest]
-    while rows > COMPACT_FLOOR:
-        rows = max(rows // 4, COMPACT_FLOOR)
+    while rows > floor:
+        rows = max(rows // 4, floor)
         out.append((rows,) + rest)
     return tuple(out)

@@ -56,7 +56,7 @@ from repro.core.simulator import SimResult, Simulation
 from repro.core.types import TransferParams
 
 from . import controllers, kernels
-from .bucketing import PROFILE_PAD_FLOOR, bucket
+from .bucketing import COMPACT_FLOOR, PROFILE_PAD_FLOOR, bucket
 from .reference import resume_file
 from .shim import NO_CHUNK, ArrayOps, numpy_ops
 
@@ -129,6 +129,31 @@ class _ScenarioRuntime:
         self.predict_cache: dict = {}
 
 
+#: default scenario wall-clock guard, mirroring ``Simulation(max_time=)``
+_DEFAULT_MAX_TIME = 48 * 3600.0
+
+
+class _PlanRuntime:
+    """Columnar-ingest twin of :class:`_ScenarioRuntime`: plan rows are
+    always built-in controllers, so the runtime carries only what result
+    assembly, compaction and error paths read (names + byte totals) —
+    scheduler/chunks are shared name-only refs, never Python objects."""
+
+    __slots__ = (
+        "index", "name", "network", "scheduler", "chunks", "total_bytes",
+        "archive",
+    )
+
+    def __init__(self, index, name, network, scheduler, chunks, total_bytes):
+        self.index = index
+        self.name = name
+        self.network = network
+        self.scheduler = scheduler
+        self.chunks = chunks
+        self.total_bytes = total_bytes
+        self.archive = None
+
+
 #: every per-scenario row array of the driver state, for compaction and
 #: device upload; (S,) scalars and (S, C)/(S, K)/(S, K, P) tables alike
 _ROW_ARRAYS = (
@@ -181,16 +206,15 @@ class FabricSimulation:
 
     def __init__(
         self,
-        sims: Sequence[Simulation],
+        sims: Optional[Sequence[Simulation]],
         names: Optional[Sequence[str]] = None,
         *,
         ops: Optional[ArrayOps] = None,
         waterfill_impl: Optional[str] = None,
         fused_step: Optional[str] = None,
         timeline_budget: Optional[int] = None,
+        plan=None,
     ):
-        if names is None:
-            names = [f"scenario{i}" for i in range(len(sims))]
         self.ops = ops or numpy_ops()
         self.timeline_budget = int(
             timeline_budget
@@ -217,6 +241,16 @@ class FabricSimulation:
                 f"unknown fused_step {fused!r}; options: none, pallas"
             )
         self.fused_step = fused
+        #: set by the columnar path only: (open_n, visit_rank) initial
+        #: channel layout, consumed once by :meth:`_start_plan`
+        self._plan_open = None
+        if plan is not None:
+            if sims:
+                raise ValueError("pass either sims or plan=, not both")
+            self._init_from_plan(plan)
+            return
+        if names is None:
+            names = [f"scenario{i}" for i in range(len(sims))]
         self.rt = [
             _ScenarioRuntime(i, n, sim)
             for i, (n, sim) in enumerate(zip(names, sims))
@@ -381,6 +415,160 @@ class FabricSimulation:
         self.cap_need = np.array(
             [self._worst_case_channels(r) for r in self.rt], dtype=np.int64
         )
+        self._need_c_floor = 1
+        self._started = False
+
+    def _init_from_plan(self, plan) -> None:
+        """Materialize the resident arrays straight from a
+        :class:`repro.eval.fabric.plan.ScenarioPlan` — no ``Simulation``
+        objects, no per-row packing loop. Column-for-column this mirrors
+        the legacy constructor above (same dtypes, same pad values:
+        ``tests/test_plan_ingest.py`` pins bit-identity), but every fill
+        is a gather over the plan's context/network tables."""
+        S = self.S = plan.n_rows
+        self.C = 4
+        self.P = 4
+        nets = plan.networks
+        ni = plan.net_idx
+        # chunk axis re-buckets to this batch's widest row (a sliced
+        # sub-plan of one-chunk rows keeps K=1 even if the parent plan
+        # carried four-chunk contexts)
+        n_chunks = plan.n_chunks.astype(np.int64)
+        K = bucket(int(n_chunks.max(initial=1)))
+        self.K = K
+        self.rt = [
+            _PlanRuntime(
+                i,
+                plan.names[i],
+                nets[ni[i]],
+                plan.sched_refs[i],
+                plan.chunk_refs[i],
+                float(plan.total_bytes[i]),
+            )
+            for i in range(S)
+        ]
+
+        # scenario scalars
+        self.t = np.zeros(S)
+        self.done = np.zeros(S, dtype=bool)
+        self.next_tick = plan.tick_period.copy()
+        self.tick_period = plan.tick_period.copy()
+        self.n_events = np.zeros(S, dtype=np.int64)
+        self.finish_t = np.zeros(S)
+        self.fin_any = np.zeros(S, dtype=bool)
+        self.max_time = np.full(S, _DEFAULT_MAX_TIME)
+        self.record_timeline = plan.record_timeline.copy()
+        self.trivial_tick = plan.trivial_tick.copy()
+        self.trivial_complete = plan.trivial_complete.copy()
+        # network constants: one small per-network table each, gathered
+        net_f = lambda f: np.array(  # noqa: E731
+            [f(n) for n in nets], dtype=np.float64
+        )[ni]
+        self.bw = net_f(lambda n: n.bandwidth)
+        self.disk_rate = net_f(lambda n: n.disk.streaming_rate)
+        self.sat_cc = np.array(
+            [n.disk.saturation_cc for n in nets], dtype=np.int64
+        )[ni]
+        self.contention = net_f(lambda n: n.disk.contention)
+        profiles = [
+            getattr(n, "bandwidth_profile", None) or ((0.0, 1.0),)
+            for n in nets
+        ]
+        B = max((len(profiles[j]) for j in ni), default=1)
+        if B > 1:
+            B = bucket(B, PROFILE_PAD_FLOOR)
+        pt = np.full((len(nets), B), np.inf)
+        pm = np.ones((len(nets), B))
+        for j, prof in enumerate(profiles):
+            for b, (t0, m0) in enumerate(prof[:B]):
+                pt[j, b] = t0
+                pm[j, b] = m0
+            pm[j, len(prof):] = prof[-1][1]
+        self.prof_t = pt[ni]
+        self.prof_mult = pm[ni]
+
+        # channel state
+        self.chunk_of = np.full((S, self.C), _NO_CHUNK, dtype=np.int64)
+        self.dead = np.zeros((S, self.C))
+        self.rem = np.zeros((S, self.C))
+        self.busy = np.zeros((S, self.C), dtype=bool)
+        self.cap = np.zeros((S, self.C))
+
+        # per-chunk state (plan columns are padded to plan.K >= K)
+        self.n_chunks = n_chunks
+        self.chunk_done = np.zeros((S, K), dtype=bool)
+        self.chunk_done[np.arange(K)[None, :] >= n_chunks[:, None]] = True
+        self.completed_at = np.full((S, K), math.nan)
+        self.delivered = np.zeros((S, K))
+        self.delivered_at_tick = np.zeros((S, K))
+        self.rate_est = np.zeros((S, K))
+        self.queue_bytes = plan.queue_bytes[:, :K].copy()
+        self.fsdt = plan.fsdt[:, :K].copy()
+
+        # controller state (plan rows are never KIND_CUSTOM; ProMC rows
+        # carry the schedulers' default streak machine)
+        self.kind = plan.kind.copy()
+        self.streak = np.zeros(S, dtype=np.int64)
+        self.pair_fast = np.full(S, -1, dtype=np.int64)
+        self.pair_slow = np.full(S, -1, dtype=np.int64)
+        self.promc_ratio = np.full(S, 2.0)
+        self.promc_patience = np.full(S, 3, dtype=np.int64)
+        self.sc_cursor = np.zeros(S, dtype=np.int64)
+        self.sc_order = plan.sc_order[:, :K].copy()
+        self.conc = plan.conc[:, :K].copy()
+        self.par = plan.par[:, :K].copy()
+        self.cap_k = plan.cap_k[:, :K].copy()
+        self.avg_fs_k = plan.avg_fs_k[:, :K].copy()
+        self.nfiles = plan.qlen[:, :K].copy()
+        self.setup_cost = net_f(lambda n: n.channel_setup_cost)
+        self.n_moves = np.zeros(S, dtype=np.int64)
+
+        # FIFO queues: rows address the plan's shared flat buffer through
+        # their offsets — sub-plans of the same parent share one buffer
+        # (read-only in every kernel), collapsing the jax queue-pad
+        # signature axis to a single rung per plan
+        self.qoff = plan.qoff[:, :K].copy()
+        self.qlen = plan.qlen[:, :K].copy()
+        self.qptr = np.zeros((S, K), dtype=np.int64)
+        self.prepend_n = np.zeros((S, K), dtype=np.int64)
+        self.prepend_sizes = np.zeros((S, K, self.P))
+        self.qsizes = plan.qsizes
+
+        T = self.timeline_budget if self.record_timeline.any() else 1
+        self.tl_t = np.zeros((S, T))
+        self.tl_rate = np.zeros((S, T))
+        self.tl_len = np.zeros(S, dtype=np.int64)
+        self.tl_stride = np.ones(S, dtype=np.int64)
+        self.tl_seen = np.zeros(S, dtype=np.int64)
+        self.tl_last_t = np.zeros(S)
+        self.tl_last_rate = np.zeros(S)
+
+        self.cap_need = plan.cap_need.copy()
+        # plan chunks pad the channel axis to the shape-hint floor: a few
+        # dead columns buy every cc<=PLAN_C_FLOOR chunk the SAME compiled
+        # C, and batches holding profiled rows share one (C, B=16)
+        # program family (see ScenarioPlan.shape_hints)
+        from .plan import (
+            PLAN_C_FLOOR,
+            PLAN_COMPACT_FLOOR,
+            PLAN_PROFILED_C_FLOOR,
+        )
+
+        self._need_c_floor = (
+            PLAN_C_FLOOR if B == 1 else PLAN_PROFILED_C_FLOOR
+        )
+        # all-static batches (baseline + candidate rows, no timelines)
+        # drain chunk-at-a-time, so compaction stops at the plane floor:
+        # the grid's narrow straggler rungs would only add device
+        # re-entries and download syncs here (see plan.PLAN_COMPACT_FLOOR)
+        if not self.record_timeline.any() and bool(
+            (self.kind <= KIND_STATIC).all()
+        ):
+            self._compact_floor = PLAN_COMPACT_FLOOR
+        self._plan_open = (
+            plan.open_n[:, :K].copy(),
+            plan.visit_rank[:, :K].copy(),
+        )
         self._started = False
 
     @staticmethod
@@ -427,7 +615,17 @@ class FabricSimulation:
         """
         open_now = (self.chunk_of != _NO_CHUNK).sum(axis=1)
         need_c = int(np.maximum(self.cap_need, open_now).max(initial=1))
+        need_c = max(need_c, self._need_c_floor)
         return need_c, need_c + 1
+
+    def compact_floor(self) -> int:
+        """The smallest padded device shape compaction will descend to
+        for this batch: :data:`bucketing.COMPACT_FLOOR` for the
+        heterogeneous grid, ``plan.PLAN_COMPACT_FLOOR`` for all-static
+        candidate-plane batches (set by :meth:`_init_from_plan`). The
+        jax backend passes it as a *static* jit argument, so the two
+        policies occupy disjoint compiled programs."""
+        return int(getattr(self, "_compact_floor", COMPACT_FLOOR))
 
     # ------------------------------------------------------------------ #
     # water-fill dispatch
@@ -667,7 +865,15 @@ class FabricSimulation:
     # ------------------------------------------------------------------ #
 
     def start(self) -> None:
+        # idempotent: run() calls start() unconditionally, and re-applying
+        # initial actions (stateful schedulers, advanced queue cursors)
+        # would corrupt a batch a caller already started explicitly
+        if self._started:
+            return
         self._started = True
+        if self._plan_open is not None:
+            self._start_plan()
+            return
         for r in self.rt:
             self._apply(r, r.scheduler.initial_actions(self._view(r)))
             self._feed_py(r)
@@ -678,6 +884,48 @@ class FabricSimulation:
                 self.streak[r.index] = r.scheduler._streak
                 pair = r.scheduler._streak_pair or (-1, -1)
                 self.pair_fast[r.index], self.pair_slow[r.index] = pair
+
+    def _start_plan(self) -> None:
+        """Vectorized t=0 initial actions for plan-ingested batches.
+
+        The plan pre-computed, per row, how many channels each chunk
+        opens (``open_n``) and in which service order the controller
+        would have issued the Opens (``visit_rank``). Applying them in
+        that order against the legacy ``_open_channel`` (lowest free
+        column) lays chunk ``k``'s channels out contiguously starting at
+        the sum of the counts of chunks served before it — so the column
+        layout, setup dead time and per-channel caps are reproduced here
+        as pure array work, followed by one batched feed. SC cursors and
+        the ProMC streak machine keep their start-of-run defaults, which
+        is exactly what the scalar facades hold after ``start``."""
+        open_n, vrank = self._plan_open
+        total_open = open_n.sum(axis=1)
+        max_open = int(total_open.max(initial=0))
+        while self.C < max_open:
+            self._grow()
+        S, K, C = self.S, self.K, self.C
+        # column offset of each chunk's block: channels opened by chunks
+        # earlier in the service order
+        ahead = vrank[:, :, None] > vrank[:, None, :]
+        off = np.sum(np.where(ahead, open_n[:, None, :], 0), axis=2)
+        cols = np.arange(C)[None, None, :]
+        lo = off[:, :, None]
+        hi = (off + open_n)[:, :, None]
+        occupies = (cols >= lo) & (cols < hi)  # (S, K, C), disjoint in K
+        chunk_idx = occupies.argmax(axis=1)
+        is_open = occupies.any(axis=1)
+        self.chunk_of = np.where(is_open, chunk_idx, _NO_CHUNK).astype(
+            np.int64
+        )
+        # every t=0 Open pays the full setup cost (no prior channel on
+        # the row: _open_channel's warm-reopen discount can't apply)
+        self.dead = np.where(is_open, self.setup_cost[:, None], 0.0)
+        self.cap = np.where(
+            is_open, np.take_along_axis(self.cap_k, chunk_idx, axis=1), 0.0
+        )
+        self.rem = np.zeros((S, C))
+        self.busy = np.zeros((S, C), dtype=bool)
+        self._feed_vec(np.ones(S, dtype=bool))
 
     def step(self, rows: Optional[np.ndarray] = None) -> None:
         """One synchronized sweep over ``rows`` (default: all scenarios):

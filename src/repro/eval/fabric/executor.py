@@ -45,6 +45,8 @@ import queue
 import threading
 from typing import Callable, List, Optional, Sequence
 
+from .stats import wall_timer
+
 #: recognised ``REPRO_FABRIC_EXECUTOR`` values
 EXECUTOR_MODES = ("serial", "async")
 
@@ -68,11 +70,21 @@ def executor_mode(override: Optional[str] = None) -> str:
 def backend_devices(cls) -> list:
     """The device list the executor shards over: ``jax.devices()`` for
     drivers that support placement, else a single anonymous slot (the
-    NumPy driver still gets prep/compute overlap from the pipeline)."""
+    NumPy driver still gets prep/compute overlap from the pipeline).
+
+    XLA *host* devices are virtual — N forced CPU devices timeslice the
+    same physical cores — so on the cpu platform the list is capped at
+    ``os.cpu_count()``: round-robining four device loops onto one core
+    benchmarked at 0.3x the single-device rate (threadpool contention
+    plus N copies of every compiled program), while real accelerator
+    platforms keep the full device list."""
     if getattr(cls, "supports_device_placement", False):
         import jax
 
-        return list(jax.devices())
+        devices = list(jax.devices())
+        if devices and devices[0].platform == "cpu":
+            devices = devices[: max(1, os.cpu_count() or 1)]
+        return devices
     return [None]
 
 
@@ -94,40 +106,90 @@ def _warm_chunk(driver) -> None:
         sig = canonical_signature(driver)
     except Exception:
         return  # custom schedulers may defeat the closed-form bound
-    for rung in signature_ladder(sig):
+    floor = driver.compact_floor()
+    for rung in signature_ladder(sig, floor):
         jax_backend.warm_signature(
-            rung, device=driver.device, donate=driver.donate
+            rung, device=driver.device, donate=driver.donate, floor=floor
         )
+
+
+def _warm_loop(warm_q: "queue.Queue", stop: Optional[threading.Event],
+               warm: Optional[Callable] = None) -> None:
+    """Drain ``warm_q`` (driver -> AOT warm; ``None`` sentinel exits).
+
+    Warm work is pure prefetch, so on pipeline failure (``stop`` set)
+    pending drivers are discarded instead of compiled — errors surface
+    as soon as the workers join, not after a stray multi-second XLA
+    compile of a chunk nobody will run."""
+    warm = warm or _warm_chunk
+    while True:
+        driver = warm_q.get()
+        if driver is None:
+            return
+        if stop is not None and stop.is_set():
+            continue  # fail-fast: drop pending warms, keep draining
+        try:
+            warm(driver)
+        except Exception:
+            pass  # a failed warm only means the jit fallback compiles
 
 
 def execute_chunks(
     cls,
     parts: Sequence[Sequence[int]],
-    builders: Sequence[Callable],
-    names: Sequence[str],
+    builders: Optional[Sequence[Callable]],
+    names: Optional[Sequence[str]],
     results: List,
     mode: Optional[str] = None,
     queue_depth: Optional[int] = None,
+    *,
+    make_chunk: Optional[Callable] = None,
+    prep_workers: Optional[int] = None,
 ) -> List:
-    """Execute ``parts`` (lists of row indices into ``builders``) through
-    driver class ``cls``, writing each row's result to ``results[i]``.
+    """Execute ``parts`` (lists of row indices) through driver class
+    ``cls``, writing each row's result to ``results[i]``.
+
+    Chunk construction is pluggable: ``make_chunk(part, device)`` must
+    return a ready driver for the rows in ``part`` (the columnar plan
+    path slices a ``ScenarioPlan``); the default builds ``Simulation``
+    objects through ``builders``/``names`` — the legacy object path.
 
     ``mode="serial"`` runs the historical strictly-serial loop; the
     default async pipeline overlaps host prep, device compute, and AOT
-    warming, sharding chunks across devices round-robin.
+    warming, sharding chunks across devices round-robin. ``prep_workers``
+    (default 1) parallelizes chunk prep — only raise it when
+    ``make_chunk`` is thread-safe, as plan slicing is and the legacy
+    builder chain (shared file-cache hits aside) generally is not
+    guaranteed to be.
+
+    Chunk build and driver-run wall time accumulate into the shared
+    ``stats.SYNC_STATS`` wall keys in every mode, so the prep-vs-compute
+    breakdown (``runner --verbose``) measures the host build tax.
     """
     mode = executor_mode(mode)
     parts = [list(p) for p in parts]
+    placed = getattr(cls, "supports_device_placement", False)
+
+    if make_chunk is None:
+        if builders is None or names is None:
+            raise ValueError("make_chunk or builders+names required")
+
+        def make_chunk(part, dev):
+            sims = [builders[i]() for i in part]
+            kwargs = {"device": dev} if placed else {}
+            return cls(sims, names=[names[i] for i in part], **kwargs)
+
     if mode == "serial" or len(parts) <= 0:
         for part in parts:
-            sims = [builders[i]() for i in part]
-            out = cls(sims, names=[names[i] for i in part]).run()
+            with wall_timer("build_wall_s"):
+                driver = make_chunk(part, None)
+            with wall_timer("compute_wall_s"):
+                out = driver.run()
             for i, res in zip(part, out):
                 results[i] = res
         return results
 
     devices = backend_devices(cls)
-    placed = getattr(cls, "supports_device_placement", False)
     # with one device there is no sharding win from pinning, and leaving
     # device=None keeps the AOT/jit cache key shared with direct
     # (non-executor) runs of the same shapes
@@ -158,25 +220,30 @@ def execute_chunks(
             except queue.Full:
                 continue
 
+    # chunk prep fans out over a small worker pool: workers claim chunk
+    # indices from a shared cursor, so chunk j still lands on device
+    # j % n_devices (the round-robin sharding contract) regardless of
+    # which worker built it; per-device queue order may interleave, but
+    # results are written by original row index so output order is fixed
+    next_j = [0]
+    j_lock = threading.Lock()
+
     def prep() -> None:
         try:
-            for j, part in enumerate(parts):
-                if stop.is_set():
-                    break
+            while not stop.is_set():
+                with j_lock:
+                    j = next_j[0]
+                    if j >= len(parts):
+                        return
+                    next_j[0] = j + 1
                 dev = devices[j % len(devices)]
-                sims = [builders[i]() for i in part]
-                kwargs = {"device": dev} if placed else {}
-                driver = cls(
-                    sims, names=[names[i] for i in part], **kwargs
-                )
+                with wall_timer("build_wall_s"):
+                    driver = make_chunk(parts[j], dev)
                 if placed:
                     warm_pool_submit(driver)
-                put(queues[j % len(devices)], (part, driver))
-        except BaseException as exc:  # builders can raise anything
+                put(queues[j % len(devices)], (parts[j], driver))
+        except BaseException as exc:  # chunk builds can raise anything
             fail(exc)
-        finally:
-            for q in queues:
-                put(q, None)
 
     def compute(d: int) -> None:
         q = queues[d]
@@ -188,7 +255,8 @@ def execute_chunks(
                 continue  # keep draining so prep's puts can't wedge
             part, driver = item
             try:
-                out = driver.run()
+                with wall_timer("compute_wall_s"):
+                    out = driver.run()
                 # distinct indices per chunk: concurrent writes are safe
                 for i, res in zip(part, out):
                     results[i] = res
@@ -200,33 +268,34 @@ def execute_chunks(
     # internally; stacking them thrashes)
     warm_q: "queue.Queue" = queue.Queue()
 
-    def warm_loop() -> None:
-        while True:
-            driver = warm_q.get()
-            if driver is None:
-                return
-            try:
-                _warm_chunk(driver)
-            except Exception:
-                pass  # a failed warm only means the jit fallback compiles
-
     def warm_pool_submit(driver) -> None:
         warm_q.put(driver)
 
-    threads = [threading.Thread(target=prep, name="fabric-prep")]
-    threads += [
+    n_prep = max(1, min(prep_workers or 1, max(1, len(parts))))
+    prep_threads = [
+        threading.Thread(target=prep, name=f"fabric-prep{p}")
+        for p in range(n_prep)
+    ]
+    compute_threads = [
         threading.Thread(target=compute, args=(d,), name=f"fabric-dev{d}")
         for d in range(len(devices))
     ]
     warm_thread = None
     if placed:
         warm_thread = threading.Thread(
-            target=warm_loop, name="fabric-warm", daemon=True
+            target=_warm_loop, args=(warm_q, stop), name="fabric-warm",
+            daemon=True,
         )
         warm_thread.start()
-    for t in threads:
+    for t in prep_threads + compute_threads:
         t.start()
-    for t in threads:
+    # sentinels flow only after every prep worker is finished (with one
+    # ordered prep thread they used to ride its ``finally``)
+    for t in prep_threads:
+        t.join()
+    for q in queues:
+        put(q, None)
+    for t in compute_threads:
         t.join()
     if warm_thread is not None:
         # leftover warm work is pure prefetch — drop it, then join: an

@@ -65,6 +65,7 @@ from __future__ import annotations
 
 import os
 import threading
+import time
 from typing import List, Optional, Sequence, Tuple
 
 import jax
@@ -92,9 +93,9 @@ _STALL_NONE, _STALL_POST = 0, 1
 #: cap on device sweeps per while_loop entry: parked scenarios wait for
 #: the loop to exit before their Python decision runs, so unbounded entries
 #: let one long trivial stretch starve every parked controller. With the
-#: controller layer fused, parking is a rare edge — the half-cohort early
-#: exit still bounds any parked row's wait, and the cap mainly limits how
-#: long a straggler tail stays on-device between compaction checks.
+#: controller layer fused, parking is a rare edge — the quarter-cohort
+#: early exit (compactable shapes only) still bounds any parked row's
+#: wait there, and the cap bounds it everywhere else.
 _ROUND_CAP = 2048
 
 #: floor on the padded device row count. Straggler tails run thousands of
@@ -107,39 +108,17 @@ _ROUND_CAP = 2048
 #: ladder shared by the runner's chunk spans and the tuner's planes.
 _MIN_PAD = MIN_ROW_PAD
 
-#: host-sync telemetry, accumulated across runs (reset with
-#: :func:`reset_sync_stats`); the eval-matrix bench derives its
-#: device-syncs-per-scenario figure from this. ``rounds`` counts device
-#: while_loop entries (compaction/straggler re-entries included);
-#: ``replay_rounds`` counts only rounds that ended with the host
-#: replaying ``_post`` for parked rows, and ``post_row_replays`` the
-#: parked rows themselves — both exactly 0 for built-in schedulers, the
-#: zero-host-round invariant CI gates on.
-SYNC_STATS = {
-    "rounds": 0,
-    "replay_rounds": 0,
-    "post_row_replays": 0,
-    "scenarios": 0,
-    "runs": 0,
-}
-
-#: guards SYNC_STATS: under the pipelined executor several driver
-#: instances finish concurrently, and each merges its private per-run
-#: counters in one locked step — interleaved chunks therefore report
-#: exactly the totals serial execution would
-_SYNC_LOCK = threading.Lock()
-
-
-def reset_sync_stats() -> None:
-    with _SYNC_LOCK:
-        for k in SYNC_STATS:
-            SYNC_STATS[k] = 0
-
-
-def _merge_sync_stats(local: dict) -> None:
-    with _SYNC_LOCK:
-        for k, v in local.items():
-            SYNC_STATS[k] += v
+#: host-sync + wall-clock telemetry. The accumulator lives in the
+#: jax-free :mod:`repro.eval.fabric.stats` (the executor records build/
+#: compute walls from NumPy runs too); these are the *same* objects, so
+#: ``jax_backend.SYNC_STATS`` / ``reset_sync_stats`` keep their
+#: historical spelling and reset both views in place.
+from .stats import (  # noqa: E402,F401  (re-exported API)
+    SYNC_STATS,
+    _SYNC_LOCK,
+    _merge_sync_stats,
+    reset_sync_stats,
+)
 
 
 def _persistent_cache_active() -> bool:
@@ -580,7 +559,7 @@ def _phase_move(row: dict, qsizes):
 _CARRY = _MUTABLE + _SCRATCH
 
 
-def _device_rounds_fn(mut: dict, const: dict, qsizes):
+def _device_rounds_fn(mut: dict, const: dict, qsizes, compact_floor: int):
     """Advance every runnable scenario to its own next Python decision
     point (or completion): vmapped sweeps inside lax.while_loop. Each
     sweep is phase A (always) plus controller phases B/C/D gated by
@@ -589,7 +568,9 @@ def _device_rounds_fn(mut: dict, const: dict, qsizes):
 
     ``mut`` is the carried (and donatable) half; ``const`` the per-batch
     read-only tables, merged into the phase row-dicts each iteration and
-    stripped before the carry closes.
+    stripped before the carry closes. ``compact_floor`` is the *static*
+    per-batch compaction floor (part of the program identity): it decides
+    at trace time whether the early exit can ever lead anywhere.
     """
     import functools
 
@@ -610,19 +591,28 @@ def _device_rounds_fn(mut: dict, const: dict, qsizes):
         )
 
     start_count = jnp.sum(runnable(mut))
+    # the row axis is a static jit shape: whether an early exit can ever
+    # lead anywhere is decided at trace time. Rows at (or below) this
+    # batch's compaction floor can't shrink their device shape, so
+    # exiting early would buy a full state download/re-upload for
+    # nothing — those programs run to completion (or the sweep cap).
+    # Above the floor the exit fraction follows the floor itself:
+    # heterogeneous grid batches (deep ladder, floor 64) exit once half
+    # the starting cohort has drained — straggler tails get compacted
+    # down the rungs promptly — while all-static plane batches (shallow
+    # ladder, floor 256) ride to a quarter cohort before syncing, since
+    # their rows drain nearly together and each exit is a full state
+    # download/re-upload.
+    can_shrink = mut["done"].shape[0] > compact_floor
+    exit_div = 2 if compact_floor < 256 else 4
 
     def cond(carry):
         st, it = carry
         n = jnp.sum(runnable(st))
-        # run while anything is runnable, under the sweep cap, until half
-        # the round's starting cohort has parked at a Python decision or
-        # finished — unless the cohort is already at the minimum pad,
-        # where exiting early cannot shrink the device shape
-        return (
-            (n > 0)
-            & (it < _ROUND_CAP)
-            & ((2 * n > start_count) | (start_count <= _MIN_PAD))
-        )
+        keep = (n > 0) & (it < _ROUND_CAP)
+        if can_shrink:
+            keep &= (exit_div * n > start_count) | (start_count <= _MIN_PAD)
+        return keep
 
     def body(carry):
         st, it = carry
@@ -658,12 +648,17 @@ def _device_rounds_fn(mut: dict, const: dict, qsizes):
     return state, iters
 
 
-#: the undonated loop (exact pre-executor semantics: inputs stay live)
-_device_rounds = jax.jit(_device_rounds_fn)
+#: the undonated loop (exact pre-executor semantics: inputs stay live).
+#: ``compact_floor`` is static: two batches with identical shapes but
+#: different floors are different programs (the early-exit clause folds
+#: at trace time)
+_device_rounds = jax.jit(_device_rounds_fn, static_argnums=3)
 #: the donated twin: the mutable carry updates in place, halving the
 #: loop's peak device footprint. The driver re-uploads from host NumPy
 #: every round, so donated inputs are never read again.
-_device_rounds_donated = jax.jit(_device_rounds_fn, donate_argnums=0)
+_device_rounds_donated = jax.jit(
+    _device_rounds_fn, donate_argnums=0, static_argnums=3
+)
 
 
 # ------------------------------------------------------------------ #
@@ -756,11 +751,99 @@ _AOT_CACHE: dict = {}
 _AOT_PENDING: dict = {}
 
 
-def _aot_key(sig, device, donate):
-    return (tuple(int(x) for x in sig), device, bool(donate))
+# ------------------------------------------------------------------ #
+# Trace cache: serialized jax.export blobs alongside the XLA cache
+# ------------------------------------------------------------------ #
+#
+# The persistent XLA cache only skips the *backend compile*; every fresh
+# process still pays ~1 s of Python trace + StableHLO lowering per
+# program before the cache can even be consulted. ``jax.export``
+# captures exactly that lowered artifact, so warm processes deserialize
+# the StableHLO from disk (~15 ms) and hand it straight to XLA — whose
+# persistent cache then returns the executable — instead of re-tracing.
+# Cold and warm paths both compile the *exported* call so they share one
+# HLO identity (and one XLA cache entry) per program.
+#
+# Blobs are keyed on the signature plus a digest of the jax version and
+# every source file in this package — any edit to the traced code (or
+# the constants it closes over) invalidates the whole trace cache.
+# Donated programs are excluded (donation metadata does not survive the
+# export round trip, and donation is off whenever the persistent cache —
+# and hence this cache — is active).
+
+_EXPORT_DIGEST: Optional[str] = None
 
 
-def warm_signature(sig, device=None, donate: Optional[bool] = None) -> bool:
+def _export_digest() -> str:
+    """Digest of everything the device-loop trace can depend on: the jax
+    version plus the bytes of every ``.py`` file in this package."""
+    global _EXPORT_DIGEST
+    if _EXPORT_DIGEST is None:
+        import hashlib
+
+        h = hashlib.sha256(jax.__version__.encode())
+        pkg = os.path.dirname(os.path.abspath(__file__))
+        for name in sorted(os.listdir(pkg)):
+            if name.endswith(".py"):
+                with open(os.path.join(pkg, name), "rb") as f:
+                    h.update(name.encode())
+                    h.update(f.read())
+        _EXPORT_DIGEST = h.hexdigest()[:32]
+    return _EXPORT_DIGEST
+
+
+def _export_path(sig, floor: int) -> Optional[str]:
+    """Blob path for one signature, or None when no persistent cache
+    directory is configured (no point caching traces the process can't
+    amortize across runs)."""
+    base = None
+    try:
+        base = jax.config.jax_compilation_cache_dir
+    except Exception:
+        return None
+    if not base:
+        return None
+    name = "rounds-{}-f{}-{}.stablehlo".format(
+        "x".join(str(int(x)) for x in sig), int(floor), _export_digest()
+    )
+    return os.path.join(base, "exports", name)
+
+
+def _exported_rounds(sig, shapes, floor: int):
+    """The exported device loop for ``sig``: deserialized from the blob
+    cache when present, else traced now and written back (best effort).
+    ``shapes`` must be the device-free avals — sharding is applied later
+    at compile time, keeping one blob valid for every device."""
+    from jax import export as jax_export
+
+    path = _export_path(sig, floor)
+    if path is not None and os.path.exists(path):
+        try:
+            with open(path, "rb") as f:
+                return jax_export.deserialize(f.read())
+        except Exception:
+            pass  # stale/corrupt blob: fall through to a fresh trace
+    exp = jax_export.export(_device_rounds)(*shapes, int(floor))
+    if path is not None:
+        try:
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            tmp = "{}.tmp.{}".format(path, os.getpid())
+            with open(tmp, "wb") as f:
+                f.write(exp.serialize())
+            os.replace(tmp, path)
+        except Exception:
+            pass
+    return exp
+
+
+def _aot_key(sig, device, donate, floor):
+    return (tuple(int(x) for x in sig), device, bool(donate), int(floor))
+
+
+def warm_signature(
+    sig, device=None, donate: Optional[bool] = None,
+    floor: int = COMPACT_FLOOR,
+) -> bool:
     """AOT-compile the device loop for one canonical signature (exactly
     once per ``(sig, device, donate)`` process-wide; concurrent callers
     wait). Returns True if this call did the compile. The executor warms
@@ -769,7 +852,7 @@ def warm_signature(sig, device=None, donate: Optional[bool] = None) -> bool:
     the device its executable already exists and the ~1 s/signature
     Python retrace never lands on the critical path."""
     donate = donation_enabled(donate)
-    key = _aot_key(sig, device, donate)
+    key = _aot_key(sig, device, donate, floor)
     with _AOT_LOCK:
         if key in _AOT_CACHE:
             return False
@@ -790,8 +873,20 @@ def warm_signature(sig, device=None, donate: Optional[bool] = None) -> bool:
         # x64 is thread-local: the warm thread needs its own context so
         # the traced avals match the runtime's f64 uploads
         with enable_x64():
-            fn = _device_rounds_donated if donate else _device_rounds
-            compiled = fn.lower(*signature_shapes(sig, device)).compile()
+            if not donate and _persistent_cache_active():
+                exp = _exported_rounds(
+                    sig, signature_shapes(sig, None), floor
+                )
+                compiled = (
+                    jax.jit(exp.call)
+                    .lower(*signature_shapes(sig, device))
+                    .compile()
+                )
+            else:
+                fn = _device_rounds_donated if donate else _device_rounds
+                compiled = fn.lower(
+                    *signature_shapes(sig, device), int(floor)
+                ).compile()
     except Exception:
         compiled = None  # fall back to plain jit for this signature
     finally:
@@ -802,11 +897,11 @@ def warm_signature(sig, device=None, donate: Optional[bool] = None) -> bool:
     return compiled is not None
 
 
-def _aot_lookup(sig, device, donate):
+def _aot_lookup(sig, device, donate, floor):
     """The compiled executable for a signature, waiting out an in-flight
     warm (the warm thread is already doing the same compile the jit
     fallback would pay); None if never warmed or the warm failed."""
-    key = _aot_key(sig, device, donate)
+    key = _aot_key(sig, device, donate, floor)
     with _AOT_LOCK:
         exe = _AOT_CACHE.get(key)
         ev = _AOT_PENDING.get(key)
@@ -944,11 +1039,14 @@ class JaxFabricSimulation(FabricSimulation):
         """One device round through the best available executable: the
         AOT-warmed one when the executor pre-built it, else the jit twin
         matching this batch's donation mode."""
-        exe = _aot_lookup(self._rounds_signature(), self.device, self.donate)
+        floor = self.compact_floor()
+        exe = _aot_lookup(
+            self._rounds_signature(), self.device, self.donate, floor
+        )
         if exe is not None:
             return exe(mut, const, qsizes)
         fn = _device_rounds_donated if self.donate else _device_rounds
-        return fn(mut, const, qsizes)
+        return fn(mut, const, qsizes, floor)
 
     def _download(self, state: dict) -> None:
         for key in _MUTABLE:
@@ -1007,14 +1105,18 @@ class JaxFabricSimulation(FabricSimulation):
         wall time tracing than the narrower sweeps saved. So: when the
         live rows fit a 4x smaller pad, compact to exactly ``pad // 4``
         (pinned via ``_pad_floor`` even if far fewer rows survive) and
-        stop at a 64-row device shape — a 1024-row chunk occupies
-        exactly {1024, 256, 64}, never a stray 128/32 rung from
-        wherever the live count happened to land.
+        stop at this batch's :meth:`compact_floor` device shape — a
+        1024-row grid chunk occupies exactly {1024, 256, 64}, never a
+        stray 512/128 rung from wherever the live count happened to
+        land, and an all-static candidate-plane chunk stops at 256
+        (its rows drain together; the narrow tail rungs only buy extra
+        host syncs there).
         """
+        floor = self.compact_floor()
         live = self.S - int(self.done.sum())
         pad = self._pad_rows()
-        if pad > COMPACT_FLOOR and bucket(live, _MIN_PAD) * 4 <= pad:
-            self._pad_floor = max(pad // 4, COMPACT_FLOOR)
+        if pad > floor and bucket(live, _MIN_PAD) * 4 <= pad:
+            self._pad_floor = max(pad // 4, floor)
             self._compact()
 
     def _drive(self) -> None:
@@ -1051,7 +1153,9 @@ class JaxFabricSimulation(FabricSimulation):
                     # round re-uploads from the host arrays _download
                     # refreshes, so nothing reads them again
                     del mut
+                    t0 = time.perf_counter()
                     self._download(state)
+                    stats["download_wall_s"] += time.perf_counter() - t0
                     stats["rounds"] += 1
                     progressed = int(iters) > 0
                 post_rows = ~self.done & (self._stall == _STALL_POST)

@@ -1,0 +1,84 @@
+"""Shared pipeline telemetry: host-sync counters + wall-clock splits.
+
+Historically :data:`SYNC_STATS` lived in :mod:`repro.eval.fabric.
+jax_backend`; the executor's prep/compute wall instrumentation needs the
+same accumulator from NumPy-only runs, which must not import jax. The
+dict (and its lock) moved here; ``jax_backend`` re-imports the *same*
+objects, so ``jax_backend.SYNC_STATS`` keeps working and
+:func:`reset_sync_stats` (in-place) resets both views at once.
+
+Counter keys (``rounds`` .. ``runs``) keep their zero-host-round
+contract (see the jax backend docstring). The ``*_wall_s`` keys are the
+pipeline's build-tax instrumentation: host-side chunk construction
+(``build_wall_s``), driver execution (``compute_wall_s``), and — on the
+jax backend — the device->host result downloads inside the drive loop
+(``download_wall_s``). Wall keys are float seconds and overlap freely
+(several prep/compute threads accumulate concurrently), so they measure
+aggregate thread-time per phase, not elapsed wall clock; their ratio is
+what the prep-vs-compute breakdown under ``runner --verbose`` reports.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from contextlib import contextmanager
+
+#: wall-clock accumulator keys: float seconds, thread-time semantics.
+#: Everything else in SYNC_STATS is an exact integer counter — tests that
+#: pin counter equality across execution modes must exclude these.
+WALL_KEYS = frozenset(
+    {"build_wall_s", "compute_wall_s", "download_wall_s"}
+)
+
+#: host-sync telemetry, accumulated across runs (reset with
+#: :func:`reset_sync_stats`); the eval-matrix bench derives its
+#: device-syncs-per-scenario figure from this. ``rounds`` counts device
+#: while_loop entries (compaction/straggler re-entries included);
+#: ``replay_rounds`` counts only rounds that ended with the host
+#: replaying ``_post`` for parked rows, and ``post_row_replays`` the
+#: parked rows themselves — both exactly 0 for built-in schedulers, the
+#: zero-host-round invariant CI gates on.
+SYNC_STATS = {
+    "rounds": 0,
+    "replay_rounds": 0,
+    "post_row_replays": 0,
+    "scenarios": 0,
+    "runs": 0,
+    "build_wall_s": 0.0,
+    "compute_wall_s": 0.0,
+    "download_wall_s": 0.0,
+}
+
+#: guards SYNC_STATS: under the pipelined executor several driver
+#: instances finish concurrently, and each merges its private per-run
+#: counters in one locked step — interleaved chunks therefore report
+#: exactly the totals serial execution would
+_SYNC_LOCK = threading.Lock()
+
+
+def reset_sync_stats() -> None:
+    with _SYNC_LOCK:
+        for k in SYNC_STATS:
+            SYNC_STATS[k] = 0.0 if k in WALL_KEYS else 0
+
+
+def _merge_sync_stats(local: dict) -> None:
+    with _SYNC_LOCK:
+        for k, v in local.items():
+            SYNC_STATS[k] += v
+
+
+def record_wall(key: str, seconds: float) -> None:
+    """Accumulate ``seconds`` into wall key ``key`` (thread-safe)."""
+    with _SYNC_LOCK:
+        SYNC_STATS[key] += seconds
+
+
+@contextmanager
+def wall_timer(key: str):
+    """Context manager accumulating the enclosed block's wall time."""
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        record_wall(key, time.perf_counter() - t0)

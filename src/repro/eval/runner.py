@@ -65,6 +65,30 @@ SNAPSHOT_FIELDS = (
 
 BACKENDS = ("event", "numpy", "jax")
 
+#: scenario ingest paths for the batched backends: the columnar
+#: ``ScenarioPlan`` fast path (default) or the legacy per-row
+#: ``build_simulation`` object chain (the difftest reference; also the
+#: only path for custom scheduler subclasses, which have no Scenario
+#: spelling). Select with ``REPRO_FABRIC_INGEST`` or the ``ingest=``
+#: kwarg of :func:`run_matrix`.
+INGEST_MODES = ("plan", "legacy")
+
+#: prep threads for plan-sliced chunk construction: plan slicing is
+#: pure array work (thread-safe, no shared caches), so a few workers
+#: keep the device queues fed during multi-device sweeps
+PLAN_PREP_WORKERS = 4
+
+
+def ingest_mode(override: Optional[str] = None) -> str:
+    """Resolve the scenario ingest path: explicit ``override`` wins,
+    then ``REPRO_FABRIC_INGEST``, then the columnar default."""
+    mode = override or os.environ.get("REPRO_FABRIC_INGEST") or "plan"
+    if mode not in INGEST_MODES:
+        raise ValueError(
+            f"unknown ingest mode {mode!r}; options: {INGEST_MODES}"
+        )
+    return mode
+
 
 def _resolve_backend(backend: str) -> str:
     if backend == "batch":  # historical alias for the NumPy fast path
@@ -199,13 +223,90 @@ def run_built(
     return results  # type: ignore[return-value]
 
 
+def run_plan(
+    plan,
+    backend: str = "numpy",
+    chunk_size: Optional[int] = DEFAULT_CHUNK_SIZE,
+    executor: Optional[str] = None,
+) -> List[SimResult]:
+    """Chunked batched execution of a columnar :class:`ScenarioPlan`.
+
+    The plan-path twin of :func:`run_built`: same cost-homogeneous
+    ordering (the plan's vectorized proxy computes the identical
+    doubles), same shape-hint grouping and pow2-aligned spans on jax —
+    but each chunk is ``plan.take(part)`` (thread-safe array slicing)
+    handed straight to the driver's batch constructor, so the executor
+    fans chunk prep over several workers instead of one ordered Python
+    build thread.
+    """
+    backend = _resolve_backend(backend)
+    if backend == "event":
+        raise ValueError("the event backend has no columnar ingest path")
+    if chunk_size is not None and chunk_size <= 0:
+        raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+    cls = _driver_cls(backend)
+    n = plan.n_rows
+    costs = plan.cost_proxy()
+    order = list(range(n))
+    aligned = backend == "jax"
+    if aligned:
+        hints = plan.shape_hints()
+        order.sort(key=lambda i: (hints[i], costs[i]))
+    else:
+        order.sort(key=lambda i: costs[i])
+    size = chunk_size or BACKEND_CHUNK_SIZE[backend]
+    results: List[Optional[SimResult]] = [None] * n
+    parts = [
+        order[lo:hi]
+        for lo, hi in chunk_spans(n, size, pad_aligned=aligned)
+    ]
+    placed = getattr(cls, "supports_device_placement", False)
+    # fleet-scale planes (at least one full chunk) floor every chunk's
+    # padded row count at the batch's compaction floor: the remainder
+    # spans then occupy the SAME device shape as the big chunks' bottom
+    # rung instead of minting a one-off small program (each is seconds
+    # of per-process trace + executable materialization). The floor is
+    # the driver's own (PLAN_COMPACT_FLOOR for all-static planes), so
+    # tail chunks share the plane's 256-row program.
+    want_pad_floor = aligned and n >= size
+
+    def make_chunk(part, dev):
+        kwargs = {"device": dev} if placed else {}
+        drv = cls(None, plan=plan.take(part), **kwargs)
+        if want_pad_floor:
+            drv._pad_floor = drv.compact_floor()
+        return drv
+
+    execute_chunks(
+        cls, parts, None, None, results, mode=executor,
+        make_chunk=make_chunk, prep_workers=PLAN_PREP_WORKERS,
+    )
+    return results  # type: ignore[return-value]
+
+
 def run_matrix(
     scenarios: Sequence[Scenario],
     backend: str = "numpy",
     chunk_size: Optional[int] = DEFAULT_CHUNK_SIZE,
     executor: Optional[str] = None,
+    ingest: Optional[str] = None,
 ) -> List[SimResult]:
-    """Run every scenario; order of results matches the input order."""
+    """Run every scenario; order of results matches the input order.
+
+    Batched backends default to the columnar plan ingest (one vectorized
+    build per transfer context, broadcast across candidate rows); the
+    event reference — and ``ingest="legacy"`` /
+    ``REPRO_FABRIC_INGEST=legacy`` — keeps the per-row object chain.
+    """
+    backend_r = _resolve_backend(backend)
+    if backend_r != "event" and ingest_mode(ingest) == "plan":
+        from .fabric.plan import build_plan, plan_supported
+
+        if plan_supported(scenarios):
+            return run_plan(
+                build_plan(scenarios), backend=backend_r,
+                chunk_size=chunk_size, executor=executor,
+            )
     return run_built(
         [
             (lambda sc=sc: build_simulation(sc))
@@ -351,6 +452,25 @@ def run_tune(args, scenarios: Sequence[Scenario]) -> int:
     return 0
 
 
+def _print_wall_breakdown() -> None:
+    """The ``--verbose`` prep-vs-compute split: aggregate thread-seconds
+    per pipeline phase from the shared wall accumulators (phases overlap
+    under the async executor, so they need not sum to elapsed time)."""
+    from .fabric import stats as fabric_stats
+
+    s = dict(fabric_stats.SYNC_STATS)
+    build = s["build_wall_s"]
+    compute = s["compute_wall_s"]
+    download = s["download_wall_s"]
+    total = max(build + compute, 1e-9)
+    print(
+        "wall breakdown (thread-seconds, phases overlap): "
+        f"build {build:.3f}s ({100.0 * build / total:.1f}%) | "
+        f"compute {compute:.3f}s ({100.0 * compute / total:.1f}%) | "
+        f"download {download:.3f}s (inside compute)"
+    )
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     import argparse
 
@@ -374,6 +494,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--out", default="tests/golden/eval_matrix.json")
     ap.add_argument("--refresh-golden", action="store_true")
     ap.add_argument(
+        "--verbose", action="store_true",
+        help="print the prep-vs-compute wall breakdown (host chunk "
+        "build, driver run, device->host downloads) after the run",
+    )
+    ap.add_argument(
         "--tune", choices=("oracle", "sha", "hill"), default=None,
         help="search the static (pipelining, parallelism, concurrency) "
         "space over the matrix (exhaustive grid / successive halving / "
@@ -395,12 +520,21 @@ def main(argv: Optional[List[str]] = None) -> int:
     args = ap.parse_args(argv)
 
     scenarios = build_matrix(args.matrix)
+    if args.verbose:
+        from .fabric import stats as fabric_stats
+
+        fabric_stats.reset_sync_stats()
     if args.tune:
-        return run_tune(args, scenarios)
+        rc = run_tune(args, scenarios)
+        if args.verbose:
+            _print_wall_breakdown()
+        return rc
     results = run_matrix(
         scenarios, backend=args.backend, chunk_size=args.chunk_size,
         executor=args.executor,
     )
+    if args.verbose:
+        _print_wall_breakdown()
     snap = metrics_snapshot(scenarios, results)
     if args.refresh_golden:
         save_golden(args.out, snap)
