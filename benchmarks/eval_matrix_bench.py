@@ -67,7 +67,8 @@ def _provenance() -> Dict:
 
 
 def _mega_subprocess(
-    n_candidates: int, devices: int = 0, timeout: float = 1800.0
+    n_candidates: int, devices: int = 0, timeout: float = 1800.0,
+    matrix: Optional[str] = None,
 ) -> Optional[Dict]:
     """One ``benchmarks.mega_sweep`` run in a fresh interpreter: clean
     per-run peak RSS (``ru_maxrss`` is process-lifetime, so in-process
@@ -81,6 +82,8 @@ def _mega_subprocess(
     ]
     if devices:
         cmd += ["--devices", str(devices)]
+    if matrix:
+        cmd += ["--matrix", matrix]
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
         p for p in (
@@ -371,6 +374,36 @@ def run(claims) -> List[Dict]:
         scenarios, grid_name, claims, results_of["numpy"]
     )
 
+    # the multi-tenant fleet leg: coupled tenant_matrix throughput on
+    # jax (rows/s + the sweep's own peak RSS via a fresh subprocess),
+    # the coupled-vs-uncoupled overhead, and the contention report
+    # (greedy per-tenant heuristics vs the contended static oracle) —
+    # the full grid runs the full 36-group fleet, smaller grids the
+    # 6-group smoke fleet
+    fleet_matrix = "tenant" if grid_name == "full" else "tenant-smoke"
+    fleet = _mega_subprocess(8, matrix=fleet_matrix)
+    if fleet is not None:
+        contention = fleet.get("contention", {})
+        claims.check(
+            "multi-tenant fleet: coupled sweep holds the RSS gate and "
+            "greedy per-tenant tuning does not collapse under "
+            "contention (median regret >= 0.75 vs the contended "
+            "static oracle)",
+            fleet["peak_rss_mb"] <= 1638.0
+            and contention.get("regret_median", 0.0) >= 0.75,
+            f"{fleet['evals']} tenants at {fleet['rows_per_s']:.0f} "
+            f"rows/s, peak RSS {fleet['peak_rss_mb']:.0f} MB, "
+            f"coupled overhead {fleet.get('coupled_overhead')}x, "
+            f"median regret {contention.get('regret_median', 0):.3f} "
+            f"({contention.get('groups', 0)} groups)",
+        )
+    else:
+        claims.check(
+            "multi-tenant fleet subprocess leg completed",
+            False,
+            "benchmarks.mega_sweep --matrix tenant subprocess failed",
+        )
+
     LAST_SNAPSHOT = {
         "bench": "eval_matrix",
         "timestamp": round(time.time(), 1),
@@ -388,6 +421,7 @@ def run(claims) -> List[Dict]:
         },
         "backends": backends,
         "tune": tune_snapshot,
+        "tenant_fleet": fleet,
         "jax_vs_numpy": {
             "steady_ratio": ratio_full,
             "target": _JAX_TARGET_RATIO,

@@ -42,7 +42,8 @@ def main(argv=None) -> int:
     ap.add_argument("--candidates", type=int, default=64)
     ap.add_argument("--backend", default="jax")
     ap.add_argument("--matrix", default="full",
-                    choices=("smoke", "default", "full"))
+                    choices=("smoke", "default", "full", "tenant",
+                             "tenant-smoke"))
     ap.add_argument(
         "--executor", default=None, choices=("serial", "async"),
         help="chunk executor mode (default: REPRO_FABRIC_EXECUTOR/async)",
@@ -74,19 +75,55 @@ def main(argv=None) -> int:
     from repro.eval.tune import oracle_search
 
     scenarios = build_matrix(args.matrix)
-    t0 = time.perf_counter()
-    result = oracle_search(
-        scenarios,
-        backend=args.backend,
-        n_candidates=args.candidates,
-        executor=args.executor,
-    )
-    wall = time.perf_counter() - t0
+    extra = {}
+    if args.matrix.startswith("tenant"):
+        # the fleet leg: coupled throughput (steady, warm cache) vs the
+        # same rows with the fabric stripped — the coupled-path overhead
+        # — plus the contention report (greedy per-tenant heuristics vs
+        # the contended static oracle, scored on the NumPy ground truth)
+        import dataclasses as _dc
+
+        from repro.eval.runner import run_matrix
+        from repro.eval.tune.contention import contention_report
+
+        run_matrix(scenarios, backend=args.backend,
+                   executor=args.executor)  # warm compile/caches
+        t0 = time.perf_counter()
+        run_matrix(scenarios, backend=args.backend, executor=args.executor)
+        wall = time.perf_counter() - t0
+        stripped = [
+            _dc.replace(sc, shared_fabric=None) for sc in scenarios
+        ]
+        run_matrix(stripped, backend=args.backend, executor=args.executor)
+        t0 = time.perf_counter()
+        run_matrix(stripped, backend=args.backend, executor=args.executor)
+        uncoupled_wall = time.perf_counter() - t0
+        evals = len(scenarios)
+        extra = {
+            "uncoupled_wall_s": round(uncoupled_wall, 3),
+            "coupled_overhead": round(
+                wall / max(uncoupled_wall, 1e-9), 3
+            ),
+            "contention": contention_report(
+                scenarios, backend="numpy",
+                n_candidates=min(args.candidates, 8),
+            ).summary(),
+        }
+    else:
+        t0 = time.perf_counter()
+        result = oracle_search(
+            scenarios,
+            backend=args.backend,
+            n_candidates=args.candidates,
+            executor=args.executor,
+        )
+        wall = time.perf_counter() - t0
+        evals = result.evals
     peak_rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
     row = {
-        "evals": result.evals,
+        "evals": evals,
         "wall_s": round(wall, 3),
-        "rows_per_s": round(result.evals / max(wall, 1e-9), 1),
+        "rows_per_s": round(evals / max(wall, 1e-9), 1),
         "peak_rss_mb": round(peak_rss, 1),
         "backend": args.backend,
         "matrix": args.matrix,
@@ -96,6 +133,7 @@ def main(argv=None) -> int:
         "executor": fabric_executor.executor_mode(args.executor),
         "donation": jax_backend.donation_enabled(),
         "compiled_programs": jax_backend.compiled_program_count(),
+        **extra,
     }
     print(json.dumps(row))
     if args.assert_rss_mb is not None and peak_rss > args.assert_rss_mb:

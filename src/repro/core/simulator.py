@@ -252,7 +252,68 @@ class Simulation:
         self._apply(self.scheduler.initial_actions(self._view()))
         self._feed_channels()
 
-    def step(self) -> None:
+    def transfer_demand(self) -> tuple:
+        """``(pool, demand)`` for the shared-fabric coupled driver.
+
+        ``pool`` is this instant's uncoupled rate pool (link bandwidth vs
+        disk aggregate under contention, exactly ``allocate_rates``'s);
+        ``demand`` is the rate the transfer could actually use —
+        ``min(pool, sum of transferring channels' caps)``. A coupled
+        lockstep driver feeds the demands of every tenant in a fabric
+        group to ``fabric.kernels.waterfill_coupled`` and passes each
+        grant back through :meth:`step`'s ``bandwidth`` override.
+        """
+        transferring = [
+            ch for ch in self.channels if not ch.closed and ch.transferring
+        ]
+        if not transferring:
+            return 0.0, 0.0
+        pool = min(
+            self.network.bandwidth_at(self.t),
+            self.network.disk.aggregate_rate(len(transferring)),
+        )
+        caps = sum(
+            netmodel.channel_rate_cap(self.network, ch.params.parallelism)
+            for ch in transferring
+        )
+        return pool, min(pool, caps)
+
+    def next_dt(self, bandwidth: Optional[float] = None) -> float:
+        """The horizon :meth:`step` would advance by, without advancing.
+
+        ``bandwidth`` overrides the rate pool exactly as in :meth:`step`
+        — the coupled lockstep driver peeks every group member's horizon
+        under its fabric grant, takes the group minimum, and passes it
+        back as ``step(max_dt=...)`` so coupled tenants share event
+        times.
+        """
+        open_chs = [ch for ch in self.channels if not ch.closed]
+        rates = netmodel.allocate_rates(
+            self.network,
+            [ch.params.parallelism for ch in open_chs],
+            [ch.transferring for ch in open_chs],
+            bandwidth=(
+                self.network.bandwidth_at(self.t)
+                if bandwidth is None
+                else bandwidth
+            ),
+        )
+        busy = [ch for ch in open_chs if ch.busy]
+        return next_event_dt(
+            min(
+                self._next_tick - self.t,
+                self.network.next_profile_change(self.t) - self.t,
+            ),
+            [ch.dead for ch in busy],
+            [ch.file_remaining for ch in busy],
+            [r for ch, r in zip(open_chs, rates) if ch.busy],
+        )
+
+    def step(
+        self,
+        max_dt: Optional[float] = None,
+        bandwidth: Optional[float] = None,
+    ) -> None:
         """Advance to the next event (state transition, completion, or tick).
 
         This is the unit the batch fast-path mirrors: rates are recomputed
@@ -261,6 +322,14 @@ class Simulation:
         (feed / completion callbacks / tick bookkeeping) happens in a fixed
         order. Keep the order in sync with
         ``eval.fabric.driver.FabricSimulation``.
+
+        The coupled lockstep driver (``eval.fabric.coupled_event``) passes
+        ``bandwidth`` (this tenant's fabric grant, which replaces the rate
+        pool — always <= the uncoupled pool, so ``min`` with the disk
+        aggregate is a no-op) and ``max_dt`` (the fabric group's shared
+        horizon, always <= this transfer's own, so partially-advanced
+        sweeps cross no event threshold). Defaults preserve the uncoupled
+        behaviour bit for bit.
         """
         if not self._started:
             raise RuntimeError("Simulation.step() before start()")
@@ -276,7 +345,11 @@ class Simulation:
             self.network,
             [ch.params.parallelism for ch in open_chs],
             [ch.transferring for ch in open_chs],
-            bandwidth=self.network.bandwidth_at(self.t),
+            bandwidth=(
+                self.network.bandwidth_at(self.t)
+                if bandwidth is None
+                else bandwidth
+            ),
         )
         if self.record_timeline:
             self.timeline.append((self.t, sum(rates)))
@@ -293,6 +366,8 @@ class Simulation:
             [ch.file_remaining for ch in busy],
             [r for ch, r in zip(open_chs, rates) if ch.busy],
         )
+        if max_dt is not None:
+            dt = min(dt, max_dt)
         if not busy:
             # no channel holds work: either all done (loop exits) or the
             # scheduler stranded a live chunk — treat as a scheduling bug.

@@ -137,7 +137,9 @@ def main(argv: Optional[List[str]] = None) -> int:
         default="numpy",
     )
     ap.add_argument(
-        "--matrix", choices=("smoke", "default", "full"), default="full",
+        "--matrix",
+        choices=("smoke", "default", "full", "tenant", "tenant-smoke"),
+        default="full",
     )
     ap.add_argument(
         "--smoke", action="store_true",

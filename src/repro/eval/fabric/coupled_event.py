@@ -1,0 +1,98 @@
+"""Lockstep event-simulator reference for shared-fabric coupled groups.
+
+The scalar :class:`repro.core.simulator.Simulation` event loop is the
+semantics ground truth of the whole fabric layer, but it runs one
+transfer at a time — coupling through shared links needs every tenant of
+a fabric group advanced against the *same* clock. This module is the
+coupled ground truth: it drives N ordinary Simulations in lockstep,
+recomputing the cross-tenant link allocation every event:
+
+  1. every live tenant reports ``(pool, demand)``
+     (:meth:`Simulation.transfer_demand`: its uncoupled disk/bandwidth
+     pool, clipped to what its transferring channels can carry);
+  2. one :func:`repro.eval.fabric.kernels.waterfill_coupled` call — the
+     very kernel the batched backends run — turns the demands and the
+     group's (links x tenants) membership table into per-tenant grants;
+  3. each tenant peeks its event horizon under its grant
+     (:meth:`Simulation.next_dt`), the group takes the minimum ``D``,
+     and every live tenant steps with ``step(max_dt=D, bandwidth=grant)``
+     — so all clocks advance together and no tenant crosses an event
+     threshold another tenant's allocation change should have preceded.
+
+A tenant whose own horizon exceeds ``D`` takes a partial advance: no
+completion, feed, or tick threshold is crossed (``D`` <= its own next
+event), so the sweep is a natural no-op for it beyond moving bytes —
+exactly the batched drivers' lockstep-dt semantics. Done tenants stop
+stepping and contribute zero demand, releasing their link share.
+
+``eval.difftest`` holds both batched backends to this reference within
+the standard 2% bar on the multi-tenant ``tenant_matrix``.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.simulator import SimResult, Simulation
+
+from . import kernels
+from .shared import SharedFabric, resolve_fabric
+from .shim import numpy_ops
+
+
+def run_coupled_group(
+    sims: Sequence[Simulation],
+    fabrics: Sequence[Optional[SharedFabric]],
+) -> List[SimResult]:
+    """Run one fabric group of Simulations to completion in lockstep."""
+    fab = resolve_fabric(fabrics)
+    ops = numpy_ops()
+    n = len(sims)
+    for s in sims:
+        s.start()
+    demand = np.zeros(n, dtype=np.float64)
+    while not all(s.done for s in sims):
+        demand[:] = 0.0
+        for i, s in enumerate(sims):
+            if not s.done:
+                demand[i] = s.transfer_demand()[1]
+        x, _ = kernels.waterfill_coupled(
+            ops, demand, fab.member, fab.link_cap
+        )
+        horizon = math.inf
+        for i, s in enumerate(sims):
+            if not s.done:
+                horizon = min(horizon, s.next_dt(bandwidth=float(x[i])))
+        for i, s in enumerate(sims):
+            if not s.done:
+                s.step(max_dt=horizon, bandwidth=float(x[i]))
+    return [s.result() for s in sims]
+
+
+def run_event_coupled(scenarios: Sequence) -> List:
+    """Event-backend results for a matrix holding coupled rows.
+
+    Uncoupled rows run through the ordinary one-Simulation event loop
+    (bit-identical to the pre-fabric path); rows sharing a fabric group
+    run through :func:`run_coupled_group`. Results come back in input
+    order.
+    """
+    from ..scenarios import build_simulation
+
+    results: List = [None] * len(scenarios)
+    groups: dict = {}
+    for i, sc in enumerate(scenarios):
+        if sc.shared_fabric is None:
+            results[i] = build_simulation(sc).run()
+        else:
+            groups.setdefault(sc.shared_fabric.group, []).append(i)
+    for idxs in groups.values():
+        sims = [build_simulation(scenarios[i]) for i in idxs]
+        out = run_coupled_group(
+            sims, [scenarios[i].shared_fabric for i in idxs]
+        )
+        for i, res in zip(idxs, out):
+            results[i] = res
+    return results

@@ -58,6 +58,7 @@ from repro.core.types import TransferParams
 from . import controllers, kernels
 from .bucketing import COMPACT_FLOOR, PROFILE_PAD_FLOOR, bucket
 from .reference import resume_file
+from .shared import resolve_fabric
 from .shim import NO_CHUNK, ArrayOps, numpy_ops
 
 _EPS = 1e-12
@@ -213,6 +214,7 @@ class FabricSimulation:
         waterfill_impl: Optional[str] = None,
         fused_step: Optional[str] = None,
         timeline_budget: Optional[int] = None,
+        fabric: Optional[Sequence] = None,
         plan=None,
     ):
         self.ops = ops or numpy_ops()
@@ -247,6 +249,11 @@ class FabricSimulation:
         if plan is not None:
             if sims:
                 raise ValueError("pass either sims or plan=, not both")
+            if fabric is not None:
+                raise ValueError(
+                    "plan= batches carry their fabric column on the plan "
+                    "itself (ScenarioPlan.fabrics); fabric= is sims-only"
+                )
             self._init_from_plan(plan)
             return
         if names is None:
@@ -257,6 +264,11 @@ class FabricSimulation:
         ]
         S = len(self.rt)
         self.S = S
+        if fabric is not None and len(fabric) != S:
+            raise ValueError(
+                f"fabric column length {len(fabric)} != batch size {S}"
+            )
+        self._set_fabric(fabric)
         self.C = 4  # channel capacity; grows on demand
         self.P = 4  # resume-stack capacity; grows on demand
         # chunk axis bucketed to the canonical pow2 ladder: padding chunks
@@ -413,7 +425,11 @@ class FabricSimulation:
         #: its channel/resume axes from it so capacity-guard parks never
         #: fire for built-in schedulers
         self.cap_need = np.array(
-            [self._worst_case_channels(r) for r in self.rt], dtype=np.int64
+            [
+                self._worst_case_channels(r, bool(self.group_id[r.index] >= 0))
+                for r in self.rt
+            ],
+            dtype=np.int64,
         )
         self._need_c_floor = 1
         self._started = False
@@ -569,20 +585,49 @@ class FabricSimulation:
             plan.open_n[:, :K].copy(),
             plan.visit_rank[:, :K].copy(),
         )
+        # plan.cap_need already carries the coupled SC widening (see
+        # plan.build_plan); only the membership arrays resolve here
+        self._set_fabric(getattr(plan, "fabrics", None))
         self._started = False
 
+    def _set_fabric(self, fabrics) -> None:
+        """Lower the per-row fabric column into the coupling arrays the
+        sweep reads (``group_id`` (S,), ``link_member`` (L, S),
+        ``link_cap`` (L,)); all-``None`` columns collapse to the
+        uncoupled fast path (``self.coupled`` False, L == 0)."""
+        if fabrics is None or all(f is None for f in fabrics):
+            self.group_id = np.full(self.S, -1, dtype=np.int64)
+            self.link_member = np.zeros((0, self.S), dtype=bool)
+            self.link_cap = np.zeros(0, dtype=np.float64)
+            self._n_groups = 0
+            self.coupled = False
+            return
+        fab = resolve_fabric(fabrics)
+        self.group_id = fab.group_id
+        self.link_member = fab.member
+        self.link_cap = fab.link_cap
+        self._n_groups = fab.n_groups
+        self.coupled = fab.coupled
+
     @staticmethod
-    def _worst_case_channels(r: _ScenarioRuntime) -> int:
+    def _worst_case_channels(
+        r: _ScenarioRuntime, coupled: bool = False
+    ) -> int:
         """Closed-form bound on channels a scenario can hold at once.
 
         * SC holds one chunk's wave at a time, except when empty-chunk (or
           exactly tied) completions advance the cursor while earlier waves
           still run — each such completion co-schedules at most one more
           chunk, so the bound is the sum of the ``1 + n_empty`` largest
-          per-chunk concurrencies.
+          per-chunk concurrencies. Coupled rows advance on the *group*
+          horizon, so completion ties the uncoupled physics could never
+          produce become ordinary (two chunks starved to identical rates
+          finish on the same sweep); the only safe static bound is every
+          wave live at once — the full concurrency sum.
         * MC / ProMC open ``max(maxCC, n_nonempty)`` channels up front
           (every non-empty chunk gets at least one) and every later
-          transition (laggard grants, ProMC moves) conserves the count.
+          transition (laggard grants, ProMC moves) conserves the count —
+          coupling changes rates, never that invariant.
         * Trivial baselines and static-params candidate rows only act at
           t=0 (bounded by the per-chunk concurrency sum — exactly the
           candidate's ``cc`` for a one-chunk static row); custom
@@ -595,7 +640,7 @@ class FabricSimulation:
         )
         n_empty = len(r.chunks) - len(conc)
         max_cc = int(getattr(r.scheduler, "max_cc", 1))
-        if kind == KIND_SC:
+        if kind == KIND_SC and not coupled:
             return max(1, sum(conc[: 1 + n_empty]))
         if kind in (KIND_MC, KIND_PROMC):
             return max(1, max_cc, len(conc))
@@ -934,7 +979,11 @@ class FabricSimulation:
         act = ~self.done if rows is None else (~self.done & rows)
         if not act.any():
             return
-        if self.fused_step == "pallas" and not self.prepend_n.any():
+        if (
+            self.fused_step == "pallas"
+            and not self.coupled
+            and not self.prepend_n.any()
+        ):
             # resume-free sweeps (the overwhelmingly common case) run
             # water-fill + horizon + advance + FIFO feed as one fused
             # Pallas launch; _post then skips its own feed
@@ -982,6 +1031,23 @@ class FabricSimulation:
             self.ops, n_t, eff_bw, self.disk_rate, self.sat_cc,
             self.contention,
         )
+        if self.coupled:
+            # shared-fabric override: each coupled row's demand is what it
+            # could actually move uncoupled — pool clipped to its channel
+            # caps, totalled with waterfill's own cumsum-of-sorted
+            # reduction so an unsaturated grant reproduces the uncoupled
+            # water-fill bit for bit — and the cross-row kernel shrinks
+            # the pools of rows on saturated links to the max-min share
+            caps_eff = np.where(transferring, self.cap, 0.0)
+            demand = np.where(
+                act & (self.group_id >= 0),
+                np.minimum(pool, kernels.caps_total(self.ops, caps_eff)),
+                0.0,
+            )
+            grant, _ = kernels.waterfill_coupled(
+                self.ops, demand, self.link_member, self.link_cap
+            )
+            pool = np.where(self.group_id >= 0, grant, pool)
         # water-fill only live rows: the sort inside is the costliest
         # per-iteration op and finished scenarios would pay it for nothing
         rates = np.zeros_like(self.rem)
@@ -1009,6 +1075,19 @@ class FabricSimulation:
             self.busy, self.dead, transferring, self.rem, rates,
         )
         dt = np.where(act, dt, 0.0)
+        if self.coupled:
+            # lockstep dt: a fabric group shares one clock, so every live
+            # member advances by the group's minimum horizon. A member
+            # whose own next event lies further out takes a partial
+            # advance — no completion/feed/tick threshold is crossed, so
+            # _post is a natural no-op for it beyond the moved bytes.
+            live = act & (self.group_id >= 0)
+            if live.any():
+                g_dt = np.full(self._n_groups, np.inf)
+                np.minimum.at(g_dt, self.group_id[live], dt[live])
+                dt = np.where(
+                    live, g_dt[np.maximum(self.group_id, 0)], dt
+                )
 
         # stranded-chunk detection (scheduler bug), as in the event sim
         no_busy = act & ~self.busy.any(axis=1)
@@ -1337,6 +1416,9 @@ class FabricSimulation:
                 )
         for name in self._row_arrays():
             setattr(self, name, getattr(self, name)[alive])
+        self.group_id = self.group_id[alive]
+        if self.link_member.shape[0]:
+            self.link_member = self.link_member[:, alive]
         survivors = []
         for new_row, s in enumerate(alive):
             r = self.rt[int(s)]
@@ -1350,7 +1432,14 @@ class FabricSimulation:
         return _ROW_ARRAYS
 
     def _maybe_compact(self) -> None:
-        # amortized: only rebuild once half the batch has finished
+        # amortized: only rebuild once half the batch has finished.
+        # Coupled batches never compact: a done tenant already releases
+        # its link share (zero demand), and keeping row indices stable
+        # keeps the (L, S) membership table and group ids frozen for the
+        # whole run (the jax backend additionally keeps one compiled
+        # program that way).
+        if self.coupled:
+            return
         if self.S > 16 and int(self.done.sum()) * 2 >= self.S:
             self._compact()
 

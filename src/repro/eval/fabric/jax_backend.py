@@ -63,6 +63,7 @@ Execution-loop structure (the overlap-pipelined executor rides on it):
 """
 from __future__ import annotations
 
+import contextlib
 import os
 import threading
 import time
@@ -134,25 +135,68 @@ def donation_enabled(default: Optional[bool] = None) -> bool:
     executor is active — ``REPRO_FABRIC_EXECUTOR=serial`` preserves the
     undonated pre-executor execution path byte for byte.
 
-    Donation is forced OFF while a persistent compilation cache is
-    configured (``REPRO_XLA_CACHE`` / ``jax_compilation_cache_dir``):
-    on jax 0.4.x CPU, donated executables of this program do not
-    survive the cache's serialize/deserialize round trip — a program
-    read back from disk aliases stale buffers and produces
-    nondeterministic garbage (diverging schedulers, phantom stranded
-    chunks). Fresh compiles of the identical donated program are
-    correct, so the guard only bites cache *reads*; the explicit env
-    override still wins for anyone bisecting that upstream bug."""
+    A configured persistent compilation cache (``REPRO_XLA_CACHE`` /
+    ``jax_compilation_cache_dir``) no longer blanket-disables donation.
+    The underlying hazard — on jax 0.4.x CPU, donated executables of
+    this program do not survive the cache's serialize/deserialize round
+    trip, and a program read back from disk aliases stale buffers and
+    produces nondeterministic garbage — only bites programs that
+    *round-trip the cache*. Freshly-compiled donated programs in the
+    same process are correct, so every donated compile now runs inside
+    :func:`_suppress_persistent_cache` (donated executables are never
+    serialized, hence never read back); only a signature whose donated
+    compile failed falls back to the undonated cache-served program
+    (see :meth:`JaxFabricSimulation._device_call`)."""
     env = os.environ.get("REPRO_FABRIC_DONATE")
     if env is not None:
         return env.strip().lower() not in ("0", "false", "off", "no", "")
-    if _persistent_cache_active():
-        return False
     if default is not None:
         return bool(default)
     from .executor import executor_mode
 
     return executor_mode() == "async"
+
+
+_SUPPRESS_LOCK = threading.Lock()
+_suppress_depth = 0
+_suppressed_cache_dir: Optional[str] = None
+
+
+@contextlib.contextmanager
+def _suppress_persistent_cache():
+    """Scoped (refcounted, process-wide) removal of the persistent
+    compilation cache directory.
+
+    Donated executables of the device loop must never be serialized to —
+    or deserialized from — the persistent cache (the jax 0.4.x CPU
+    aliasing bug above), so every donated compile runs inside this
+    window. The config flag is process-global, hence the refcount: nested
+    or concurrent donated compiles share one save/restore, and the worst
+    case for an unrelated concurrent compile is one missed cache write,
+    never a wrong program."""
+    global _suppress_depth, _suppressed_cache_dir
+    with _SUPPRESS_LOCK:
+        if _suppress_depth == 0:
+            saved = None
+            try:
+                saved = jax.config.jax_compilation_cache_dir
+            except Exception:
+                saved = None
+            _suppressed_cache_dir = saved
+            if saved:
+                jax.config.update("jax_compilation_cache_dir", None)
+        _suppress_depth += 1
+    try:
+        yield
+    finally:
+        with _SUPPRESS_LOCK:
+            _suppress_depth -= 1
+            if _suppress_depth == 0:
+                if _suppressed_cache_dir:
+                    jax.config.update(
+                        "jax_compilation_cache_dir", _suppressed_cache_dir
+                    )
+                _suppressed_cache_dir = None
 
 
 #: state arrays the device sweep may mutate (host <-> device sync set)
@@ -204,7 +248,9 @@ _TIMELINE = (
 )
 
 
-def _phase_advance(row: dict, qsizes, with_stack: bool = True):
+def _phase_advance(
+    row: dict, qsizes, with_stack: bool = True, coupled: bool = False
+):
     """Phase A of one sweep (always runs): physics advance, park
     detection, queue feed, completion marking, tick EMA bookkeeping, and
     scenario-done detection — everything except the (rarer) controller
@@ -214,6 +260,15 @@ def _phase_advance(row: dict, qsizes, with_stack: bool = True):
     (batch-level ``lax.cond``) on sweeps where no resume file exists
     anywhere — the common case — skipping the resume-stack gathers whose
     cost scales with the pre-sized stack depth P.
+
+    ``coupled=True`` is the shared-fabric variant: the coupled device
+    loop pre-computes each row's granted pool (``row["_pool_ovr"]``, the
+    cross-row ``waterfill_coupled`` output — the uncoupled pool verbatim
+    for rows outside every fabric group) and the group lockstep horizon
+    cap (``row["_dt_ovr"]``, +inf for uncoupled rows), and this phase
+    substitutes them for its own pool / caps its own dt. Everything
+    downstream of the two substitutions is the uncoupled sweep
+    unchanged.
     """
     ops = jax_ops()
     xp = ops.xp
@@ -250,10 +305,13 @@ def _phase_advance(row: dict, qsizes, with_stack: bool = True):
         next_prof = xp.min(
             xp.where(row["prof_t"] > row["t"], row["prof_t"], xp.inf)
         )
-    pool = kernels.disk_pool(
-        ops, xp.sum(transferring), eff_bw, row["disk_rate"],
-        row["sat_cc"], row["contention"],
-    )
+    if coupled:
+        pool = row["_pool_ovr"]
+    else:
+        pool = kernels.disk_pool(
+            ops, xp.sum(transferring), eff_bw, row["disk_rate"],
+            row["sat_cc"], row["contention"],
+        )
     rates = kernels.waterfill(
         ops, xp.where(transferring, row["cap"], 0.0), pool
     )
@@ -273,6 +331,11 @@ def _phase_advance(row: dict, qsizes, with_stack: bool = True):
         xp.minimum(row["next_tick"] - row["t"], next_prof - row["t"]),
         row["busy"], row["dead"], transferring, row["rem"], rates,
     )
+    if coupled:
+        # lockstep: a fabric group shares one clock; members take the
+        # group-minimum horizon (a partial advance crosses no threshold,
+        # so the sweep is a natural no-op beyond the moved bytes)
+        dt = xp.minimum(dt, row["_dt_ovr"])
     dt = xp.where(alive, dt, 0.0)
     t2 = row["t"] + dt
     busy2, dead2, rem2, moved, finished = kernels.advance_channels(
@@ -661,6 +724,165 @@ _device_rounds_donated = jax.jit(
 )
 
 
+def _row_demand(row: dict):
+    """Per-row inputs to the cross-row coupling step: the uncoupled
+    disk/bandwidth pool and the coupled *demand* — that pool clipped to
+    the row's transferring channel caps, totalled with ``caps_total``
+    (waterfill's own cumsum-of-sorted reduction, so an unsaturated grant
+    reproduces the uncoupled water-fill bit for bit). Mirrors the phase-A
+    prologue's physics read-only; the sweep itself recomputes nothing
+    from these."""
+    ops = jax_ops()
+    xp = ops.xp
+    runnable = (
+        ~row["done"]
+        & (row["stall"] == _STALL_NONE)
+        & (row["err"] == _ERR_NONE)
+    )
+    transferring = row["busy"] & (row["dead"] <= _EPS)
+    if row["prof_t"].shape[-1] == 1:
+        eff_bw = row["bw"]
+    else:
+        prof_at = xp.sum(row["prof_t"] <= row["t"]) - 1
+        mult = row["prof_mult"][xp.maximum(prof_at, 0)]
+        eff_bw = row["bw"] * xp.where(prof_at >= 0, mult, 1.0)
+    pool = kernels.disk_pool(
+        ops, xp.sum(transferring), eff_bw, row["disk_rate"],
+        row["sat_cc"], row["contention"],
+    )
+    caps_eff = xp.where(transferring, row["cap"], 0.0)
+    demand = xp.minimum(pool, kernels.caps_total(ops, caps_eff))
+    return runnable, pool, demand
+
+
+def _row_horizon(row: dict, pool):
+    """One row's own event horizon under an externally granted ``pool``
+    — the per-member input to the group's lockstep minimum. Phase A then
+    recomputes the identical dt and caps it with the group minimum."""
+    ops = jax_ops()
+    xp = ops.xp
+    transferring = row["busy"] & (row["dead"] <= _EPS)
+    if row["prof_t"].shape[-1] == 1:
+        next_prof = xp.inf
+    else:
+        next_prof = xp.min(
+            xp.where(row["prof_t"] > row["t"], row["prof_t"], xp.inf)
+        )
+    rates = kernels.waterfill(
+        ops, xp.where(transferring, row["cap"], 0.0), pool
+    )
+    return kernels.event_horizon(
+        ops,
+        xp.minimum(row["next_tick"] - row["t"], next_prof - row["t"]),
+        row["busy"], row["dead"], transferring, row["rem"], rates,
+    )
+
+
+def _device_rounds_coupled_fn(
+    mut: dict, const: dict, qsizes, fab: dict, compact_floor: int
+):
+    """The shared-fabric twin of :func:`_device_rounds_fn`: identical
+    vmapped phases, but every sweep starts with one cross-row coupling
+    step — per-row demands (vmapped), one batch ``waterfill_coupled``
+    over the (links x rows) membership table, per-row horizons under the
+    grants (vmapped), and a segment-min over group ids for the lockstep
+    dt — all inside the fused ``while_loop``, so coupled sweeps stay
+    zero-host-round.
+
+    ``fab`` carries ``gid`` (rows,) int64 (-1 == uncoupled, pad rows
+    included), ``member`` (L, rows) bool, ``link_cap`` (L,) f64 (pad
+    links hold cap 0 and no members — their water level is +inf, which
+    the member-min ignores), and ``gslot`` (G,) f64 zeros whose only job
+    is giving the group axis a static shape for the segment-min.
+
+    No early-exit clause: coupled batches never compact (a done tenant
+    already releases its link share via zero demand, and a frozen row
+    set keeps the membership table and one compiled program for the
+    whole run), so exiting early buys a host sync for nothing.
+    """
+    import functools
+
+    ops = jax_ops()
+    phase_a = jax.vmap(
+        functools.partial(_phase_advance, coupled=True), in_axes=(0, None)
+    )
+    phase_a_fifo = jax.vmap(
+        functools.partial(_phase_advance, with_stack=False, coupled=True),
+        in_axes=(0, None),
+    )
+    phase_b = jax.vmap(_phase_complete, in_axes=(0, None))
+    phase_c = jax.vmap(_phase_tick)
+    phase_d = jax.vmap(_phase_move, in_axes=(0, None))
+    demand_v = jax.vmap(_row_demand)
+    horizon_v = jax.vmap(_row_horizon)
+
+    gid = fab["gid"]
+    member = fab["member"]
+    link_cap = fab["link_cap"]
+    G = fab["gslot"].shape[0]
+    gclip = jnp.clip(gid, 0, G - 1)
+    in_group = gid >= 0
+
+    def runnable(st):
+        return (
+            ~st["done"]
+            & (st["stall"] == _STALL_NONE)
+            & (st["err"] == _ERR_NONE)
+        )
+
+    def cond(carry):
+        st, it = carry
+        return (jnp.sum(runnable(st)) > 0) & (it < _ROUND_CAP)
+
+    def body(carry):
+        st, it = carry
+        st = {**st, **const}
+        live, pool, demand = demand_v(st)
+        grant, _ = kernels.waterfill_coupled(
+            ops, jnp.where(live & in_group, demand, 0.0), member, link_cap
+        )
+        pool_ovr = jnp.where(in_group, grant, pool)
+        dt_own = horizon_v(st, pool_ovr)
+        g_dt = (
+            jnp.full((G,), jnp.inf)
+            .at[gclip]
+            .min(jnp.where(live & in_group, dt_own, jnp.inf))
+        )
+        st["_pool_ovr"] = pool_ovr
+        st["_dt_ovr"] = jnp.where(in_group, g_dt[gclip], jnp.inf)
+        st = lax.cond(
+            jnp.any(st["prepend_n"] > 0),
+            lambda s: phase_a(s, qsizes),
+            lambda s: phase_a_fifo(s, qsizes),
+            st,
+        )
+        st = lax.while_loop(
+            lambda s: jnp.any(s["_completed"] & s["_handler"][:, None]),
+            lambda s: phase_b(s, qsizes),
+            st,
+        )
+        st = lax.cond(jnp.any(st["_tick"]), phase_c, lambda s: s, st)
+        st = lax.cond(
+            jnp.any(st["_moving"]), lambda s: phase_d(s, qsizes),
+            lambda s: s, st,
+        )
+        return {k: st[k] for k in _CARRY}, it + 1
+
+    state, iters = lax.while_loop(cond, body, (dict(mut), 0))
+    return state, iters
+
+
+#: the coupled loop and its donated twin. ``fab`` rides the jit
+#: signature through its array shapes (L, G, rows) — bucketed to the
+#: pow2 ladder by ``_upload_fabric`` so the program count stays bounded.
+_device_rounds_coupled = jax.jit(
+    _device_rounds_coupled_fn, static_argnums=4
+)
+_device_rounds_coupled_donated = jax.jit(
+    _device_rounds_coupled_fn, donate_argnums=0, static_argnums=4
+)
+
+
 # ------------------------------------------------------------------ #
 # AOT warm-start: pre-compile the canonical-signature ladder
 # ------------------------------------------------------------------ #
@@ -768,8 +990,8 @@ _AOT_PENDING: dict = {}
 # every source file in this package — any edit to the traced code (or
 # the constants it closes over) invalidates the whole trace cache.
 # Donated programs are excluded (donation metadata does not survive the
-# export round trip, and donation is off whenever the persistent cache —
-# and hence this cache — is active).
+# export round trip; donated compiles run inside the cache-suppression
+# window instead, so they never reach this cache either).
 
 _EXPORT_DIGEST: Optional[str] = None
 
@@ -882,9 +1104,17 @@ def warm_signature(
                     .lower(*signature_shapes(sig, device))
                     .compile()
                 )
+            elif donate:
+                # donated executables must never enter the persistent
+                # cache (they don't survive its serialize/deserialize
+                # round trip on jax 0.4.x CPU): compile them inside the
+                # cache-suppression window so only fresh programs exist
+                with _suppress_persistent_cache():
+                    compiled = _device_rounds_donated.lower(
+                        *signature_shapes(sig, device), int(floor)
+                    ).compile()
             else:
-                fn = _device_rounds_donated if donate else _device_rounds
-                compiled = fn.lower(
+                compiled = _device_rounds.lower(
                     *signature_shapes(sig, device), int(floor)
                 ).compile()
     except Exception:
@@ -929,6 +1159,8 @@ def compiled_program_count() -> int:
         aot
         + _device_rounds._cache_size()
         + _device_rounds_donated._cache_size()
+        + _device_rounds_coupled._cache_size()
+        + _device_rounds_coupled_donated._cache_size()
     )
 
 
@@ -1026,6 +1258,32 @@ class JaxFabricSimulation(FabricSimulation):
             self._static_cache_key = cache_key
         return mut, self._static_cache
 
+    def _upload_fabric(self) -> dict:
+        """Device form of the batch's coupling arrays, padded row-wise to
+        the device row bucket (pad rows: gid -1, no memberships) and with
+        the link / group axes bucketed to the pow2 ladder (pad links hold
+        cap 0 and no members — water level +inf, invisible to the
+        member-min; pad group slots only ever hold the +inf identity).
+        Built once per run: coupled batches never compact or grow, so the
+        shapes — and the one compiled coupled program — stay fixed."""
+        rows = self._pad_rows()
+        S = self.S
+        L = int(self.link_cap.shape[0])
+        Lp = bucket(max(L, 1), 2)
+        Gp = bucket(max(self._n_groups, 1), 2)
+        gid = np.full(rows, -1, dtype=np.int64)
+        gid[:S] = self.group_id
+        member = np.zeros((Lp, rows), dtype=bool)
+        member[:L, :S] = self.link_member
+        caps = np.zeros(Lp, dtype=np.float64)
+        caps[:L] = self.link_cap
+        return {
+            "gid": self._to_device(gid),
+            "member": self._to_device(member),
+            "link_cap": self._to_device(caps),
+            "gslot": self._to_device(np.zeros(Gp, dtype=np.float64)),
+        }
+
     def _rounds_signature(self) -> Tuple[int, ...]:
         """The canonical signature of the *current* device shape (it
         walks down the rows ladder as compaction fires) — the AOT-cache
@@ -1038,13 +1296,48 @@ class JaxFabricSimulation(FabricSimulation):
     def _device_call(self, mut: dict, const: dict, qsizes):
         """One device round through the best available executable: the
         AOT-warmed one when the executor pre-built it, else the jit twin
-        matching this batch's donation mode."""
+        matching this batch's donation mode.
+
+        Coupled batches never consult the AOT cache — the executor warms
+        *uncoupled* signatures, and a shape-compatible uncoupled
+        executable would silently run the wrong physics — they go
+        straight to the coupled jit twins (donated ones inside the
+        cache-suppression window, like every donated compile).
+
+        Donated batches under a persistent compilation cache resolve via
+        a synchronous AOT warm (whose compile runs cache-suppressed), so
+        a donated executable never round-trips the cache; if that warm
+        fails, the batch drops to the undonated cache-served program for
+        the rest of its run instead of risking stale-buffer aliasing.
+        """
         floor = self.compact_floor()
-        exe = _aot_lookup(
-            self._rounds_signature(), self.device, self.donate, floor
-        )
+        if self.coupled:
+            if self.donate:
+                if _persistent_cache_active():
+                    with _suppress_persistent_cache():
+                        return _device_rounds_coupled_donated(
+                            mut, const, qsizes, self._fab_dev, floor
+                        )
+                return _device_rounds_coupled_donated(
+                    mut, const, qsizes, self._fab_dev, floor
+                )
+            return _device_rounds_coupled(
+                mut, const, qsizes, self._fab_dev, floor
+            )
+        sig = self._rounds_signature()
+        exe = _aot_lookup(sig, self.device, self.donate, floor)
         if exe is not None:
             return exe(mut, const, qsizes)
+        if self.donate and _persistent_cache_active():
+            warm_signature(sig, self.device, True, floor)
+            exe = _aot_lookup(sig, self.device, True, floor)
+            if exe is not None:
+                return exe(mut, const, qsizes)
+            self.donate = False
+            exe = _aot_lookup(sig, self.device, False, floor)
+            if exe is not None:
+                return exe(mut, const, qsizes)
+            return _device_rounds(mut, const, qsizes, floor)
         fn = _device_rounds_donated if self.donate else _device_rounds
         return fn(mut, const, qsizes, floor)
 
@@ -1112,6 +1405,10 @@ class JaxFabricSimulation(FabricSimulation):
         (its rows drain together; the narrow tail rungs only buy extra
         host syncs there).
         """
+        if self.coupled:
+            # frozen row set: membership table, group ids, and the one
+            # compiled coupled program stay valid for the whole run
+            return
         floor = self.compact_floor()
         live = self.S - int(self.done.sum())
         pad = self._pad_rows()
@@ -1142,6 +1439,8 @@ class JaxFabricSimulation(FabricSimulation):
                 [self.qsizes, np.zeros(self._q_pad - self.qsizes.shape[0])]
             )
         )
+        if self.coupled:
+            self._fab_dev = self._upload_fabric()
         try:
             while not self.done.all():
                 progressed = False

@@ -68,6 +68,108 @@ def waterfill_batch(caps, pool):
     return waterfill(numpy_ops(), caps, pool)
 
 
+def waterfill_level(ops: ArrayOps, caps, pool):
+    """The water level ``lam`` of :func:`waterfill`, not the allocation.
+
+    ``caps``: (..., C) per-entity ceilings (idle entities carry 0);
+    ``pool``: (...,). Returns (...,): the level solving
+    ``sum_i min(cap_i, lam) = pool`` when the pool binds, and ``+inf``
+    when it does not (``pool >= sum(caps)`` — every entity takes its full
+    cap and the constraint is slack). The ``+inf`` convention is what the
+    coupled water-fill needs: an unsaturated link imposes no ceiling on
+    its members.
+    """
+    xp = ops.xp
+    inf = float("inf")
+    C = caps.shape[-1]
+    if C == 0:
+        return pool * 0.0 + inf
+    caps_sorted = xp.sort(caps, axis=-1)
+    prefix = xp.cumsum(caps_sorted, axis=-1)
+    pool_eff = xp.clip(xp.minimum(pool, prefix[..., -1]), 0.0, None)
+    prev = xp.concatenate(
+        [xp.zeros_like(prefix[..., :1]), prefix[..., :-1]], axis=-1
+    )
+    denom = (C - xp.arange(C)).astype(caps_sorted.dtype)
+    lam_k = (pool_eff[..., None] - prev) / denom
+    valid = lam_k <= caps_sorted + 1e-9 * xp.maximum(caps_sorted, 1.0)
+    k = xp.argmax(valid, axis=-1)
+    no_valid = ~xp.any(valid, axis=-1)
+    lam = ops.table_lookup(lam_k, k[..., None])[..., 0]
+    lam = xp.where(no_valid, caps_sorted[..., -1], lam)
+    return xp.where(pool >= prefix[..., -1], inf, lam)
+
+
+#: fixed Jacobi sweep count of :func:`waterfill_coupled`. Constraint
+#: information propagates one link-sharing hop per sweep, so this bounds
+#: the fabric-graph diameter the relaxation resolves exactly; tenant
+#: groups use 1-4 links, and the same constant on every backend keeps
+#: event / NumPy / JAX allocations bit-aligned by construction.
+COUPLED_ITERS = 12
+
+
+def waterfill_coupled(ops: ArrayOps, demand, member, link_cap):
+    """Max-min fair share *across* scenario rows coupled by shared links.
+
+    Two-level fairness: each backbone link grants tenant-level max-min
+    fair shares (a per-link water level), and each row then water-fills
+    its grant across its own channels (:func:`waterfill`, done by the
+    caller). ``demand``: (R,) per-row offered load (the rate the row
+    could use this sweep — ``min(pool, sum of transferring caps)``);
+    ``member``: (L, R) boolean link membership; ``link_cap``: (L,)
+    capacities. Returns ``(x, levels)``: the (R,) per-row grant
+    ``x_r = min(d_r, min over member links of level_l)`` and the (L,)
+    final levels (``+inf`` on unsaturated links).
+
+    Solved by Jacobi relaxation on the per-link levels: each sweep
+    re-solves every link's single-link level (:func:`waterfill_level`)
+    with members capped at ``min(demand, best level among the row's
+    *other* links)``, starting from all-unsaturated. Fixed
+    :data:`COUPLED_ITERS` sweeps on every backend — the fixpoint is the
+    bottleneck-link characterization of progressive filling
+    (``reference.coupled_fair_share``), and a fixed count keeps the
+    computation identical across event / NumPy / JAX.
+
+    Rows with no link membership pass through: ``x_r = demand_r``.
+    """
+    xp = ops.xp
+    inf = float("inf")
+    L = member.shape[0]
+    if L == 0:
+        return demand, xp.zeros((0,), dtype=demand.dtype)
+    member = member != 0  # accept 0/1 tables
+    levels = xp.full((L,), inf)
+    # (L, L') exclusion mask: sweep l sees every link but itself
+    off_diag = xp.arange(L)[:, None] != xp.arange(L)[None, :]
+    for _ in range(COUPLED_ITERS):
+        lvl_mat = xp.where(member, levels[:, None], inf)  # (L, R)
+        # min over the row's OTHER links: (L, L', R) -> (L, R)
+        excl = xp.min(
+            xp.where(off_diag[:, :, None], lvl_mat[None, :, :], inf),
+            axis=1,
+        )
+        caps = xp.where(member, xp.minimum(demand[None, :], excl), 0.0)
+        levels = waterfill_level(ops, caps, link_cap)
+    row_lvl = xp.min(xp.where(member, levels[:, None], inf), axis=0)
+    return xp.minimum(demand, row_lvl), levels
+
+
+def caps_total(ops: ArrayOps, caps):
+    """Per-row cap total via the *same* sorted prefix sum ``waterfill``
+    uses internally (not ``xp.sum``, whose pairwise accumulation can
+    differ in the last ulp). The coupled drivers form a row's offered
+    load as ``min(pool, caps_total)``; matching the summation order makes
+    ``waterfill(caps, min(pool, caps_total))`` bit-identical to
+    ``waterfill(caps, pool)`` — the single-tenant/unsaturated identity
+    the coupled path's difftests pin.
+    """
+    xp = ops.xp
+    C = caps.shape[-1]
+    if C == 0:
+        return xp.zeros(caps.shape[:-1], dtype=caps.dtype)
+    return xp.cumsum(xp.sort(caps, axis=-1), axis=-1)[..., -1]
+
+
 def disk_pool(
     ops: ArrayOps, n_transferring, bandwidth, disk_rate, saturation_cc,
     contention,

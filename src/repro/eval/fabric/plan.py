@@ -197,6 +197,9 @@ class ScenarioPlan:
     names: List[str]
     sched_refs: List[_NameRef]
     chunk_refs: List[tuple]
+    #: per-row Optional[SharedFabric] coupling spec (None == uncoupled);
+    #: value-like frozen dataclasses shared with the source scenarios
+    fabrics: List
     # (S,) row columns
     net_idx: np.ndarray
     kind: np.ndarray
@@ -240,13 +243,14 @@ class ScenarioPlan:
             names=pick(self.names),
             sched_refs=pick(self.sched_refs),
             chunk_refs=pick(self.chunk_refs),
+            fabrics=pick(self.fabrics),
             **{
                 f.name: getattr(self, f.name)[idx]
                 for f in dataclasses.fields(self)
                 if f.name
                 not in (
                     "K", "networks", "qsizes", "names", "sched_refs",
-                    "chunk_refs",
+                    "chunk_refs", "fabrics",
                 )
             },
         )
@@ -427,6 +431,7 @@ def build_plan(scenarios: Sequence) -> ScenarioPlan:
     names: List[str] = [""] * S
     sched_refs: List[Optional[_NameRef]] = [None] * S
     chunk_refs: List[tuple] = [()] * S
+    fabrics: List = [None] * S
 
     for i, sc in enumerate(scenarios):
         alg = sc.algorithm.lower()
@@ -462,6 +467,7 @@ def build_plan(scenarios: Sequence) -> ScenarioPlan:
         record_timeline[i] = sc.record_timeline
         names[i] = sc.name
         chunk_refs[i] = contexts[c].chunk_refs
+        fabrics[i] = getattr(sc, "shared_fabric", None)
         if alg == "static":
             pp, p, cc = sc.static_params
             sp_pp[i], sp_p[i], sp_cc[i] = pp, p, cc
@@ -666,6 +672,11 @@ def build_plan(scenarios: Sequence) -> ScenarioPlan:
     cap_sc = np.maximum(1, conc_real.max(axis=1, initial=0))
     cap_mc = np.maximum(np.maximum(1, max_cc), n_chunks)
     cap_static = np.maximum(1, conc_real.sum(axis=1))
+    # coupled SC rows advance on the group horizon, so cursor-advancing
+    # completion ties can co-schedule every wave: widen to the full
+    # concurrency sum (mirrors driver._worst_case_channels exactly)
+    coupled_row = np.array([f is not None for f in fabrics], dtype=bool)
+    cap_sc = np.where(coupled_row, cap_static, cap_sc)
     cap_need = np.where(
         is_sc, cap_sc, np.where(is_mc | is_promc, cap_mc, cap_static)
     ).astype(np.int64)
@@ -679,6 +690,7 @@ def build_plan(scenarios: Sequence) -> ScenarioPlan:
         names=names,
         sched_refs=sched_refs,  # type: ignore[arg-type]
         chunk_refs=chunk_refs,
+        fabrics=fabrics,
         net_idx=net_idx,
         kind=kind,
         trivial_tick=trivial[:, 0] if S else np.zeros(0, dtype=bool),

@@ -45,6 +45,7 @@ from .scenarios import (
     default_matrix,
     full_matrix,
     smoke_matrix,
+    tenant_matrix,
 )
 
 #: default scenarios per batched execution chunk (bounds peak memory).
@@ -160,8 +161,43 @@ def shape_hint(concurrency: int) -> int:
 def run_scenario(scenario: Scenario, backend: str = "event") -> SimResult:
     backend = _resolve_backend(backend)
     if backend == "event":
+        if scenario.shared_fabric is not None:
+            from .fabric.coupled_event import run_event_coupled
+
+            return run_event_coupled([scenario])[0]
         return build_simulation(scenario).run()
     return run_matrix([scenario], backend=backend)[0]
+
+
+def _group_atomic_parts(
+    order: Sequence[int], fabrics: Sequence, size: int
+) -> tuple:
+    """Split a cost-sorted row order into ``(uncoupled_order,
+    coupled_parts)``.
+
+    A shared-fabric group is only coupled when its members share a batch,
+    so chunking must never split one: coupled rows leave the ordinary
+    cost-sorted span stream and are packed whole-group (greedily, in
+    first-appearance order) into their own execution parts of at most
+    ``size`` rows — a group larger than ``size`` still stays whole in an
+    oversized part. Uncoupled rows keep the untouched span path, so
+    matrices without fabrics chunk exactly as before.
+    """
+    uncoupled = [i for i in order if fabrics[i] is None]
+    groups: Dict[str, List[int]] = {}
+    for i in order:
+        if fabrics[i] is not None:
+            groups.setdefault(fabrics[i].group, []).append(i)
+    parts: List[List[int]] = []
+    cur: List[int] = []
+    for rows in groups.values():
+        if cur and len(cur) + len(rows) > size:
+            parts.append(cur)
+            cur = []
+        cur.extend(rows)
+    if cur:
+        parts.append(cur)
+    return uncoupled, parts
 
 
 def run_built(
@@ -172,8 +208,15 @@ def run_built(
     chunk_size: Optional[int] = DEFAULT_CHUNK_SIZE,
     hints: Optional[Sequence[int]] = None,
     executor: Optional[str] = None,
+    fabrics: Optional[Sequence] = None,
 ) -> List[SimResult]:
     """Chunked batched execution of *lazily built* Simulations.
+
+    ``fabrics`` is the optional per-row ``SharedFabric`` column: coupled
+    rows are chunked group-atomically (see :func:`_group_atomic_parts`)
+    and the column is threaded to the driver so shared-link contention
+    actually couples them; an all-``None`` (or absent) column keeps the
+    historical chunking byte for byte.
 
     ``builders[i]`` is a zero-argument callable returning a fresh
     ``Simulation`` (schedulers are stateful, so every run needs its own);
@@ -215,11 +258,35 @@ def run_built(
             order.sort(key=lambda i: costs[i])
     size = chunk_size or BACKEND_CHUNK_SIZE[backend]
     results: List[Optional[SimResult]] = [None] * len(builders)
-    parts = [
-        order[lo:hi]
-        for lo, hi in chunk_spans(len(order), size, pad_aligned=aligned)
-    ]
-    execute_chunks(cls, parts, builders, names, results, mode=executor)
+    make_chunk = None
+    if fabrics is not None and any(f is not None for f in fabrics):
+        uncoupled, coupled_parts = _group_atomic_parts(order, fabrics, size)
+        parts = [
+            uncoupled[lo:hi]
+            for lo, hi in chunk_spans(
+                len(uncoupled), size, pad_aligned=aligned
+            )
+        ] + coupled_parts
+        placed = getattr(cls, "supports_device_placement", False)
+
+        def make_chunk(part, dev):
+            kwargs = {"device": dev} if placed else {}
+            return cls(
+                [builders[i]() for i in part],
+                names=[names[i] for i in part],
+                fabric=[fabrics[i] for i in part],
+                **kwargs,
+            )
+
+    else:
+        parts = [
+            order[lo:hi]
+            for lo, hi in chunk_spans(len(order), size, pad_aligned=aligned)
+        ]
+    execute_chunks(
+        cls, parts, builders, names, results, mode=executor,
+        make_chunk=make_chunk,
+    )
     return results  # type: ignore[return-value]
 
 
@@ -256,10 +323,20 @@ def run_plan(
         order.sort(key=lambda i: costs[i])
     size = chunk_size or BACKEND_CHUNK_SIZE[backend]
     results: List[Optional[SimResult]] = [None] * n
-    parts = [
-        order[lo:hi]
-        for lo, hi in chunk_spans(n, size, pad_aligned=aligned)
-    ]
+    fabrics = getattr(plan, "fabrics", None)
+    if fabrics is not None and any(f is not None for f in fabrics):
+        uncoupled, coupled_parts = _group_atomic_parts(order, fabrics, size)
+        parts = [
+            uncoupled[lo:hi]
+            for lo, hi in chunk_spans(
+                len(uncoupled), size, pad_aligned=aligned
+            )
+        ] + coupled_parts
+    else:
+        parts = [
+            order[lo:hi]
+            for lo, hi in chunk_spans(n, size, pad_aligned=aligned)
+        ]
     placed = getattr(cls, "supports_device_placement", False)
     # fleet-scale planes (at least one full chunk) floor every chunk's
     # padded row count at the batch's compaction floor: the remainder
@@ -273,7 +350,9 @@ def run_plan(
     def make_chunk(part, dev):
         kwargs = {"device": dev} if placed else {}
         drv = cls(None, plan=plan.take(part), **kwargs)
-        if want_pad_floor:
+        # coupled chunks never compact, so pinning the pad floor would
+        # only inflate their fixed device shape
+        if want_pad_floor and not drv.coupled:
             drv._pad_floor = drv.compact_floor()
         return drv
 
@@ -299,6 +378,12 @@ def run_matrix(
     ``REPRO_FABRIC_INGEST=legacy`` — keeps the per-row object chain.
     """
     backend_r = _resolve_backend(backend)
+    if backend_r == "event" and any(
+        sc.shared_fabric is not None for sc in scenarios
+    ):
+        from .fabric.coupled_event import run_event_coupled
+
+        return run_event_coupled(scenarios)
     if backend_r != "event" and ingest_mode(ingest) == "plan":
         from .fabric.plan import build_plan, plan_supported
 
@@ -318,6 +403,7 @@ def run_matrix(
         chunk_size=chunk_size,
         hints=[shape_hint(_effective_cc(sc)) for sc in scenarios],
         executor=executor,
+        fabrics=[sc.shared_fabric for sc in scenarios],
     )
 
 
@@ -400,6 +486,9 @@ def compare_golden(
     return out
 
 
+MATRIX_NAMES = ("default", "smoke", "full", "tenant", "tenant-smoke")
+
+
 def build_matrix(name: str) -> List[Scenario]:
     if name == "default":
         return default_matrix()
@@ -407,7 +496,13 @@ def build_matrix(name: str) -> List[Scenario]:
         return smoke_matrix()
     if name == "full":
         return full_matrix()
-    raise ValueError(f"unknown matrix {name!r}; options: default, smoke, full")
+    if name == "tenant":
+        return tenant_matrix()
+    if name == "tenant-smoke":
+        return tenant_matrix(n_groups=6)
+    raise ValueError(
+        f"unknown matrix {name!r}; options: {', '.join(MATRIX_NAMES)}"
+    )
 
 
 def run_tune(args, scenarios: Sequence[Scenario]) -> int:
@@ -476,7 +571,7 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
-        "--matrix", choices=("default", "smoke", "full"), default="default"
+        "--matrix", choices=MATRIX_NAMES, default="default"
     )
     ap.add_argument(
         "--backend", choices=BACKENDS + ("batch",), default="event"

@@ -25,6 +25,8 @@ from repro.core.simulator import Simulation
 from repro.core.types import GB, MB, FileSpec, param_triple
 from repro.data import filesets
 
+from .fabric.shared import SharedFabric, resolve_fabric  # noqa: F401 (re-export)
+
 # --------------------------------------------------------------------------
 # dataset registry
 # --------------------------------------------------------------------------
@@ -120,6 +122,12 @@ class Scenario:
     #: flowing through the same matrix runner / cost-proxy chunking /
     #: difftest machinery as every heuristic row.
     static_params: Optional[Tuple[int, int, int]] = None
+    #: attachment to a coupled fabric group (shared backbone links with
+    #: finite capacity). ``None`` — the default everywhere outside
+    #: :func:`tenant_matrix` — keeps the row independent and its name
+    #: (and thus every golden snapshot) byte-identical to before the
+    #: shared-fabric layer existed.
+    shared_fabric: Optional[SharedFabric] = None
 
     def __post_init__(self):
         for field in ("network", "dataset", "algorithm"):
@@ -152,9 +160,14 @@ class Scenario:
             else ""
         )
         tl = "|tl" if self.record_timeline else ""
+        fab = (
+            f"|{self.shared_fabric.name_suffix}"
+            if self.shared_fabric is not None
+            else ""
+        )
         return (
             f"{self.network}|{self.dataset}|{self.algorithm}"
-            f"|cc{self.max_cc}|k{self.num_chunks}|s{self.seed}{st}{tl}"
+            f"|cc{self.max_cc}|k{self.num_chunks}|s{self.seed}{st}{tl}{fab}"
         )
 
     @property
@@ -174,9 +187,6 @@ class Scenario:
 #: matrix dataset with room to spare and bounds the worst case.
 FILES_CACHE_MAX_BYTES = 64 * 1024 * 1024
 
-#: rough per-FileSpec cost: the object, its slots, and the name string.
-_FILESPEC_BYTES = 120
-
 _files_cache: "OrderedDict[Tuple[str, int], tuple]" = OrderedDict()
 _files_cache_bytes = 0
 _files_cache_stats = {"hits": 0, "misses": 0, "evictions": 0}
@@ -189,9 +199,31 @@ _files_cache_lock = threading.RLock()
 
 
 def _entry_bytes(specs: tuple) -> int:
-    return 64 + _FILESPEC_BYTES * len(specs) + sum(
-        len(f.name) for f in specs
-    )
+    """Measured footprint of one cached fileset entry.
+
+    The original fixed ~120 B/FileSpec estimate undershot reality (a
+    FileSpec dataclass instance plus its ``__dict__``, name string, and
+    size int measure ~3-4x that on CPython 3.11), so a heavy-tail
+    candidate sweep could pin several times :data:`FILES_CACHE_MAX_BYTES`
+    while the accounting said it fit. Sum ``sys.getsizeof`` over the
+    entry tuple and each spec's object/dict/fields instead — O(n) once
+    per cache insert, identical cost shape to building the entry. The
+    same function sizes inserts and evictions, so the running
+    ``_files_cache_bytes`` total stays exact regardless of the estimate's
+    absolute accuracy.
+    """
+    import sys
+
+    size = sys.getsizeof(specs)
+    for f in specs:
+        size += sys.getsizeof(f)
+        d = getattr(f, "__dict__", None)
+        if d is not None:
+            size += sys.getsizeof(d)
+        size += sys.getsizeof(f.name) + sys.getsizeof(f.size)
+        if f.path is not None:
+            size += sys.getsizeof(f.path)
+    return size
 
 
 def files_cache_info() -> dict:
@@ -420,6 +452,77 @@ def timeline_matrix(seed: int = 0) -> List[Scenario]:
         dataclasses.replace(sc, record_timeline=True)
         for sc in smoke_matrix(seed)
     ]
+
+
+def tenant_matrix(
+    seed: int = 0,
+    n_groups: int = 36,
+    tenants_per_group: Tuple[int, int] = (4, 8),
+) -> List[Scenario]:
+    """Fleet matrix: N tenants coupled through shared backbone links.
+
+    Shaped after the fdtcp ``loadtest/`` fleet harness named in ROADMAP:
+    many concurrent transfer jobs, each a perfectly ordinary scenario row
+    (its own testbed, dataset, controller), launched against shared
+    infrastructure. Each of ``n_groups`` fabric groups holds 4-8 tenants
+    drawn from the SC / MC / ProMC / static mix; every tenant rides the
+    group's backbone link (sized at 35-85% of the members' summed
+    bandwidth, so contention actually binds) and 0-3 additional regional
+    links each shared by a random subset. The default 36 groups yield
+    ~216 scenarios — the >=200-row fleet the coupled difftests and the
+    contention report run on. Deterministic in ``seed``: groups, mixes,
+    and link capacities all come from one seeded PRNG.
+    """
+    import random
+
+    rng = random.Random(0xFAB ^ (seed * 2654435761 % 2**32))
+    algos = ("sc", "mc", "promc", "static")
+    datasets = ("des", "mixed", "small_dominated", "uniform_small")
+    out: List[Scenario] = []
+    for g in range(n_groups):
+        n_t = rng.randint(*tenants_per_group)
+        nets = [rng.choice(list(NETWORKS)) for _ in range(n_t)]
+        bws = [testbeds.TESTBEDS[n].bandwidth for n in nets]
+        group = f"g{g:03d}"
+        # backbone: all members; regional links: random subsets of >= 2
+        links = [("bb", rng.uniform(0.35, 0.85) * sum(bws))]
+        subsets = [list(range(n_t))]
+        for li in range(1, rng.randint(1, 4)):
+            members = sorted(
+                rng.sample(range(n_t), rng.randint(2, n_t))
+            )
+            cap = rng.uniform(0.4, 0.9) * sum(bws[m] for m in members)
+            links.append((f"l{li}", cap))
+            subsets.append(members)
+        for t in range(n_t):
+            mine = [
+                (name, cap)
+                for (name, cap), mem in zip(links, subsets)
+                if t in mem
+            ]
+            fab = SharedFabric(
+                group=group,
+                links=tuple(name for name, _ in mine),
+                capacity=tuple(cap for _, cap in mine),
+                tenant=f"t{t}",
+            )
+            algo = algos[(g + t) % len(algos)]
+            cc = rng.choice((4, 8))
+            sp = None
+            if algo == "static":
+                sp = (rng.choice((0, 2, 4)), rng.choice((2, 4)), cc)
+            out.append(
+                Scenario(
+                    network=nets[t],
+                    dataset=rng.choice(datasets),
+                    algorithm=algo,
+                    max_cc=cc,
+                    seed=seed,
+                    static_params=sp,
+                    shared_fabric=fab,
+                )
+            )
+    return out
 
 
 def smoke_matrix(seed: int = 0) -> List[Scenario]:

@@ -21,12 +21,20 @@ choosing which (scenario x candidate) plane to hand it next:
                     at a fraction of its evaluations
   - :mod:`history`  JSON warm-start store of per-testbed winners that
                     seeds subsequent searches
+  - :mod:`contention` the fleet question: greedy per-tenant Algorithm-1
+                    tuning vs the coordinate-descent static oracle under
+                    shared-link contention (``scenarios.tenant_matrix``)
 
 ``eval/runner.py --tune {oracle,sha,hill}`` is the CLI; TESTING.md
 documents the regret semantics and the candidate-axis chunking.
 """
 from __future__ import annotations
 
+from .contention import (
+    ContentionReport,
+    contention_report,
+    greedy_static_oracle,
+)
 from .history import HistoryStore, history_key
 from .oracle import (
     ContextTable,
@@ -48,6 +56,7 @@ from .space import (
 )
 
 __all__ = [
+    "ContentionReport",
     "ContextTable",
     "HistoryStore",
     "ParamSpace",
@@ -56,7 +65,9 @@ __all__ = [
     "TuneEntry",
     "TuneResult",
     "algorithm1_params",
+    "contention_report",
     "context_key",
+    "greedy_static_oracle",
     "hill_climb",
     "history_key",
     "oracle_search",

@@ -86,18 +86,56 @@ def test_donation_resolution(monkeypatch):
     assert jax_backend.donation_enabled(True) is False  # env beats kwarg
 
 
-def test_donation_disabled_under_persistent_cache(monkeypatch):
-    """Donated executables don't survive the persistent compilation
-    cache's serialize/deserialize round trip (jax 0.4.x CPU): while a
-    cache dir is configured, donation must resolve off — except under
-    the explicit env override, which exists to bisect exactly that."""
+def test_donation_survives_persistent_cache(monkeypatch):
+    """The PR 7 guard blanket-disabled donation whenever a persistent
+    compilation cache dir was configured (donated executables don't
+    survive its serialize/deserialize round trip on jax 0.4.x CPU).
+    Narrowed: freshly-compiled donated programs are correct — they now
+    compile inside the cache-suppression window and never enter the
+    cache — so ``donation_enabled`` must resolve exactly as it does
+    without a cache dir; only a cache-READ executable (a failed donated
+    warm) falls back undonated, per-signature, inside ``_device_call``.
+    The env override still beats everything both ways."""
     monkeypatch.delenv("REPRO_FABRIC_DONATE", raising=False)
     monkeypatch.delenv("REPRO_FABRIC_EXECUTOR", raising=False)
     monkeypatch.setattr(jax_backend, "_persistent_cache_active", lambda: True)
-    assert jax_backend.donation_enabled() is False
-    assert jax_backend.donation_enabled(True) is False  # guard beats kwarg
+    assert jax_backend.donation_enabled() is True  # async default, cache on
+    assert jax_backend.donation_enabled(True) is True
+    monkeypatch.setenv("REPRO_FABRIC_EXECUTOR", "serial")
+    assert jax_backend.donation_enabled() is False  # serial still undonated
+    monkeypatch.setenv("REPRO_FABRIC_DONATE", "0")
+    monkeypatch.delenv("REPRO_FABRIC_EXECUTOR", raising=False)
+    assert jax_backend.donation_enabled() is False  # kill switch wins
     monkeypatch.setenv("REPRO_FABRIC_DONATE", "1")
-    assert jax_backend.donation_enabled() is True  # explicit force wins
+    monkeypatch.setenv("REPRO_FABRIC_EXECUTOR", "serial")
+    assert jax_backend.donation_enabled() is True  # force wins
+
+
+def test_suppress_persistent_cache_restores_config(monkeypatch):
+    """The donated-compile suppression window must clear the configured
+    cache dir for its duration (nested re-entry included) and restore
+    it exactly afterwards — including on the error path."""
+    import jax
+
+    before = jax.config.jax_compilation_cache_dir
+    jax.config.update("jax_compilation_cache_dir", "/tmp/fabric-test-cache")
+    try:
+        with jax_backend._suppress_persistent_cache():
+            assert jax.config.jax_compilation_cache_dir is None
+            with jax_backend._suppress_persistent_cache():  # refcounted
+                assert jax.config.jax_compilation_cache_dir is None
+            assert jax.config.jax_compilation_cache_dir is None
+        assert (
+            jax.config.jax_compilation_cache_dir == "/tmp/fabric-test-cache"
+        )
+        with pytest.raises(RuntimeError):
+            with jax_backend._suppress_persistent_cache():
+                raise RuntimeError("boom")
+        assert (
+            jax.config.jax_compilation_cache_dir == "/tmp/fabric-test-cache"
+        )
+    finally:
+        jax.config.update("jax_compilation_cache_dir", before)
 
 
 def test_serial_env_escape_hatch(monkeypatch):
@@ -194,6 +232,31 @@ def test_donation_on_off_identical_results():
     names = [sc.name for sc in m]
     on = JaxFabricSimulation(sims(), names=names, donate=True).run()
     off = JaxFabricSimulation(sims(), names=names, donate=False).run()
+    for a, b in zip(on, off):
+        assert a.total_time == b.total_time
+        assert a.total_bytes == b.total_bytes
+        assert a.n_events == b.n_events
+
+
+def test_donated_run_correct_with_cache_dir_configured(tmp_path):
+    """The narrowed guard's end-to-end claim: with a persistent
+    compilation cache dir CONFIGURED, a donated run still produces
+    results identical to the undonated one (its programs compile inside
+    the suppression window and never round-trip the cache), and the
+    cache dir is intact afterwards."""
+    import jax
+
+    m = _mixed_batch(4)
+    sims = lambda: [build_simulation(sc) for sc in m]  # noqa: E731
+    names = [sc.name for sc in m]
+    before = jax.config.jax_compilation_cache_dir
+    jax.config.update("jax_compilation_cache_dir", str(tmp_path))
+    try:
+        on = JaxFabricSimulation(sims(), names=names, donate=True).run()
+        off = JaxFabricSimulation(sims(), names=names, donate=False).run()
+    finally:
+        assert jax.config.jax_compilation_cache_dir == str(tmp_path)
+        jax.config.update("jax_compilation_cache_dir", before)
     for a, b in zip(on, off):
         assert a.total_time == b.total_time
         assert a.total_bytes == b.total_bytes
